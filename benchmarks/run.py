@@ -1,0 +1,259 @@
+"""Benchmark harness: one function per paper table/figure + kernel timings
++ the roofline table.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig567
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import time
+
+import numpy as np
+
+from .scenarios import row, run_scenario
+
+SEP = "-" * 78
+
+
+# --------------------------------------------------------------------- #
+# Fig. 5/6/7: batching strategies (streaming / static / dynamic / NOB)   #
+# --------------------------------------------------------------------- #
+def bench_batching_fig567() -> None:
+    print(f"{SEP}\n# Fig 5/6/7 — batching strategies, TL-BFS, 1000 cameras")
+    cases = [
+        ("SB-1_es4", dict(batching="static", static_batch=1, tl_peak_speed=4.0)),
+        ("SB-20_es4", dict(batching="static", static_batch=20, tl_peak_speed=4.0)),
+        ("DB-25_es4", dict(batching="dynamic", m_max=25, tl_peak_speed=4.0)),
+        ("NOB-25_es4", dict(batching="nob", m_max=25, tl_peak_speed=4.0)),
+        ("SB-1_es6", dict(batching="static", static_batch=1, tl_peak_speed=6.0)),
+        ("SB-20_es6", dict(batching="static", static_batch=20, tl_peak_speed=6.0)),
+        ("DB-25_es6", dict(batching="dynamic", m_max=25, tl_peak_speed=6.0)),
+    ]
+    for name, kw in cases:
+        t0 = time.time()
+        res = run_scenario(tl="bfs", **kw)
+        print(row(name, res, time.time() - t0))
+
+
+# --------------------------------------------------------------------- #
+# Fig. 10: tracking-logic knob (Base / BFS / WBFS)                       #
+# --------------------------------------------------------------------- #
+def bench_tracking_fig10() -> None:
+    print(f"{SEP}\n# Fig 10 — tracking logic: active-set scalability")
+    cases = [
+        ("Base_SB-20_100c", dict(tl="base", num_cameras=100, batching="static", static_batch=20)),
+        ("Base_SB-20_200c", dict(tl="base", num_cameras=200, batching="static", static_batch=20)),
+        ("BFS_SB-1_1000c", dict(tl="bfs", batching="static", static_batch=1)),
+        ("WBFS_SB-1_1000c", dict(tl="wbfs", batching="static", static_batch=1)),
+        ("BFS_DB-25_1000c", dict(tl="bfs", batching="dynamic", m_max=25)),
+        ("WBFS_DB-25_1000c", dict(tl="wbfs", batching="dynamic", m_max=25)),
+        ("Prob_DB-25_1000c", dict(tl="prob", batching="dynamic", m_max=25)),
+    ]
+    for name, kw in cases:
+        t0 = time.time()
+        res = run_scenario(tl_peak_speed=4.0, **kw)
+        print(row(name, res, time.time() - t0))
+
+
+# --------------------------------------------------------------------- #
+# Fig. 11: dropping under overload (es = 7 m/s)                          #
+# --------------------------------------------------------------------- #
+def bench_dropping_fig11() -> None:
+    print(f"{SEP}\n# Fig 11 — drops under overload (es=7, constrained 5 VA + 5 CR)")
+    overload = dict(
+        tl="bfs", tl_peak_speed=7.0, batching="dynamic", m_max=25, num_va=5, num_cr=5
+    )
+    for name, kw in [
+        ("es7_nodrop", dict(drops_enabled=False)),
+        ("es7_drops", dict(drops_enabled=True, avoid_drop_positives=True)),
+    ]:
+        t0 = time.time()
+        res = run_scenario(**overload, **kw)
+        print(row(name, res, time.time() - t0))
+
+
+# --------------------------------------------------------------------- #
+# Fig. 9: bandwidth drop 1 Gbps -> 30 Mbps at t = 300 s                  #
+# --------------------------------------------------------------------- #
+def bench_network_fig9() -> None:
+    print(f"{SEP}\n# Fig 9 — adapting to a 1Gbps->30Mbps bandwidth drop at t=300s")
+    schedule = lambda t: 1.0 if t < 300.0 else 0.03
+    for name, kw in [
+        ("DB-25_bwdrop", dict(batching="dynamic", m_max=25)),
+        ("NOB-25_bwdrop", dict(batching="nob", m_max=25)),
+    ]:
+        t0 = time.time()
+        res = run_scenario(tl="bfs", tl_peak_speed=4.0, bandwidth_schedule=schedule, **kw)
+        print(row(name, res, time.time() - t0))
+
+
+# --------------------------------------------------------------------- #
+# Fig. 12: App 2 (63% costlier CR DNN)                                   #
+# --------------------------------------------------------------------- #
+def bench_app2_fig12() -> None:
+    print(f"{SEP}\n# Fig 12 — App 2 (CR ~63% slower per frame)")
+    cr2 = (0.067 * 1.63, 0.053 * 1.63)
+    cases = [
+        ("app2_SB-20_es4", dict(batching="static", static_batch=20, tl_peak_speed=4.0)),
+        ("app2_DB-25_es4", dict(batching="dynamic", m_max=25, tl_peak_speed=4.0)),
+        ("app2_DB-25_es6", dict(batching="dynamic", m_max=25, tl_peak_speed=6.0)),
+        (
+            "app2_DB-25_es6_drops",
+            dict(batching="dynamic", m_max=25, tl_peak_speed=6.0,
+                 drops_enabled=True, avoid_drop_positives=True),
+        ),
+        ("app2_WBFS_SB-20_es4", dict(tl="wbfs", batching="static", static_batch=20,
+                                     tl_peak_speed=4.0)),
+    ]
+    for name, kw in cases:
+        t0 = time.time()
+        res = run_scenario(tl=kw.pop("tl", "bfs"), cr_cost=cr2, **kw)
+        print(row(name, res, time.time() - t0))
+
+
+# --------------------------------------------------------------------- #
+# Kernel micro-benchmarks (CPU: oracle path; TPU would hit Pallas)       #
+# --------------------------------------------------------------------- #
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.reid_match.ops import reid_match
+    from repro.kernels.ssd_scan.ops import ssd_scan
+
+    print(f"{SEP}\n# Kernel micro-benchmarks (CPU reference path)")
+    key = jax.random.PRNGKey(0)
+
+    def timeit(name, fn, *args, reps=5, derived=""):
+        fn(*args)  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+        us = (time.perf_counter() - t0) / reps * 1e6
+        print(f"{name},{us:.1f},{derived}")
+
+    B, S, H, Hkv, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, Hkv, D), jnp.float32)
+    timeit("flash_attention_1k", flash_attention, q, k, v,
+           derived=f"flops={2*2*B*S*S*H*D:.2e}")
+
+    qd = jax.random.normal(key, (8, H, D))
+    # head-major cache layout (B, Hkv, T, D)
+    kc = jax.random.normal(key, (8, Hkv, 4096, D))
+    vc = jax.random.normal(key, (8, Hkv, 4096, D))
+    ln = jnp.full((8,), 4096, jnp.int32)
+    timeit("decode_attention_4k", decode_attention, qd, kc, vc, ln,
+           derived=f"kv_bytes={8*4096*Hkv*D*2*4:.2e}")
+
+    x = jax.random.normal(key, (1, 1024, 8, 64)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 1024, 8)))
+    A = -jnp.exp(jax.random.normal(key, (8,)) * 0.3)
+    Bm = jax.random.normal(key, (1, 1024, 1, 64)) * 0.3
+    Cm = jax.random.normal(key, (1, 1024, 1, 64)) * 0.3
+    timeit("ssd_scan_1k", lambda *a: ssd_scan(*a)[0], x, dt, A, Bm, Cm,
+           derived="chunked state-space scan")
+
+    g = jax.random.normal(key, (4096, 128))
+    qq = jax.random.normal(key, (4, 128))
+    timeit("reid_match_4k", lambda *a: reid_match(*a)[0], g, qq,
+           derived="gallery=4096x128")
+
+
+# --------------------------------------------------------------------- #
+# Roofline table from the dry-run records (§Roofline source of truth)    #
+# --------------------------------------------------------------------- #
+def bench_roofline(out_dir: str = "experiments/dryrun") -> None:
+    print(f"{SEP}\n# Roofline table (from {out_dir}/*.json; see EXPERIMENTS.md)")
+    recs = []
+    for path in sorted(glob.glob(f"{out_dir}/*.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    if not recs:
+        print("roofline,0,missing (run: python -m repro.launch.dryrun --mesh both)")
+        return
+    print(
+        "arch,shape,mesh,compute_ms,memory_ms,collective_ms,dominant,"
+        "useful_ratio,peak_dev_GiB,compile_s"
+    )
+    for r in recs:
+        t = r["roofline"]
+        print(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{t['compute_s']*1e3:.3f},{t['memory_s']*1e3:.3f},"
+            f"{t['collective_s']*1e3:.3f},{t['dominant']},"
+            f"{t['useful_ratio']:.3f},{r['peak_device_bytes']/2**30:.2f},"
+            f"{r['compile_s']}"
+        )
+
+
+# --------------------------------------------------------------------- #
+# Anveshak-scheduled LM serving stage                                    #
+# --------------------------------------------------------------------- #
+def bench_serving() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving import ServedStage, StageRequest, calibrate_xi, embed_frames, init_reid_tower
+
+    print(f"{SEP}\n# Anveshak-scheduled serving stage (budgeted dynamic batching)")
+    tower = init_reid_tower(jax.random.PRNGKey(0), d_in=128, d_embed=64)
+    step = lambda x: embed_frames(tower, jnp.asarray(x))
+    xi = calibrate_xi(step, (128,), buckets=(1, 4, 16, 64))
+    for rate_hz in (50, 200, 1000):
+        stage = ServedStage("CR", step, xi, gamma=0.5, m_max=64, buckets=(1, 4, 16, 64))
+        n, done, dropped = 200, 0, 0
+        t0 = time.perf_counter()
+        for i in range(n):
+            target = t0 + i / rate_hz
+            while time.perf_counter() < target:
+                pass
+            res = stage.submit(StageRequest(np.zeros(128, np.float32), source_time=target))
+            for r in res or []:
+                done += 0 if r.dropped else 1
+                dropped += 1 if r.dropped else 0
+        for r in stage.flush() or []:
+            done += 0 if r.dropped else 1
+            dropped += 1 if r.dropped else 0
+        wall = time.perf_counter() - t0
+        sizes = stage.stats["executed"] / max(stage.stats["batches"], 1)
+        print(
+            f"serving_rate{rate_hz},{wall/n*1e6:.1f},"
+            f"done={done};dropped={dropped};mean_batch={sizes:.1f};"
+            f"throughput_hz={done/wall:.0f}"
+        )
+
+
+BENCHES = {
+    "fig567": bench_batching_fig567,
+    "fig10": bench_tracking_fig10,
+    "fig11": bench_dropping_fig11,
+    "fig9": bench_network_fig9,
+    "fig12": bench_app2_fig12,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+    "serving": bench_serving,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    args = ap.parse_args()
+    t0 = time.time()
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn()
+    print(f"{SEP}\nTotal benchmark wall time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

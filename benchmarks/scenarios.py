@@ -1,0 +1,27 @@
+"""Shared scenario runners for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+from repro.sim import ScenarioConfig, ScenarioResult, TrackingScenario
+
+__all__ = ["run_scenario", "row"]
+
+
+def run_scenario(**kw) -> ScenarioResult:
+    base = dict(num_cameras=1000, duration_s=600.0, seed=0)
+    base.update(kw)
+    return TrackingScenario(ScenarioConfig(**base)).run()
+
+
+def row(name: str, res: ScenarioResult, wall_s: float) -> str:
+    s = res.summary()
+    return (
+        f"{name},{wall_s*1e6/max(s['source_events'],1):.1f},"
+        f"median_lat_s={s['median_latency_s']};p99_s={s['p99_latency_s']};"
+        f"delayed={s['delayed']};delayed_frac={s['delayed_frac']};"
+        f"dropped={s['dropped']};dropped_frac={s['dropped_frac']};"
+        f"peak_active={s['peak_active']};events={s['source_events']}"
+    )

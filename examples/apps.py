@@ -1,0 +1,112 @@
+"""The four tracking applications of paper Table 1, composed in the DSL.
+
+    PYTHONPATH=src python examples/apps.py
+
+Demonstrates the programming model's conciseness (paper §2.3): each app is a
+handful of lines — only the module logics change, the dataflow is fixed.
+App 4's small/large re-id pair uses the actual JAX re-id towers.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import ModuleSpec, TrackingApp, fc_frame_rate, fc_is_active, make_cr, make_va
+from repro.core.roadnet import make_road_network
+from repro.core.tracking import TLBFS, TLProbabilistic, TLWBFS
+from repro.serving import embed_frames, init_reid_tower
+from repro.kernels.reid_match.ops import reid_match
+
+
+def build_apps():
+    road = make_road_network(seed=0)
+    cameras = {i: i for i in range(1000)}
+
+    # ---- analytics logics (stand-ins / real JAX towers) ----------------- #
+    hog = lambda frames, q: [[(0, 0, 64, 128)] for _ in frames]           # [20]
+    yolo_cars = lambda frames, q: [[(0, 0, 96, 64)] for _ in frames]      # [47]
+    person_reid = lambda crops, q: [bool(getattr(c, "has_entity", 0)) for c in crops]  # [2]
+    person_reid_v2 = lambda crops, q: [bool(getattr(c, "has_entity", 0)) for c in crops]  # [8]
+    car_reid = lambda crops, q: [bool(getattr(c, "has_entity", 0)) for c in crops]     # [53]
+
+    small_tower = init_reid_tower(jax.random.PRNGKey(0), d_in=128, d_hidden=128, d_embed=32)
+    large_tower = init_reid_tower(jax.random.PRNGKey(1), d_in=128, d_hidden=512, d_embed=64, depth=4)
+
+    def reid_small(frames, query):  # App 4 VA: cheap tower filters candidates
+        embs = embed_frames(small_tower, jnp.asarray([f for f in frames]))
+        _, _, hits = reid_match(embs, jnp.asarray(query), threshold=0.3)
+        return [[(0, 0, 64, 128)] if bool(h) else [] for h in hits]
+
+    def reid_large(crops, query):  # App 4 CR: accurate tower confirms
+        embs = embed_frames(large_tower, jnp.asarray([c for c in crops]))
+        _, _, hits = reid_match(embs, jnp.asarray(query), threshold=0.7)
+        return [bool(h) for h in hits]
+
+    def qf_rnn(detections, state):  # App 2 QF: fuse hits into the query [42]
+        return state.get("entity_query")
+
+    apps = [
+        TrackingApp(  # App 1: missing person, HoG + OpenReid + WBFS
+            name="app1",
+            fc=fc_is_active,
+            va=make_va(hog),
+            cr=make_cr(person_reid),
+            tl=TLWBFS(road, cameras, entity_speed=4.0),
+        ),
+        TrackingApp(  # App 2: better CR DNN + query fusion + plain BFS
+            name="app2",
+            fc=fc_is_active,
+            va=make_va(hog),
+            cr=make_cr(person_reid_v2),
+            tl=TLBFS(road, cameras, entity_speed=4.0, fixed_edge_length_m=84.5),
+            qf=qf_rnn,
+        ),
+        TrackingApp(  # App 3: stolen vehicle — frame-rate FC, YOLO, car re-id,
+            name="app3",  # speed-aware WBFS
+            fc=fc_frame_rate,
+            va=make_va(yolo_cars),
+            cr=make_cr(car_reid),
+            tl=TLWBFS(road, cameras, entity_speed=14.0),  # ~50 km/h car
+        ),
+        TrackingApp(  # App 4: small/large re-id pair + probabilistic TL
+            name="app4",
+            fc=fc_is_active,
+            va=make_va(reid_small),
+            cr=make_cr(reid_large),
+            tl=TLProbabilistic(road, cameras, entity_speed=4.0, coverage=0.9),
+        ),
+    ]
+    for app in apps:
+        app.specs = {
+            "VA": ModuleSpec(instances=10, resource_tier="fog", batching="dynamic"),
+            "CR": ModuleSpec(instances=10, resource_tier="cloud", batching="dynamic"),
+        }
+    return apps
+
+
+def main() -> None:
+    apps = build_apps()
+    print(f"Composed {len(apps)} tracking applications (paper Table 1):\n")
+    for app in apps:
+        tl_name = type(app.tl).__name__
+        print(
+            f"  {app.name}: FC={app.fc.__name__} TL={tl_name} "
+            f"QF={'yes' if app.qf else '—'} gamma={app.gamma}s "
+            f"(VA x{app.spec('VA').instances} on {app.spec('VA').resource_tier}, "
+            f"CR x{app.spec('CR').instances} on {app.spec('CR').resource_tier})"
+        )
+    # Exercise App 4's real JAX towers once.
+    import numpy as np
+
+    frames = np.random.default_rng(0).normal(size=(6, 128)).astype(np.float32)
+    query = np.random.default_rng(1).normal(size=(1, 32)).astype(np.float32)
+    boxes = apps[3].va(0, list(frames), {"entity_query": query})
+    print(f"\nApp 4 small-tower VA scored {len(boxes)} frames "
+          f"({sum(1 for _, b in boxes if b)} candidates) — JAX end to end.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: compose App 1 (paper Table 1) and run a tracking scenario.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Composes the domain-specific dataflow — FC (isActive) -> VA (detector) ->
+CR (re-id) -> TL (WBFS spotlight) — and runs the 1000-camera simulation with
+Anveshak's dynamic batching.  The tuning-triangle claim to check: with the
+batching knob on 'dynamic', zero events miss the gamma deadline.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.dataflow import ModuleSpec, TrackingApp, fc_is_active, make_cr, make_va
+from repro.core.roadnet import make_road_network
+from repro.core.tracking import TLWBFS
+from repro.sim import ScenarioConfig, TrackingScenario
+
+
+def hog_detector(frames, query):
+    """Stand-in for OpenCV HoG: every frame yields person candidates."""
+    return [[(0, 0, 64, 128)] for _ in frames]
+
+
+def openreid_matcher(crops, query):
+    """Stand-in for the OpenReid DNN verdicts."""
+    return [bool(getattr(c, "has_entity", False)) for c in crops]
+
+
+def main() -> None:
+    # --- compose App 1 (pure DSL view; Table 1 row 1) ------------------- #
+    road = make_road_network(seed=0)
+    cameras = {i: i for i in range(1000)}
+    app = TrackingApp(
+        name="app1-missing-person",
+        fc=fc_is_active,
+        va=make_va(hog_detector),
+        cr=make_cr(openreid_matcher),
+        tl=TLWBFS(road, cameras, entity_speed=4.0),
+        specs={
+            "VA": ModuleSpec(instances=10, resource_tier="fog", batching="dynamic", m_max=25),
+            "CR": ModuleSpec(instances=10, resource_tier="cloud", batching="dynamic", m_max=25),
+        },
+        gamma=15.0,
+    )
+    print(f"Composed {app.name}: gamma={app.gamma}s, "
+          f"VA x{app.spec('VA').instances}, CR x{app.spec('CR').instances}")
+
+    # --- run it on the discrete-event platform --------------------------- #
+    cfg = ScenarioConfig(
+        num_cameras=1000, duration_s=300.0, tl="wbfs", tl_peak_speed=4.0,
+        batching="dynamic", m_max=25, gamma=app.gamma,
+    )
+    res = TrackingScenario(cfg).run()
+    s = res.summary()
+    print("\nScenario summary:")
+    for k, v in s.items():
+        print(f"  {k:22s} {v}")
+    assert s["delayed"] == 0, "dynamic batching should meet every deadline"
+    print("\nOK: all events within gamma; spotlight peaked at "
+          f"{s['peak_active']} of 1000 cameras.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from .base import (
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    list_configs,
+    pad_vocab,
+    register_config,
+)
+
+__all__ = [
+    "INPUT_SHAPES", "InputShape", "ModelConfig", "MoEConfig", "SSMConfig",
+    "get_config", "list_configs", "pad_vocab", "register_config",
+]

@@ -1,0 +1,248 @@
+"""Configuration system: model/mesh/run configs + registry.
+
+Every assigned architecture gets a ``ModelConfig`` in ``repro.configs.<id>``
+citing its source.  Configs are plain frozen dataclasses: hashable, printable,
+and safe to close over in jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+__all__ = [
+    "MoEConfig",
+    "SSMConfig",
+    "ModelConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "register_config",
+    "get_config",
+    "list_configs",
+    "pad_vocab",
+]
+
+
+def pad_vocab(vocab_size: int, multiple: int = 256) -> int:
+    """Megatron-style vocab padding so embedding/logit matrices shard evenly
+    over the 16-wide model axis (DESIGN.md §4)."""
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block parameters."""
+
+    num_experts: int = 0
+    top_k: int = 1
+    num_shared_experts: int = 0
+    d_ff_expert: int = 0  # per-expert FFN hidden size
+    d_ff_shared: int = 0  # total shared-expert hidden size
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    router_z_coef: float = 0.0001
+    normalize_top_k: bool = True  # renormalize selected probabilities
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block parameters (arXiv:2405.21060)."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    a_init_range: Tuple[float, float] = (1.0, 16.0)
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture.  ``arch_type`` selects the block wiring:
+
+    dense | moe | ssm | hybrid | encdec | vlm
+    """
+
+    name: str
+    arch_type: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // n_heads
+    # Attention options
+    qk_norm: bool = False          # qwen3
+    qkv_bias: bool = False         # qwen2
+    sliding_window: int = 0        # 0 => full attention
+    global_attn_layers: Tuple[int, ...] = ()  # layers that ignore the window
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = ()  # qwen2-vl M-RoPE (t, h, w)
+    # Norm / misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"              # silu (SwiGLU) | gelu (whisper MLP)
+    # MoE / SSM / hybrid
+    moe: MoEConfig = MoEConfig()
+    ssm: SSMConfig = SSMConfig()
+    first_k_dense_layers: int = 0  # deepseek: leading dense layers before MoE
+    meta_tokens: int = 0           # hymba: learnable prefix tokens
+    # MLA (deepseek)
+    kv_lora_rank: int = 0          # 0 => standard GQA
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # Encoder-decoder (whisper)
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500        # whisper: 30 s of audio at 50 fps
+    learned_pos_emb: bool = False
+    # Modality frontend stub (audio/vlm): inputs are embeddings, not tokens.
+    frontend_stub: bool = False
+    # Training-substrate notes (minicpm: WSD)
+    lr_schedule: str = "cosine"
+    # Provenance
+    citation: str = ""
+
+    # ------------------------------------------------------------------ #
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), for MODEL_FLOPS."""
+        d, v = self.d_model, self.padded_vocab
+        hd = self.head_dim_
+        n_q, n_kv = self.n_heads, self.n_kv_heads
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        per_layer_attn = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+        if self.kv_lora_rank:  # MLA
+            qd = self.qk_nope_head_dim + self.qk_rope_head_dim
+            per_layer_attn = (
+                d * n_q * qd  # q proj
+                + d * (self.kv_lora_rank + self.qk_rope_head_dim)  # kv down
+                + self.kv_lora_rank * n_q * (self.qk_nope_head_dim + self.v_head_dim)
+                + n_q * self.v_head_dim * d  # o proj
+            )
+        per_layer_mlp = 3 * d * self.d_ff
+        ssm_per_layer = 0
+        if self.arch_type in ("ssm", "hybrid"):
+            di = self.ssm.d_inner(d)
+            nh = self.ssm.n_heads(d)
+            conv_dim = di + 2 * self.ssm.n_groups * self.ssm.d_state
+            ssm_per_layer = (
+                d * (2 * di + 2 * self.ssm.n_groups * self.ssm.d_state + nh)
+                + conv_dim * self.ssm.d_conv
+                + di * d
+                + 2 * nh  # A_log, D
+            )
+        n_moe_layers = 0
+        if self.moe.enabled:
+            n_moe_layers = self.n_layers - self.first_k_dense_layers
+            moe_per_layer = (
+                self.moe.num_experts * 3 * d * self.moe.d_ff_expert
+                + 3 * d * self.moe.d_ff_shared
+                + d * self.moe.num_experts  # router
+            )
+        total_layers = 0
+        for layer in range(self.n_layers):
+            if self.arch_type == "ssm":
+                total_layers += ssm_per_layer + 2 * d  # norms
+                continue
+            attn = per_layer_attn
+            mlp = per_layer_mlp
+            if self.moe.enabled and layer >= self.first_k_dense_layers:
+                mlp = moe_per_layer
+            if self.arch_type == "hybrid":
+                attn += ssm_per_layer
+            total_layers += attn + mlp + 2 * d
+        total += total_layers
+        if self.arch_type == "encdec":
+            # encoder blocks: self-attn + MLP (gelu: 2 matrices)
+            enc_layer = per_layer_attn + 2 * d * self.d_ff + 2 * d
+            # decoder adds cross-attention
+            total += self.n_encoder_layers * enc_layer + self.n_layers * per_layer_attn
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed top-k + shared)."""
+        if not self.moe.enabled:
+            return self.param_count()
+        d = self.d_model
+        n_moe_layers = self.n_layers - self.first_k_dense_layers
+        inactive_experts = self.moe.num_experts - self.moe.top_k
+        return int(
+            self.param_count()
+            - n_moe_layers * inactive_experts * 3 * d * self.moe.d_ff_expert
+        )
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """A benchmark input shape (assigned to this paper)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_config(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_config(name: str, **overrides: Any) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def list_configs() -> Tuple[str, ...]:
+    import repro.configs  # noqa: F401
+
+    return tuple(sorted(_REGISTRY))

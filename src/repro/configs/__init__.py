@@ -1,0 +1,31 @@
+"""Assigned architecture configs (one module per arch, each citing its source).
+
+Importing this package populates the registry used by
+``repro.config.base.get_config`` / ``list_configs``.
+"""
+
+from . import (  # noqa: F401
+    deepseek_v2_lite,
+    hymba_1p5b,
+    llama3p2_1b,
+    mamba2_1p3b,
+    minicpm_2b,
+    qwen2_1p5b,
+    qwen2_moe_a2p7b,
+    qwen2_vl_72b,
+    qwen3_8b,
+    whisper_large_v3,
+)
+
+ASSIGNED_ARCHS = (
+    "mamba2-1.3b",
+    "whisper-large-v3",
+    "hymba-1.5b",
+    "qwen3-8b",
+    "minicpm-2b",
+    "deepseek-v2-lite-16b",
+    "qwen2-1.5b",
+    "llama3.2-1b",
+    "qwen2-moe-a2.7b",
+    "qwen2-vl-72b",
+)

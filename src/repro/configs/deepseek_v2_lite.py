@@ -1,0 +1,31 @@
+"""deepseek-v2-lite-16b — MLA + MoE (2 shared + 64 routed top-6) [arXiv:2405.04434]."""
+
+from repro.config.base import ModelConfig, MoEConfig, register_config
+
+
+@register_config("deepseek-v2-lite-16b")
+def deepseek_v2_lite() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b",
+        arch_type="moe",
+        n_layers=27,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=10944,             # dense-FFN layers (layer 0)
+        vocab_size=102400,
+        kv_lora_rank=512,       # MLA latent cache
+        qk_rope_head_dim=64,
+        qk_nope_head_dim=128,
+        v_head_dim=128,
+        first_k_dense_layers=1,
+        moe=MoEConfig(
+            num_experts=64,
+            top_k=6,
+            num_shared_experts=2,
+            d_ff_expert=1408,
+            d_ff_shared=2816,   # 2 shared experts x 1408
+            router_aux_coef=0.003,
+        ),
+        citation="DeepSeek-V2(-Lite) [arXiv:2405.04434]: MLA kv_lora=512, 2 shared + 64 routed top-6.",
+    )

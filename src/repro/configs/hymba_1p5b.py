@@ -1,0 +1,27 @@
+"""hymba-1.5b — hybrid parallel attention+Mamba heads [arXiv:2411.13676]."""
+
+from repro.config.base import ModelConfig, SSMConfig, register_config
+
+
+@register_config("hymba-1.5b")
+def hymba_1p5b() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b",
+        arch_type="hybrid",
+        n_layers=32,
+        d_model=1600,
+        n_heads=25,
+        n_kv_heads=5,           # GQA kv=5
+        d_ff=5504,
+        vocab_size=32001,
+        head_dim=64,
+        sliding_window=1024,    # SWA everywhere except 3 global layers
+        global_attn_layers=(0, 15, 31),
+        meta_tokens=128,        # learnable prefix (paper §2.2)
+        # chunk 64: the SSD intra-chunk quadratic is O(L*chunk) bytes when
+        # lowered to jnp (the dry-run path); 64 keeps it HBM-light while the
+        # Pallas kernel holds the (Q,Q) tile in VMEM regardless (§Perf H1).
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64, n_groups=1, chunk_size=64),
+        tie_embeddings=True,
+        citation="Hymba [arXiv:2411.13676]: parallel attn+SSM heads, meta tokens, SWA+3 global.",
+    )

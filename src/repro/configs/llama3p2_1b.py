@@ -1,0 +1,21 @@
+"""llama3.2-1b — small llama3 dense GQA [hf:meta-llama/Llama-3.2-1B]."""
+
+from repro.config.base import ModelConfig, register_config
+
+
+@register_config("llama3.2-1b")
+def llama3p2_1b() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b",
+        arch_type="dense",
+        n_layers=16,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab_size=128256,
+        head_dim=64,
+        rope_theta=500_000.0,
+        tie_embeddings=True,
+        citation="Llama-3.2-1B model card [hf:meta-llama/Llama-3.2-1B].",
+    )

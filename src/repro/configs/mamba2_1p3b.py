@@ -1,0 +1,21 @@
+"""mamba2-1.3b — SSD state-space model, attention-free [arXiv:2405.21060]."""
+
+from repro.config.base import ModelConfig, SSMConfig, register_config
+
+
+@register_config("mamba2-1.3b")
+def mamba2_1p3b() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b",
+        arch_type="ssm",
+        n_layers=48,
+        d_model=2048,
+        n_heads=0,
+        n_kv_heads=0,
+        d_ff=0,  # no FFN: pure Mamba blocks
+        vocab_size=50280,
+        head_dim=64,
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1, chunk_size=256),
+        tie_embeddings=True,
+        citation="SSD / Mamba2 [arXiv:2405.21060]; GPT-NeoX vocab 50280.",
+    )

@@ -1,0 +1,21 @@
+"""minicpm-2b — llama-like dense, trained with WSD schedule [arXiv:2404.06395]."""
+
+from repro.config.base import ModelConfig, register_config
+
+
+@register_config("minicpm-2b")
+def minicpm_2b() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b",
+        arch_type="dense",
+        n_layers=40,
+        d_model=2304,
+        n_heads=36,
+        n_kv_heads=36,          # MHA (kv=36)
+        d_ff=5760,
+        vocab_size=122753,
+        head_dim=64,
+        tie_embeddings=True,
+        lr_schedule="wsd",      # Warmup-Stable-Decay (paper §4)
+        citation="MiniCPM [arXiv:2404.06395]: WSD schedule; llama-like blocks.",
+    )

@@ -1,0 +1,22 @@
+"""qwen2-1.5b — dense GQA kv=2, QKV bias [arXiv:2407.10671]."""
+
+from repro.config.base import ModelConfig, register_config
+
+
+@register_config("qwen2-1.5b")
+def qwen2_1p5b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b",
+        arch_type="dense",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151936,
+        head_dim=128,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        citation="Qwen2 [arXiv:2407.10671]: GQA 12/2 with QKV bias.",
+    )

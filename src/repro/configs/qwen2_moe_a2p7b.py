@@ -1,0 +1,28 @@
+"""qwen2-moe-a2.7b — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+
+from repro.config.base import ModelConfig, MoEConfig, register_config
+
+
+@register_config("qwen2-moe-a2.7b")
+def qwen2_moe_a2p7b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b",
+        arch_type="moe",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=5632,              # shared-expert/dense hidden
+        vocab_size=151936,
+        head_dim=128,
+        qkv_bias=True,
+        moe=MoEConfig(
+            num_experts=60,
+            top_k=4,
+            num_shared_experts=4,
+            d_ff_expert=1408,
+            d_ff_shared=5632,   # 4 shared experts x 1408
+            normalize_top_k=False,
+        ),
+        citation="Qwen1.5-MoE-A2.7B model card [hf:Qwen/Qwen1.5-MoE-A2.7B]: 60 routed top-4 + 4 shared.",
+    )

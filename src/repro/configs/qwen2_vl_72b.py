@@ -1,0 +1,23 @@
+"""qwen2-vl-72b — VLM backbone with M-RoPE; ViT frontend stubbed [arXiv:2409.12191]."""
+
+from repro.config.base import ModelConfig, register_config
+
+
+@register_config("qwen2-vl-72b")
+def qwen2_vl_72b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        arch_type="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=29568,
+        vocab_size=152064,
+        head_dim=128,
+        qkv_bias=True,
+        mrope_sections=(16, 24, 24),  # (t, h, w) frequency bands
+        rope_theta=1_000_000.0,
+        frontend_stub=True,     # input_specs() provides patch embeddings
+        citation="Qwen2-VL [arXiv:2409.12191]: M-RoPE, dynamic resolution (ViT stubbed).",
+    )

@@ -1,0 +1,21 @@
+"""qwen3-8b — dense GQA with qk_norm [hf:Qwen/Qwen3-8B]."""
+
+from repro.config.base import ModelConfig, register_config
+
+
+@register_config("qwen3-8b")
+def qwen3_8b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b",
+        arch_type="dense",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=12288,
+        vocab_size=151936,
+        head_dim=128,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        citation="Qwen3-8B model card [hf:Qwen/Qwen3-8B]: GQA 32/8, qk_norm.",
+    )

@@ -1,0 +1,27 @@
+"""whisper-large-v3 — audio enc-dec; conv/mel frontend stubbed [arXiv:2212.04356]."""
+
+from repro.config.base import ModelConfig, register_config
+
+
+@register_config("whisper-large-v3")
+def whisper_large_v3() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        arch_type="encdec",
+        n_layers=32,            # decoder layers
+        n_encoder_layers=32,
+        d_model=1280,
+        n_heads=20,
+        n_kv_heads=20,
+        d_ff=5120,
+        vocab_size=51866,
+        head_dim=64,
+        qkv_bias=True,          # whisper: bias on q/v (k-bias dropped upstream; kept uniform here)
+        learned_pos_emb=True,
+        act="gelu",
+        norm_eps=1e-5,
+        tie_embeddings=True,
+        encoder_seq=1500,       # 30 s audio @ 50 frames/s after conv stride 2
+        frontend_stub=True,     # input_specs() provides conv-feature embeddings
+        citation="Whisper [arXiv:2212.04356]; large-v3 model card (vocab 51866).",
+    )

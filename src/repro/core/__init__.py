@@ -1,0 +1,49 @@
+"""Anveshak core: the paper's contribution (dataflow model + runtime tuning).
+
+Layout mirrors the paper:
+
+* §2  dataflow model  -> :mod:`repro.core.dataflow`, :mod:`repro.core.events`
+* §2.2.4 tracking     -> :mod:`repro.core.tracking`, :mod:`repro.core.roadnet`
+* §4.3 dropping       -> :mod:`repro.core.dropping`
+* §4.4 batching       -> :mod:`repro.core.batching`
+* §4.5 budgets        -> :mod:`repro.core.budget`
+* §4.6 bounds/skew    -> :mod:`repro.core.bounds`, :mod:`repro.core.clock`
+* §3  runtime         -> :mod:`repro.core.pipeline`
+"""
+
+from .batching import DynamicBatcher, NOBBatcher, PendingEvent, StaticBatcher, build_nob_table
+from .bounds import (
+    batching_latency_overhead,
+    drop_rate,
+    max_sustainable_rate,
+    stable_batch_size,
+)
+from .budget import BudgetState, TaskBudget
+from .clock import Clock
+from .dataflow import ModuleSpec, TrackingApp, fc_frame_rate, fc_is_active, make_cr, make_va
+from .dropping import drop_before_exec, drop_before_queuing, drop_before_transmit
+from .events import (
+    AcceptSignal,
+    Event,
+    EventHeader,
+    EventRecord,
+    ProbeSignal,
+    RejectSignal,
+    new_event_id,
+)
+from .pipeline import PipelineStats, Scheduler, SinkTask, Task
+from .roadnet import RoadNetwork, make_road_network
+from .tracking import Detection, TLBFS, TLBase, TLProbabilistic, TLWBFS, TrackingLogic
+
+__all__ = [
+    "AcceptSignal", "BudgetState", "Clock", "Detection", "DynamicBatcher",
+    "Event", "EventHeader", "EventRecord", "ModuleSpec", "NOBBatcher",
+    "PendingEvent", "PipelineStats", "ProbeSignal", "RejectSignal",
+    "RoadNetwork", "Scheduler", "SinkTask", "StaticBatcher", "TLBFS",
+    "TLBase", "TLProbabilistic", "TLWBFS", "Task", "TaskBudget",
+    "TrackingApp", "TrackingLogic", "batching_latency_overhead",
+    "build_nob_table", "drop_before_exec", "drop_before_queuing",
+    "drop_before_transmit", "drop_rate", "fc_frame_rate", "fc_is_active",
+    "make_cr", "make_road_network", "make_va", "max_sustainable_rate",
+    "new_event_id", "stable_batch_size",
+]

@@ -1,0 +1,29 @@
+"""Device clock model with skew (paper §4.6.2).
+
+Devices on a MAN/WAN have unsynchronized clocks.  Anveshak's decisions are
+designed so that, as long as the *source* and *sink* clocks agree
+(kappa_1 == kappa_n), a constant per-device skew ``sigma_i = kappa_i - kappa_1``
+cancels out of every drop and batch comparison.  We model that skew explicitly
+so the property tests can verify the cancellation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["Clock"]
+
+
+@dataclass
+class Clock:
+    """A device clock: reads true (simulation) time plus a fixed skew.
+
+    ``now(t_true)`` is what this device's clock shows when the global
+    simulation time is ``t_true``.  Durations measured on a single device are
+    skew-free; only absolute timestamps carry the skew.
+    """
+
+    skew: float = 0.0
+
+    def now(self, t_true: float) -> float:
+        return t_true + self.skew

@@ -1,0 +1,159 @@
+"""The domain-specific dataflow model (paper §2.2, Fig. 2).
+
+The dataflow shape is *fixed* (like MapReduce): the user supplies only the
+functional logic of six module types and the platform wires, parallelizes and
+tunes them:
+
+    FC --> VA --> CR --> { TL, QF, UV }
+     ^______________________|   |
+         (activation ctrl)      |--> VA/CR query update
+
+* **FC** (Filter Controls): per-camera entry point; forwards a frame iff its
+  local state says so (``isActive``, frame-rate).  Updated by TL control
+  events.
+* **VA** (Video Analytics): per-camera batched analytics (detection), may
+  invoke external models; state updatable by QF.
+* **CR** (Contention Resolution): cross-camera re-identification on grouped
+  detections; heavier model, runs less often; state updatable by QF.
+* **TL** (Tracking Logic): the paper's novel module — interprets detections,
+  expands/contracts the spotlight, (de)activates FCs.
+* **QF** (Query Fusion): fuses high-confidence detections into the entity
+  query and pushes the new query to VA/CR.
+* **UV** (User Visualization): sink; receives annotated detections.
+
+This module defines the *interfaces* and the :class:`TrackingApp` composition
+used by both the discrete-event simulator (``repro.sim``) and the JAX serving
+engine (``repro.serving.scheduler``), which plugs jit-compiled model steps in
+as VA/CR logic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+from .events import Event
+from .tracking import Detection, TrackingLogic
+
+__all__ = [
+    "FCLogic",
+    "VALogic",
+    "CRLogic",
+    "QFLogic",
+    "ModuleSpec",
+    "TrackingApp",
+]
+
+
+class FCLogic(Protocol):
+    """``fc(frame, state) -> bool`` — forward the frame?  (paper Alg. 1)."""
+
+    def __call__(self, frame: Any, state: Dict[str, Any]) -> bool: ...
+
+
+class VALogic(Protocol):
+    """``va(camera_id, frames, state) -> [(camera_id, value)]``.
+
+    Receives a batch of frames grouped by camera; emits key-value pairs
+    (e.g. bounding boxes with scores).  May read ``state['entity_query']``.
+    """
+
+    def __call__(
+        self, camera_id: Any, frames: Sequence[Any], state: Dict[str, Any]
+    ) -> List[Tuple[Any, Any]]: ...
+
+
+class CRLogic(Protocol):
+    """``cr(camera_id, values, state) -> [(camera_id, detection)]``.
+
+    Cross-camera contention resolution / re-id on VA outputs.
+    """
+
+    def __call__(
+        self, camera_id: Any, values: Sequence[Any], state: Dict[str, Any]
+    ) -> List[Tuple[Any, Any]]: ...
+
+
+class QFLogic(Protocol):
+    """``qf(detections, state) -> new_query | None`` — query fusion (§2.2.5)."""
+
+    def __call__(
+        self, detections: Sequence[Detection], state: Dict[str, Any]
+    ) -> Optional[Any]: ...
+
+
+@dataclass
+class ModuleSpec:
+    """Deployment spec for one module type (paper §3: Master/Scheduler)."""
+
+    instances: int = 1
+    resource_tier: str = "fog"  # edge | fog | cloud
+    m_max: int = 25
+    batching: str = "dynamic"  # dynamic | static | nob
+    static_batch: int = 1
+    # xi(b): expected execution duration (seconds) for a batch of b events.
+    xi: Callable[[int], float] = lambda b: 0.0
+
+
+@dataclass
+class TrackingApp:
+    """A composed tracking application (paper Table 1).
+
+    ``fc``/``va``/``cr``/``qf`` are the user logics; ``tl`` is a
+    :class:`TrackingLogic` strategy instance.  ``specs`` gives per-module
+    deployment/tuning parameters.  The app is executed either by the
+    discrete-event simulator (`repro.sim.scenario.run_app`) or, for the VA/CR
+    compute, by the JAX serving engine.
+    """
+
+    name: str
+    fc: FCLogic
+    va: VALogic
+    cr: CRLogic
+    tl: TrackingLogic
+    qf: Optional[QFLogic] = None
+    specs: Dict[str, ModuleSpec] = field(default_factory=dict)
+    entity_query: Any = None
+    gamma: float = 15.0  # max tolerable latency (paper §5.1)
+
+    def spec(self, module: str) -> ModuleSpec:
+        return self.specs.get(module, ModuleSpec())
+
+
+# --------------------------------------------------------------------- #
+# Reference user logics (paper Alg. 1 / Table 1), analytics-agnostic:   #
+# the actual detectors are injected (HoG / DNN / JAX model).            #
+# --------------------------------------------------------------------- #
+def fc_is_active(frame: Any, state: Dict[str, Any]) -> bool:
+    """App 1/2/4 FC: forward iff the camera is active."""
+    return bool(state.get("isActive", True))
+
+
+def fc_frame_rate(frame: Any, state: Dict[str, Any]) -> bool:
+    """App 3 FC: subsample to the commanded frame-rate."""
+    rate = max(int(state.get("frame_rate", 1)), 1)
+    count = state.get("_count", 0)
+    state["_count"] = count + 1
+    return count % rate == 0
+
+
+def make_va(detector: Callable[[Sequence[Any], Any], List[Any]]) -> VALogic:
+    """Wrap a batched detector ``detector(frames, query) -> per-frame boxes``
+    as VA logic (HoG in App 1/2, YOLO in App 3, small re-id in App 4)."""
+
+    def va(camera_id, frames, state):
+        boxes = detector(frames, state.get("entity_query"))
+        return [(camera_id, (frame, bb)) for frame, bb in zip(frames, boxes)]
+
+    return va
+
+
+def make_cr(reid: Callable[[Sequence[Any], Any], List[bool]]) -> CRLogic:
+    """Wrap a batched re-id matcher ``reid(crops, query) -> [bool]`` as CR."""
+
+    def cr(camera_id, values, state):
+        crops = [v for v in values]
+        verdicts = reid(crops, state.get("entity_query"))
+        return [(camera_id, bool(v)) for v in verdicts]
+
+    return cr

@@ -1,0 +1,141 @@
+"""Event model for the Anveshak dataflow (paper §2.2, §4.2).
+
+Every event entering a pipeline at the source task ``tau_1`` gets a unique ID
+``k``; with 1:1 task selectivity, the pair ``(k, i)`` uniquely identifies the
+causal event ``e_k^i`` input to task ``tau_i``.  Events carry a small header
+with the *source arrival time* ``a_k^1`` (measured on the source clock) plus
+the running sums of upstream execution time (``xi_bar``) and queuing delay
+(``q_bar``) used by the budget-update protocol (paper §4.5).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+__all__ = [
+    "EventHeader",
+    "Event",
+    "EventRecord",
+    "RejectSignal",
+    "AcceptSignal",
+    "ProbeSignal",
+    "new_event_id",
+]
+
+_id_counter = itertools.count()
+
+
+def new_event_id() -> int:
+    """Globally unique, monotonically increasing source-event ID ``k``."""
+    return next(_id_counter)
+
+
+@dataclass
+class EventHeader:
+    """Header propagated with every causal downstream event (paper §4.2, §4.5).
+
+    Attributes
+    ----------
+    event_id:
+        The source-event ID ``k``.
+    source_arrival:
+        ``a_k^1`` — the arrival time of the source event at the source task,
+        measured on the *source device clock* kappa_1.  Propagated verbatim.
+    xi_bar:
+        ``sum_{j=1..i} xi_j(m_k^j)`` — total execution duration spent at the
+        preceding tasks (durations; clock-skew free).
+    q_bar:
+        ``sum_{j=1..i} q_k^j`` — total queuing delay at the preceding tasks.
+    avoid_drop:
+        The user logic may flag an event (e.g. a positive detection) so the
+        platform will not drop it even past its budget (paper §4.3.3).
+    is_probe:
+        Probe signals are forwarded downstream without drops to recover from
+        budget collapse (paper §4.5.2).
+    """
+
+    event_id: int
+    source_arrival: float
+    xi_bar: float = 0.0
+    q_bar: float = 0.0
+    avoid_drop: bool = False
+    is_probe: bool = False
+    # The task-path this event has traversed (its *pipeline*, §4.2): signals
+    # are delivered to the tasks on this path, not the whole dataflow DAG.
+    path: tuple = ()
+
+    def advanced(self, xi: float, q: float, task: str = "") -> "EventHeader":
+        """Header for the causal downstream event after this task."""
+        return replace(
+            self,
+            xi_bar=self.xi_bar + xi,
+            q_bar=self.q_bar + q,
+            path=self.path + (task,) if task else self.path,
+        )
+
+
+@dataclass
+class Event:
+    """A key-value event on a stream (paper §2.2.1).
+
+    ``key`` is typically the camera ID; ``value`` the frame / detections.
+    """
+
+    header: EventHeader
+    key: Any
+    value: Any = None
+
+    @property
+    def event_id(self) -> int:
+        return self.header.event_id
+
+
+@dataclass
+class EventRecord:
+    """The 3-tuple ``<d_k^i, q_k^i, m_k^i>`` each task stores per processed
+    event (paper §4.5), used when an accept/reject signal arrives later.
+
+    ``departure`` is ``d_k^i = u_k^i + pi_k^i``; ``queuing`` is ``q_k^i``;
+    ``batch_size`` is ``m_k^i``; ``xi`` is ``xi_i(m_k^i)`` kept for the
+    accept-side proportionality term.
+    """
+
+    departure: float
+    queuing: float
+    batch_size: int
+    xi: float
+
+
+@dataclass
+class RejectSignal:
+    """Sent upstream when task ``tau_j`` drops event ``k`` (paper §4.5.1)."""
+
+    event_id: int
+    epsilon: float  # excess over the dropping task's budget
+    q_bar: float  # sum of queuing delays upstream of the dropping task
+    from_task: str = ""
+
+
+@dataclass
+class AcceptSignal:
+    """Sent upstream when the sink sees the slowest event of a batch arrive
+    more than ``epsilon_max`` early (paper §4.5.2)."""
+
+    event_id: int
+    epsilon: float  # early-arrival margin under gamma
+    xi_bar: float  # sum of upstream execution times (excluding sink)
+    from_task: str = ""
+
+
+@dataclass
+class ProbeSignal:
+    """Every k-th dropped event is forwarded as a probe that cannot be
+    dropped; if it reaches the sink within gamma an accept is generated so
+    collapsed budgets can recover (paper §4.5.2)."""
+
+    event_id: int
+    source_arrival: float
+    xi_bar: float = 0.0
+    q_bar: float = 0.0

@@ -1,0 +1,420 @@
+"""Task pipeline runtime (paper §3, §4.2 Fig. 4).
+
+A pipeline is a DAG of :class:`Task` instances.  Each task owns a FIFO input
+queue, a batcher (dynamic/static/NOB), a :class:`TaskBudget`, a cost model
+``xi(b)``, a user logic callable and a partitioner that routes each output
+event to a downstream task instance.  Execution is single-server per task
+(one batch at a time), matching one Executor process per module instance in
+Anveshak.
+
+The runtime is driven by a discrete-event scheduler (``sim``) that provides
+``now`` (true time) and ``schedule(delay, fn)``; each task reads time through
+its own skewed :class:`Clock`, so the clock-skew resilience of the drop /
+batch / budget logic (§4.6.2) is exercised for real.
+
+Event life-cycle inside a task (Fig. 4):
+
+    arrival --DP1--> queue --batcher--> batch --DP2--> execute --DP3-->
+      partition --> transmit(network delay) --> downstream.on_arrival
+
+Reject signals flow to *all upstream* tasks of the pipeline path; accept
+signals originate at the sink for the slowest event of a batch arriving more
+than ``epsilon_max`` early.  Probe events (every ``probe_every``-th drop) are
+forwarded un-droppably to let collapsed budgets recover (§4.5.2).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .batching import DynamicBatcher, PendingEvent, _BatcherBase
+from .budget import TaskBudget
+from .clock import Clock
+from .dropping import drop_before_exec, drop_before_queuing, drop_before_transmit
+from .events import (
+    AcceptSignal,
+    Event,
+    EventHeader,
+    EventRecord,
+    RejectSignal,
+)
+
+__all__ = ["Task", "SinkTask", "PipelineStats", "Scheduler"]
+
+UserLogic = Callable[[List[Event], Dict[str, Any]], List[Event]]
+Partitioner = Callable[[Event], str]
+
+
+class Scheduler:
+    """Protocol the tasks expect from the discrete-event engine."""
+
+    @property
+    def time(self) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def transit_delay(self, src: str, dst: str, size_bytes: float) -> float:
+        return 0.0
+
+    # Task registry (name -> Task) for path-based signal delivery (§4.3.4).
+    tasks: Dict[str, "Task"] = {}
+
+
+@dataclass
+class PipelineStats:
+    """Counters a task accumulates (drives the §5 analyses)."""
+
+    arrived: int = 0
+    dropped_dp1: int = 0
+    dropped_dp2: int = 0
+    dropped_dp3: int = 0
+    executed: int = 0
+    batches: int = 0
+    batch_sizes: List[int] = field(default_factory=list)
+
+    @property
+    def dropped(self) -> int:
+        return self.dropped_dp1 + self.dropped_dp2 + self.dropped_dp3
+
+
+class Task:
+    """One module instance (Executor) in the dataflow."""
+
+    def __init__(
+        self,
+        name: str,
+        sim: Scheduler,
+        xi: Callable[[int], float],
+        batcher: _BatcherBase,
+        *,
+        logic: Optional[UserLogic] = None,
+        clock: Optional[Clock] = None,
+        budget: Optional[TaskBudget] = None,
+        partitioner: Optional[Partitioner] = None,
+        drops_enabled: bool = True,
+        probe_every: int = 16,
+        node: str = "",
+    ) -> None:
+        self.name = name
+        self.sim = sim
+        self.xi = xi
+        self.batcher = batcher
+        self.logic = logic or (lambda events, state: list(events))
+        self.clock = clock or Clock()
+        self.budget = budget or TaskBudget(name, xi, m_max=getattr(batcher, "m_max", 25))
+        self.partitioner = partitioner or (lambda ev: next(iter(self.downstream)))
+        self.drops_enabled = drops_enabled
+        self.probe_every = int(probe_every)
+        self.node = node or name
+        self.state: Dict[str, Any] = {}
+        self.downstream: Dict[str, "Task"] = {}
+        self.upstream: List["Task"] = []
+        self.stats = PipelineStats()
+        self._drop_count = 0
+        self._busy = False
+        self._run_queue: List[List[PendingEvent]] = []
+        self._event_downstream: Dict[int, str] = {}
+        self._timer_pending = False
+        self._upstream_cache = None
+        # Event sizes for network modelling: bytes per event leaving this task.
+        self.output_event_bytes: float = 2900.0  # paper: 2.9 kB median JPG
+        if not hasattr(sim, "tasks") or sim.tasks is Scheduler.tasks:
+            sim.tasks = {}
+        sim.tasks[name] = self
+
+    # ------------------------------------------------------------------ #
+    # Wiring                                                             #
+    # ------------------------------------------------------------------ #
+    def connect(self, downstream: "Task") -> "Task":
+        self.downstream[downstream.name] = downstream
+        downstream.upstream.append(self)
+        downstream._upstream_cache = None
+        return downstream
+
+    def upstream_chain(self) -> List["Task"]:
+        """All transitive upstream tasks (fallback when an event carries no
+        path); cached, set-deduplicated."""
+        if getattr(self, "_upstream_cache", None) is not None:
+            return self._upstream_cache
+        seen: Dict[int, Task] = {}
+        frontier = list(self.upstream)
+        while frontier:
+            t = frontier.pop()
+            if id(t) not in seen:
+                seen[id(t)] = t
+                frontier.extend(t.upstream)
+        self._upstream_cache = list(seen.values())
+        return self._upstream_cache
+
+    def _path_tasks(self, path) -> List["Task"]:
+        """Tasks along an event's traversed path (its pipeline, §4.2)."""
+        if not path:
+            return self.upstream_chain()
+        reg = getattr(self.sim, "tasks", {})
+        return [reg[n] for n in path if n in reg and reg[n] is not self]
+
+    # ------------------------------------------------------------------ #
+    # Arrival + drop point 1                                             #
+    # ------------------------------------------------------------------ #
+    def on_arrival(self, ev: Event) -> None:
+        now_local = self.clock.now(self.sim.time)
+        self.stats.arrived += 1
+        beta = self.budget.min_budget() if self.drops_enabled else math.inf
+        if self.drops_enabled and drop_before_queuing(
+            ev.header.source_arrival,
+            now_local,
+            self.xi(1),
+            beta,
+            avoid_drop=ev.header.avoid_drop or ev.header.is_probe,
+        ):
+            self.stats.dropped_dp1 += 1
+            u = now_local - ev.header.source_arrival
+            self._on_drop(ev, epsilon=u + self.xi(1) - beta)
+            return
+        deadline = ev.header.source_arrival + beta
+        pe = PendingEvent(event=ev, arrival=now_local, deadline=deadline)
+        # Bootstrap (§4.5): until a budget is assigned the deadline is
+        # unbounded; the paper fixes the batch size at b=1 in that regime so
+        # dynamic batches cannot grow without an auto-submit deadline.
+        if math.isinf(beta) and isinstance(self.batcher, DynamicBatcher):
+            open_batch = self.batcher.take() if self.batcher.current_size else []
+            if open_batch:
+                self._enqueue_batch(open_batch)
+            self._enqueue_batch([pe])
+            return
+        submitted = self.batcher.offer(pe, now_local)
+        if submitted:
+            self._enqueue_batch(submitted)
+        self._arm_timer()
+
+    def _arm_timer(self) -> None:
+        """Auto-submit the open batch at ``Delta_p - xi(m)`` (§4.4)."""
+        due = self.batcher.next_due_time()
+        if math.isinf(due) or self._timer_pending:
+            return
+        self._timer_pending = True
+        delay = max(due - self.clock.now(self.sim.time), 0.0)
+
+        def fire() -> None:
+            self._timer_pending = False
+            batch = self.batcher.flush_if_due(self.clock.now(self.sim.time))
+            if batch:
+                self._enqueue_batch(batch)
+            self._arm_timer()
+
+        self.sim.schedule(delay, fire)
+
+    # ------------------------------------------------------------------ #
+    # Execution: drop point 2, run, drop point 3                         #
+    # ------------------------------------------------------------------ #
+    def _enqueue_batch(self, batch: List[PendingEvent]) -> None:
+        self._run_queue.append(batch)
+        self._maybe_run()
+
+    def _maybe_run(self) -> None:
+        if self._busy or not self._run_queue:
+            return
+        batch = self._run_queue.pop(0)
+        self._busy = True
+        now_local = self.clock.now(self.sim.time)
+        b = len(batch)
+        xi_b = self.xi(b)
+        beta = self.budget.min_budget() if self.drops_enabled else math.inf
+        tuples = [
+            (pe.event.header.source_arrival, pe.arrival, now_local - pe.arrival, pe.event)
+            for pe in batch
+        ]
+        if self.drops_enabled:
+            retained_evs, dropped_evs = drop_before_exec(tuples, xi_b, beta)
+        else:
+            retained_evs, dropped_evs = [t[3] for t in tuples], []
+        pe_by_id = {pe.event.event_id: pe for pe in batch}
+        for ev in dropped_evs:
+            self.stats.dropped_dp2 += 1
+            pe = pe_by_id[ev.event_id]
+            u = pe.arrival - ev.header.source_arrival
+            q = now_local - pe.arrival
+            self._on_drop(ev, epsilon=u + q + xi_b - beta)
+        if not retained_evs:
+            self._busy = False
+            self._maybe_run()
+            return
+        m = len(retained_evs)
+        exec_dur = self.xi(m)
+        retained_pes = [pe_by_id[ev.event_id] for ev in retained_evs]
+
+        def finish() -> None:
+            self._finish_batch(retained_pes, exec_start=now_local, exec_dur=exec_dur)
+            self._busy = False
+            self._maybe_run()
+
+        self.sim.schedule(exec_dur, finish)
+
+    def _finish_batch(
+        self, batch: List[PendingEvent], exec_start: float, exec_dur: float
+    ) -> None:
+        self.stats.batches += 1
+        self.stats.batch_sizes.append(len(batch))
+        m = len(batch)
+        probes = [pe.event for pe in batch if pe.event.header.is_probe]
+        work = [pe.event for pe in batch if not pe.event.header.is_probe]
+        outputs = self.logic(work, self.state) + probes
+        out_by_id: Dict[int, List[Event]] = {}
+        for out in outputs:
+            out_by_id.setdefault(out.event_id, []).append(out)
+        end_local = exec_start + exec_dur
+        # Track the slowest event of the batch for the sink's accept logic.
+        slowest_id, slowest_d = None, -math.inf
+        for pe in batch:
+            u = pe.arrival - pe.event.header.source_arrival
+            q = exec_start - pe.arrival
+            pi = q + exec_dur
+            d = u + pi
+            if d > slowest_d:
+                slowest_d, slowest_id = d, pe.event.event_id
+        for pe in batch:
+            ev = pe.event
+            u = pe.arrival - ev.header.source_arrival
+            q = exec_start - pe.arrival
+            pi = q + exec_dur
+            self.stats.executed += 1
+            self.budget.record(
+                ev.event_id,
+                EventRecord(departure=u + pi, queuing=q, batch_size=m, xi=exec_dur),
+            )
+            for out in out_by_id.get(ev.event_id, []):
+                out.header = ev.header.advanced(xi=exec_dur, q=q, task=self.name)
+                if out.event_id == slowest_id:
+                    setattr(out, "batch_slowest", True)
+                self._route(out, u=u, pi=pi)
+
+    def _route(self, ev: Event, u: float, pi: float) -> None:
+        if not self.downstream:
+            return
+        dst_name = self.partitioner(ev)
+        dst = self.downstream[dst_name]
+        self._event_downstream[ev.event_id] = dst_name
+        beta = self.budget.budget(dst_name) if self.drops_enabled else math.inf
+        # DP3 test is u + pi > beta (§4.3.3); express via drop_before_transmit
+        # with arrival reconstructed so that arrival - source_arrival == u.
+        if self.drops_enabled and drop_before_transmit(
+            0.0,
+            u,
+            pi,
+            beta,
+            avoid_drop=ev.header.avoid_drop or ev.header.is_probe,
+        ):
+            self.stats.dropped_dp3 += 1
+            self._on_drop(ev, epsilon=u + pi - beta, downstream=dst_name)
+            return
+        delay = self.sim.transit_delay(self.node, dst.node, self.output_event_bytes)
+        self.sim.schedule(delay, lambda e=ev, d=dst: d.on_arrival(e))
+
+    # ------------------------------------------------------------------ #
+    # Signals (§4.5)                                                     #
+    # ------------------------------------------------------------------ #
+    def _on_drop(self, ev: Event, epsilon: float, downstream: str = "") -> None:
+        self._drop_count += 1
+        sig = RejectSignal(
+            event_id=ev.event_id,
+            epsilon=max(epsilon, 0.0),
+            q_bar=ev.header.q_bar,
+            from_task=self.name,
+        )
+        for up in self._path_tasks(ev.header.path):
+            up.receive_reject(sig)
+        # Probe every k-th dropped event: re-inject it as un-droppable so it
+        # traverses the NORMAL path (including this task's own executor) —
+        # each task along the way then has an event record for the accept
+        # signal to act on, which is what lets a collapsed budget recover
+        # (§4.5.2).
+        if self.probe_every > 0 and self._drop_count % self.probe_every == 0:
+            probe = Event(
+                header=EventHeader(
+                    event_id=ev.header.event_id,
+                    source_arrival=ev.header.source_arrival,
+                    xi_bar=ev.header.xi_bar,
+                    q_bar=ev.header.q_bar,
+                    is_probe=True,
+                    path=ev.header.path,
+                ),
+                key=ev.key,
+                value=ev.value,
+            )
+            self.sim.schedule(0.0, lambda: self.on_arrival(probe))
+
+    def receive_reject(self, sig: RejectSignal) -> None:
+        downstream = self._event_downstream.get(sig.event_id, "")
+        self.budget.on_reject(sig, downstream=downstream)
+
+    def receive_accept(self, sig: AcceptSignal) -> None:
+        downstream = self._event_downstream.get(sig.event_id, "")
+        self.budget.on_accept(sig, downstream=downstream)
+
+
+class SinkTask(Task):
+    """The pipeline sink (UV): measures end-to-end latency, generates accept
+    signals, and feeds detections to the TL callback."""
+
+    def __init__(
+        self,
+        name: str,
+        sim: Scheduler,
+        gamma: float,
+        *,
+        epsilon_max: float = 1.0,
+        on_event: Optional[Callable[[Event, float], None]] = None,
+        clock: Optional[Clock] = None,
+        node: str = "",
+    ) -> None:
+        super().__init__(
+            name,
+            sim,
+            xi=lambda b: 0.0,
+            batcher=DynamicBatcher(lambda b: 0.0, m_max=1),
+            clock=clock,
+            drops_enabled=False,
+            node=node,
+        )
+        self.gamma = float(gamma)
+        self.epsilon_max = float(epsilon_max)
+        self.on_event = on_event
+        self.latencies: List[Tuple[float, float]] = []  # (t_now, latency)
+        self.delayed: int = 0
+        self.on_time: int = 0
+        self.budget.set_budget(self.gamma)
+
+    def on_arrival(self, ev: Event) -> None:  # overrides Task
+        now_local = self.clock.now(self.sim.time)
+        self.stats.arrived += 1
+        u = now_local - ev.header.source_arrival  # kappa_1 == kappa_n (§4.6.2)
+        if ev.header.is_probe:
+            if u <= self.gamma:
+                self._send_accept(ev, epsilon=self.gamma - u)
+            return
+        self.latencies.append((now_local, u))
+        if u <= self.gamma:
+            self.on_time += 1
+        else:
+            self.delayed += 1
+        # Accept only on the slowest event of an upstream batch (§4.5.2).
+        if getattr(ev, "batch_slowest", False):
+            epsilon = self.gamma - u
+            if epsilon > self.epsilon_max:
+                self._send_accept(ev, epsilon=epsilon)
+        if self.on_event is not None:
+            self.on_event(ev, now_local)
+
+    def _send_accept(self, ev: Event, epsilon: float) -> None:
+        sig = AcceptSignal(
+            event_id=ev.event_id,
+            epsilon=epsilon,
+            xi_bar=ev.header.xi_bar,
+            from_task=self.name,
+        )
+        for up in self._path_tasks(ev.header.path):
+            up.receive_accept(sig)

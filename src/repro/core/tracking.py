@@ -1,0 +1,198 @@
+"""Tracking Logic (TL) strategies (paper §2.2.4, Alg. 1, §5.2.2).
+
+TL receives per-frame detections from CR.  On a *negative* detection (entity
+lost) it **expands** the search space — the spotlight — and activates the
+cameras inside it; on a *positive* detection it **contracts** the spotlight
+to the detecting camera.  Strategies:
+
+* :class:`TLBase`  — all cameras always active (contemporary systems).
+* :class:`TLBFS`   — hop-ball spotlight assuming a fixed road length.
+* :class:`TLWBFS`  — Dijkstra-ball spotlight using true road lengths (Alg. 1).
+* :class:`TLProbabilistic` — App 4: a naive-Bayes-style likelihood over paths;
+  activates the smallest camera set covering ``coverage`` probability mass.
+
+All spotlight strategies are configured with the entity's expected peak speed
+``es`` (m/s): the spotlight radius grows as ``es * (now - last_seen_time)``
+while the entity is in a blind-spot (Rate of Expansion, §5.2.1).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .roadnet import RoadNetwork
+
+__all__ = [
+    "Detection",
+    "TrackingLogic",
+    "TLBase",
+    "TLBFS",
+    "TLWBFS",
+    "TLProbabilistic",
+]
+
+
+@dataclass
+class Detection:
+    """A CR verdict for one frame: which camera, was the entity present."""
+
+    camera_id: int
+    positive: bool
+    timestamp: float
+
+
+class TrackingLogic:
+    """Base class: maintains last-seen state and the active camera set."""
+
+    def __init__(
+        self,
+        network: RoadNetwork,
+        camera_vertices: Dict[int, int],
+        entity_speed: float = 4.0,
+        min_radius_m: float = 0.0,
+    ) -> None:
+        self.network = network
+        self.camera_vertices = dict(camera_vertices)  # camera_id -> vertex
+        self._vertex_cameras: Dict[int, List[int]] = {}
+        for cam, v in self.camera_vertices.items():
+            self._vertex_cameras.setdefault(v, []).append(cam)
+        self.entity_speed = float(entity_speed)
+        self.min_radius_m = float(min_radius_m)
+        self.last_seen_camera: Optional[int] = None
+        self.last_seen_time: Optional[float] = None
+        self.active: Set[int] = set(self.camera_vertices)  # all on at start
+
+    # ------------------------------------------------------------------ #
+    def cameras_in_vertices(self, vertices: Iterable[int]) -> Set[int]:
+        out: Set[int] = set()
+        for v in vertices:
+            out.update(self._vertex_cameras.get(v, ()))
+        return out
+
+    def spotlight(self, now: float) -> Set[int]:
+        """Camera set for the current blind-spot duration.  Subclasses
+        override; the default keeps everything active."""
+        return set(self.camera_vertices)
+
+    # ------------------------------------------------------------------ #
+    def update(self, detections: Sequence[Detection], now: float) -> Set[int]:
+        """Process a batch of CR detections; returns the new active set.
+
+        Positive detection => contract to the detecting camera (§2.2.4);
+        none => expand the spotlight from the last-seen location.
+        """
+        positives = [d for d in detections if d.positive]
+        if positives:
+            latest = max(positives, key=lambda d: d.timestamp)
+            self.last_seen_camera = latest.camera_id
+            self.last_seen_time = latest.timestamp
+            self.active = {latest.camera_id}
+        else:
+            self.active = self.spotlight(now)
+        return set(self.active)
+
+
+class TLBase(TrackingLogic):
+    """Keep every camera active (the paper's baseline; does not scale)."""
+
+    def spotlight(self, now: float) -> Set[int]:
+        return set(self.camera_vertices)
+
+    def update(self, detections: Sequence[Detection], now: float) -> Set[int]:
+        for d in detections:
+            if d.positive:
+                self.last_seen_camera = d.camera_id
+                self.last_seen_time = d.timestamp
+        self.active = set(self.camera_vertices)
+        return set(self.active)
+
+
+class _SpotlightTL(TrackingLogic):
+    def _radius_m(self, now: float) -> float:
+        if self.last_seen_time is None:
+            return math.inf  # never seen: search everywhere
+        elapsed = max(now - self.last_seen_time, 0.0)
+        return self.min_radius_m + self.entity_speed * elapsed
+
+    def _source_vertex(self) -> Optional[int]:
+        if self.last_seen_camera is None:
+            return None
+        return self.camera_vertices.get(self.last_seen_camera)
+
+
+class TLBFS(_SpotlightTL):
+    """Spotlight via unweighted BFS with an assumed fixed road length."""
+
+    def __init__(self, *args, fixed_edge_length_m: float = 84.5, **kwargs) -> None:
+        super().__init__(*args, **kwargs)
+        self.fixed_edge_length_m = float(fixed_edge_length_m)
+
+    def spotlight(self, now: float) -> Set[int]:
+        src = self._source_vertex()
+        radius = self._radius_m(now)
+        if src is None or math.isinf(radius):
+            return set(self.camera_vertices)
+        hops = int(math.ceil(radius / self.fixed_edge_length_m))
+        ball = self.network.hop_ball(src, hops)
+        return self.cameras_in_vertices(ball)
+
+
+class TLWBFS(_SpotlightTL):
+    """Spotlight via weighted BFS (Dijkstra) over true road lengths (Alg. 1).
+
+    Aware of exact segment lengths, its spotlight grows in finer steps and
+    stays smaller than TL-BFS for the same blind-spot duration (§5.2.2)."""
+
+    def spotlight(self, now: float) -> Set[int]:
+        src = self._source_vertex()
+        radius = self._radius_m(now)
+        if src is None or math.isinf(radius):
+            return set(self.camera_vertices)
+        ball = self.network.weighted_ball(src, radius)
+        return self.cameras_in_vertices(ball)
+
+
+class TLProbabilistic(_SpotlightTL):
+    """App 4: likelihood-weighted activation.
+
+    Assigns each reachable camera a likelihood that the entity's path reaches
+    it — a naive-Bayes combination of (a) road-distance decay from the last
+    seen location and (b) a learned/uniform prior over turns (vertex degree).
+    Activates the smallest set covering ``coverage`` of the probability mass,
+    so it can keep the active set tighter than pure reachability.
+    """
+
+    def __init__(self, *args, coverage: float = 0.9, **kwargs) -> None:
+        super().__init__(*args, **kwargs)
+        self.coverage = float(coverage)
+
+    def spotlight(self, now: float) -> Set[int]:
+        src = self._source_vertex()
+        radius = self._radius_m(now)
+        if src is None or math.isinf(radius):
+            return set(self.camera_vertices)
+        ball = self.network.weighted_ball(src, radius)
+        cams = self.cameras_in_vertices(ball)
+        if not cams:
+            return cams
+        # Likelihood: exponential decay with distance, normalized.
+        scores: List[Tuple[float, int]] = []
+        scale = max(radius, 1.0)
+        for cam in cams:
+            v = self.camera_vertices[cam]
+            d = ball.get(v, radius)
+            deg = max(len(self.network.adjacency[v]), 1)
+            # Random-walk heuristic: mass dilutes with distance and branching.
+            scores.append((math.exp(-2.0 * d / scale) / deg, cam))
+        total = sum(s for s, _ in scores)
+        scores.sort(reverse=True)
+        chosen: Set[int] = set()
+        acc = 0.0
+        for s, cam in scores:
+            chosen.add(cam)
+            acc += s
+            if acc >= self.coverage * total:
+                break
+        return chosen

@@ -1,0 +1,22 @@
+"""Distribution: partitioning rules + hand-scheduled context parallelism."""
+
+from .context_parallel import (
+    combine_partials,
+    context_parallel_decode_attention,
+    decode_attention_partial,
+)
+from .partitioning import (
+    MeshRules,
+    cache_specs,
+    constrain,
+    current_rules,
+    default_rules,
+    mesh_rules,
+    param_specs,
+)
+
+__all__ = [
+    "MeshRules", "cache_specs", "combine_partials", "constrain",
+    "context_parallel_decode_attention", "current_rules",
+    "decode_attention_partial", "default_rules", "mesh_rules", "param_specs",
+]

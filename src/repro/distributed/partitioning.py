@@ -1,0 +1,236 @@
+"""Logical-axis partitioning: activation constraints + parameter specs.
+
+Model code calls :func:`constrain` with *logical* axis names; a
+:class:`MeshRules` context (installed by the launcher / dry-run) maps them to
+mesh axes and applies ``with_sharding_constraint``.  Outside any context the
+call is a no-op, so unit tests and CPU smoke runs never touch device state.
+
+Parameter sharding is *path-based*: :func:`param_specs` walks the params
+pytree and assigns a ``PartitionSpec`` from the leaf's key-path and rank
+(DESIGN.md §5):
+
+* FFN / attention projections: tensor-parallel on the hidden/head dim over
+  ``model``, FSDP on the embed dim over ``data`` (when divisible).
+* Embedding / LM head: vocab (padded to /256) over ``model``.
+* Expert stacks (E, d, f): tensor-parallel *inside* experts (f over
+  ``model``) — 60 and 64 experts do not both divide the 16-wide axis.
+* Norms / biases / scalars: replicated.
+
+Divisibility is always checked; a dim that does not divide evenly over its
+mesh axes is left unsharded rather than failing at lowering time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshRules",
+    "mesh_rules",
+    "current_rules",
+    "constrain",
+    "logical_to_spec",
+    "param_specs",
+    "cache_specs",
+    "batch_spec",
+]
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+@dataclass
+class MeshRules:
+    """Mapping logical axis name -> mesh axis (or tuple, or None)."""
+
+    mesh: Mesh
+    rules: Dict[str, AxisName] = field(default_factory=dict)
+
+    def axis_size(self, axis: AxisName) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, str):
+            return self.mesh.shape[axis]
+        size = 1
+        for a in axis:
+            size *= self.mesh.shape[a]
+        return size
+
+    def resolve(self, logical: Sequence[AxisName], shape: Sequence[int]) -> P:
+        """Logical names -> PartitionSpec, dropping non-divisible axes."""
+        parts: List[AxisName] = []
+        for name, dim in zip(logical, shape):
+            axis = self.rules.get(name) if isinstance(name, str) else name
+            if axis is not None and dim % self.axis_size(axis) != 0:
+                axis = None
+            parts.append(axis)
+        return P(*parts)
+
+
+_local = threading.local()
+
+
+def current_rules() -> Optional[MeshRules]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def mesh_rules(rules: Optional[MeshRules]):
+    prev = getattr(_local, "rules", None)
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+def constrain(x: jax.Array, logical: Sequence[AxisName]) -> jax.Array:
+    """Sharding-constrain ``x`` by logical axis names (no-op w/o rules)."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = r.resolve(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def default_rules(mesh: Mesh) -> MeshRules:
+    axes = set(mesh.axis_names)
+    batch_axes: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axes)
+    return MeshRules(
+        mesh=mesh,
+        rules={
+            "batch": batch_axes if batch_axes else None,
+            "seq": None,
+            "model": "model" if "model" in axes else None,
+            "fsdp": "data" if "data" in axes else None,
+            "expert": None,
+            "vocab": "model" if "model" in axes else None,
+            "kv_seq": None,  # context-parallel decode overrides to "data"
+            "kv_heads": None,  # serving mesh view: "kv" (§Perf H3)
+            "kv_latent": None,  # MLA latent sharding (§Perf H2)
+            "q_seq": None,  # row-parallel attention/SSD blocks (§Perf H1)
+        },
+    )
+
+
+# --------------------------------------------------------------------- #
+# Parameter specs (path-based)                                           #
+# --------------------------------------------------------------------- #
+def _spec_for_leaf(path: str, ndim: int, rules: MeshRules) -> Sequence[AxisName]:
+    """Logical axes for one parameter leaf.  The leading scan/layer axis of
+    stacked group params is always unsharded."""
+
+    def lead(*names: AxisName) -> Sequence[AxisName]:
+        # Group-stacked leaves carry a leading layer axis.
+        extra = ndim - len(names)
+        return tuple([None] * extra + list(names))
+
+    if path.endswith("embedding") or path.endswith("meta_tokens"):
+        return lead("vocab", "fsdp") if ndim >= 2 else lead(None)
+    if path.endswith("lm_head"):
+        return lead("fsdp", "vocab")
+    if re.search(r"(wq|wk|wv)/kernel$", path):
+        return lead("fsdp", "model")
+    if re.search(r"wo/kernel$", path):
+        return lead("model", "fsdp")
+    if re.search(r"(w_gate|w_up)/kernel$", path):
+        return lead("fsdp", "model")
+    if re.search(r"w_down/kernel$", path):
+        return lead("model", "fsdp")
+    if re.search(r"experts/(w_gate|w_up|w_down)$", path):
+        # (E, d, f) (stacked: (L, E, d, f)).  Default: tensor-parallel inside
+        # experts (hidden dim over model — 60 experts don't divide the axis).
+        # With rules["expert"] = "model" (E divides): expert-parallel
+        # placement instead — each shard owns E/16 whole experts (§Perf H2).
+        if rules.rules.get("expert") is not None:
+            return lead("expert", None, None)
+        if path.endswith("w_down"):
+            return lead("model", "fsdp")
+        return lead("fsdp", "model")  # E unsharded via lead()
+    if re.search(r"router/kernel$", path):
+        return lead("fsdp", None)
+    if re.search(r"(w_dkv|w_uk|w_uv|wq)/kernel$", path):
+        return lead("fsdp", "model")
+    if re.search(r"in_proj/kernel$", path):
+        return lead("fsdp", "model")
+    if re.search(r"out_proj/kernel$", path):
+        return lead("model", "fsdp")
+    if re.search(r"conv_w$", path):
+        return lead("model", None)  # (cdim, K)
+    # norms, biases, scalars (dt_bias, A_log, D, conv_b, scale)
+    return tuple([None] * ndim)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params: Any, rules: MeshRules) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        logical = _spec_for_leaf(p, np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim, rules)
+        return rules.resolve(logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def cache_specs(caches: Any, rules: MeshRules, *, context_parallel: bool = False) -> Any:
+    """PartitionSpec pytree for KV/state caches.
+
+    Layout: leading layer axis unsharded, batch over ("pod","data") when it
+    divides, else (context parallel) the sequence axis over "data".
+    """
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        ndim = leaf.ndim
+        # Stacked caches: (L, B, T, ...) for kv; (L, B, ...) for states.
+        batch_axis_pos = 1
+        logical: List[AxisName] = [None] * ndim
+        batch = rules.rules.get("batch")
+        if batch is not None and shape[batch_axis_pos] % rules.axis_size(batch) == 0:
+            logical[batch_axis_pos] = "batch"
+        elif context_parallel and ndim == 4 and (p.endswith("c_kv") or p.endswith("k_rope")):
+            logical[2] = "kv_seq"
+        # Self KV caches are head-major (L, B, H, T, D): shard H over the
+        # kv axis (serving mesh view) or model (§Perf H3).  Whisper cross
+        # caches keep (L, B, T, H, D); mamba states (L, B, H, P, N) get
+        # their head dim sharded the same way.
+        key = p.split("/")[-1]
+        if ndim == 5 and key in ("k", "v") and "cross" not in p:
+            logical[2] = "kv_heads" if rules.rules.get("kv_heads") else "model"
+            if context_parallel:
+                logical[3] = "kv_seq"
+        elif ndim == 5 and key in ("k", "v"):  # cross cache (L,B,T,H,D)
+            logical[3] = "kv_heads" if rules.rules.get("kv_heads") else "model"
+        elif ndim == 5 and key == "ssm":
+            logical[2] = "kv_heads" if rules.rules.get("kv_heads") else "model"
+        # MLA latent cache (L, B, T, r) and rope-key cache (L, B, T, rope):
+        # shard the last dim (§Perf H2) so the cache lives sharded.
+        if ndim == 4 and (p.endswith("c_kv") or p.endswith("k_rope")):
+            logical[3] = "kv_latent"
+        return rules.resolve(logical, shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+def batch_spec(rules: MeshRules) -> P:
+    return rules.resolve(("batch", None), (0, 0))  # placeholder; callers build their own

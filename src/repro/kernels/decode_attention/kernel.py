@@ -1,0 +1,153 @@
+"""Pallas TPU decode attention: one query token vs a long head-major cache.
+
+Grid ``(B, nk)``: for each sequence, stream the (B, Hkv, T, D) cache in
+``block_k``-token tiles (sequential) while all query heads ride along in a
+single VMEM tile — decode is memory-bound on the cache read, and head-major
+storage means each tile is contiguous per head (zero transpose copies,
+§Perf H3):
+
+* q tile   (Hq, D)           VMEM (one token, all heads)
+* k/v tile (Hkv, block_k, D) VMEM
+* acc      (Hq, D) f32 scratch; m/l (Hq, 1) f32 scratch
+
+``lengths`` (B,) arrives via scalar prefetch and bounds the valid slots;
+tiles wholly past the length (or outside the sliding window) are skipped.
+Validated against ``ref.decode_attention_ref`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    len_ref,  # scalar prefetch: (B,) int32
+    q_ref,  # (1, Hq, D)
+    k_ref,  # (1, Hkv, block_k, D)
+    v_ref,  # (1, Hkv, block_k, D)
+    o_ref,  # (1, Hq, D)
+    m_scr,  # (Hq, 1) f32
+    l_scr,  # (Hq, 1) f32
+    acc_scr,  # (Hq, D) f32
+    *,
+    window: int,
+    scale: float,
+    block_k: int,
+    groups: int,
+    num_k_blocks: int,
+):
+    b = pl.program_id(0)
+    kj = pl.program_id(1)
+    length = len_ref[b]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    first_k = kj * block_k
+    low = jnp.maximum(length - window, 0) if window > 0 else 0
+    relevant = jnp.logical_and(first_k < length, first_k + block_k > low)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (Hq, D)
+        k = k_ref[0].astype(jnp.float32)  # (Hkv, block_k, D) head-major
+        v = v_ref[0].astype(jnp.float32)
+        Hq, D = q.shape
+        Hkv = k.shape[0]
+        pos = first_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        valid = pos < length
+        if window > 0:
+            valid = jnp.logical_and(valid, pos >= low)
+        # (Hq, block_k): per-head dot with the grouped KV head — head-major
+        # tiles feed the MXU directly, no swaps.
+        qh = q.reshape(Hkv, groups, D)
+        s = jax.lax.dot_general(
+            qh, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+        ) * scale  # (Hkv, groups, block_k)
+        s = s.reshape(Hq, block_k)
+        s = jnp.where(valid, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        ph = p.reshape(Hkv, groups, block_k)
+        o = jax.lax.dot_general(
+            ph, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+        )  # (Hkv, groups, D)
+        acc_scr[...] = acc_scr[...] * corr + o.reshape(Hq, D)
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,  # (B, Hq, D)
+    k_cache: jax.Array,  # (B, Hkv, T, D) head-major
+    v_cache: jax.Array,
+    length: jax.Array,  # (B,) int32
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    _, Hkv, T, _ = k_cache.shape
+    groups = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    block_k = min(block_k, T)
+    pad_k = (-T) % block_k
+    if pad_k:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Tp = k_cache.shape[2]
+    nk = Tp // block_k
+
+    kernel = functools.partial(
+        _kernel,
+        window=window,
+        scale=scale,
+        block_k=block_k,
+        groups=groups,
+        num_k_blocks=nk,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, j, *_: (b, 0, 0)),
+            pl.BlockSpec((1, Hkv, block_k, D), lambda b, j, *_: (b, 0, j, 0)),
+            pl.BlockSpec((1, Hkv, block_k, D), lambda b, j, *_: (b, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, j, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, 1), jnp.float32),
+            pltpu.VMEM((Hq, 1), jnp.float32),
+            pltpu.VMEM((Hq, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(length.astype(jnp.int32), q, k_cache, v_cache)
+    return out

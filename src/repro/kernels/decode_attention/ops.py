@@ -1,0 +1,43 @@
+"""jit-ready wrapper for single-token decode attention (see flash ops)."""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+
+from .ref import decode_attention_ref
+
+__all__ = ["decode_attention"]
+
+
+def _use_pallas() -> bool:
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "1":
+        return True
+    if force == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale"))
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    length: jax.Array,
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention: q (B, Hq, D) vs head-major cache (B, Hkv, T, D)."""
+    if _use_pallas():
+        from .kernel import decode_attention_pallas
+
+        return decode_attention_pallas(
+            q, k_cache, v_cache, length, window=window, scale=scale,
+            interpret=jax.default_backend() != "tpu",
+        )
+    return decode_attention_ref(q, k_cache, v_cache, length, window=window, scale=scale)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for single-token decode attention against a KV cache.
+
+The query is one new token per sequence; the cache holds ``T`` slots of which
+``length`` are valid.  Sliding-window decode restricts attention to the last
+``window`` valid positions.  Ground truth for the Pallas decode kernel.
+
+Decode is cache-bandwidth-bound, so this reference is written to read the
+cache EXACTLY ONCE at its stored dtype: GQA is expressed by grouping the
+query heads (``(B, Hkv, g, D)``) instead of ``jnp.repeat``-ing the cache
+(8x materialization for 64/8 GQA!), and matmuls accumulate in f32 via
+``preferred_element_type`` instead of casting the cache to f32 (2x bytes +
+an extra HBM round trip).  §Perf H3 measured this at ~8x HBM traffic and a
+160 GiB/step all-gather before the rewrite.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, Hq, D) — one token per sequence
+    k_cache: jax.Array,  # (B, Hkv, T, D) — head-major (§Perf H3)
+    v_cache: jax.Array,  # (B, Hkv, T, D)
+    length: jax.Array,  # (B,) int32 — number of valid cache slots
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    _, Hkv, T, _ = k_cache.shape
+    groups = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    # Grouped queries: (B, Hkv, g, D) — the cache is never expanded, and the
+    # head-major layout makes (B, Hkv) the dot's leading batch dims: the
+    # cache streams through with no transpose copies.
+    qg = q.reshape(B, Hkv, groups, D).astype(k_cache.dtype)
+    logits = jnp.einsum(
+        "bkgd,bktd->bkgt", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    logits = logits * scale
+
+    pos = jnp.arange(T)[None, :]  # (1, T)
+    valid = pos < length[:, None]
+    if window > 0:
+        valid = valid & (pos >= jnp.maximum(length[:, None] - window, 0))
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.any(valid, axis=-1)[:, None, None, None], probs, 0.0)
+    out = jnp.einsum(
+        "bkgt,bktd->bkgd",
+        probs.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, Hq, D).astype(q.dtype)

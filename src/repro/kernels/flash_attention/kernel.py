@@ -1,0 +1,174 @@
+"""Pallas TPU flash attention (prefill/train).
+
+Grid ``(B, Hq, nq, nk)`` — the kv dimension is innermost and sequential on
+TPU, so the online-softmax state lives in VMEM scratch across kv steps:
+
+* q tile   (block_q, D)    VMEM, revisited for every kv block
+* k/v tile (block_k, D)    VMEM, streamed from the GQA head ``h // groups``
+* acc      (block_q, D) f32 scratch;  m/l: (block_q, 1) f32 scratch
+
+Causality/window masking is applied per tile from absolute positions; fully
+masked-out kv tiles are skipped with ``pl.when`` (the MXU never sees them).
+Block sizes default to (512, 512) — q/k tiles of 512x128 bf16 = 128 KiB each
+plus the f32 accumulator keep the working set well under the ~16 MiB VMEM
+per core, and both MXU dims stay multiples of 128.
+
+Validated against ``ref.attention_ref`` in interpret mode (CPU) by
+``tests/test_kernels_flash.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, block_q, 1, D)
+    k_ref,  # (1, block_k, 1, D)
+    v_ref,  # (1, block_k, 1, D)
+    o_ref,  # (1, block_q, 1, D)
+    m_scr,  # (block_q, 1) f32
+    l_scr,  # (block_q, 1) f32
+    acc_scr,  # (block_q, D) f32
+    *,
+    causal: bool,
+    window: int,
+    q_offset: int,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    seq_len_q: int,
+    seq_len_k: int,
+    num_k_blocks: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos_b = (
+        qi * block_q
+        + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+        + q_offset
+    )  # (block_q, 1)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Tile-level relevance: skip tiles entirely above the causal diagonal or
+    # entirely left of the window.
+    first_q = qi * block_q + q_offset
+    last_q = first_q + block_q - 1
+    first_k = kj * block_k
+    last_k = first_k + block_k - 1
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant = jnp.logical_and(relevant, first_k <= last_q)
+    if window > 0:
+        relevant = jnp.logical_and(relevant, last_k > first_q - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (block_q, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_k, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+        mask = k_pos < seq_len_k
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos_b)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos_b - window)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_scr[...]  # (block_q, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)  # (block_q, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    Dv = v.shape[-1]  # may differ from D (MLA)
+    groups = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+
+    pad_q = (-S) % block_q
+    pad_k = (-T) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sp, Tp = q.shape[1], k.shape[1]
+    nq, nk = Sp // block_q, Tp // block_k
+
+    kernel = functools.partial(
+        _kernel,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len_q=S,
+        seq_len_k=T,
+        num_k_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, i, j, g=groups: (b, j, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, Dv), lambda b, h, i, j, g=groups: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, Dv), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, Hq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

@@ -1,0 +1,60 @@
+"""jit-ready wrapper for prefill/train attention.
+
+Dispatch: the Pallas TPU kernel when running on TPU (or when
+``REPRO_FORCE_PALLAS=1``, which uses interpret mode on CPU — slow, test-only);
+otherwise the pure-jnp reference, which XLA fuses well enough on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+
+from .ref import attention_chunked_ref, attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _use_pallas() -> bool:
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "1":
+        return True
+    if force == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "scale")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Attention over (B, S, Hq, D) queries and (B, T, Hkv, D) KV."""
+    if _use_pallas():
+        from .kernel import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
+            interpret=jax.default_backend() != "tpu",
+        )
+    # Long sequences: blockwise online-softmax (flash working-set profile);
+    # short ones: the dense oracle (faster to trace/execute on CPU).
+    S, T = q.shape[1], k.shape[1]
+    if S * T > (4096 * 4096) and S > 1024:
+        return attention_chunked_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+        )
+    return attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+    )

@@ -1,0 +1,167 @@
+"""Pure-jnp oracle for prefill/train attention (GQA, causal, sliding window).
+
+This is the numerical ground truth the Pallas kernel is validated against
+(``tests/test_kernels_flash.py`` sweeps shapes/dtypes with assert_allclose).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import constrain, current_rules
+
+__all__ = ["attention_ref", "attention_chunked_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 => unbounded; else attend to [i-window+1, i]
+    q_offset: int = 0,  # absolute position of q[0] (prefill continuation)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    groups = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    # Expand KV heads for grouped-query attention.
+    k = jnp.repeat(k, groups, axis=2)  # (B, T, Hq, D)
+    v = jnp.repeat(v, groups, axis=2)
+
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+
+    q_pos = jnp.arange(S) + q_offset  # absolute positions of queries
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Fully-masked rows (can happen with tiny windows) produce NaN; zero them.
+    probs = jnp.where(jnp.any(mask, axis=-1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked_ref(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Blockwise online-softmax attention (flash-style, pure jnp).
+
+    Working set is O(q_block * kv_block) instead of O(S * T) — this is the
+    structural stand-in the dry-run lowers for long sequences, matching the
+    Pallas kernel's memory profile (the kernel additionally skips fully
+    masked blocks; the dry-run counts the full rectangle — see
+    EXPERIMENTS.md §Roofline notes).  Numerics match :func:`attention_ref`.
+    """
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    Dv = v.shape[-1]  # value head dim may differ (MLA: qk 192 / v 128)
+    groups = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    pad_q = (-S) % q_block
+    pad_k = (-T) % kv_block
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_block, kp.shape[1] // kv_block
+
+    # (nq, B, qb, Hq, D) / (nk, B, kb, Hkv, D)
+    qs = jnp.moveaxis(qp.reshape(B, nq, q_block, Hq, D), 1, 0).astype(jnp.float32)
+    ks = jnp.moveaxis(kp.reshape(B, nk, kv_block, Hkv, D), 1, 0).astype(jnp.float32)
+    vs = jnp.moveaxis(vp.reshape(B, nk, kv_block, Hkv, Dv), 1, 0).astype(jnp.float32)
+
+    q_pos_base = jnp.arange(q_block)
+    k_pos_base = jnp.arange(kv_block)
+
+    # Sliding-window banding (§Perf H1): a q block only sees kv blocks in
+    # [q_start - window, q_end] — a static band of
+    # ceil((window + q_block) / kv_block) + 1 blocks.  Slicing the band out
+    # per q step cuts FLOPs and the saved-for-backward stacks from O(S^2)
+    # to O(S * window) — the Pallas kernel gets the same effect from its
+    # tile-relevance pl.when.
+    band = nk
+    if window > 0:
+        band = min(nk, (window + q_block + kv_block - 1) // kv_block + 1)
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk  # scalar, (B, qb, Hq, D)
+        # Row-parallel attention for head counts that do not divide the
+        # model axis (hymba 25, minicpm 36, whisper 20): shard the q-block
+        # row dim (512 divides 16) so the (B, H, qb, kvb) intermediates
+        # split across chips instead of replicating (§Perf H1).  Applied
+        # only when the launcher activates "q_seq" — an unconditional
+        # constraint fights XLA's own placement on well-shaped archs.
+        rules = current_rules()
+        if rules is not None and rules.rules.get("q_seq"):
+            qblk = constrain(qblk, ("batch", "q_seq", None, None))
+        q_pos = q_pos_base + qi * q_block + q_offset
+        if window > 0 and band < nk:
+            lo = (qi * q_block + q_offset - window) // kv_block
+            start = jnp.clip(lo, 0, nk - band)
+            ks_band = jax.lax.dynamic_slice_in_dim(ks, start, band, axis=0)
+            vs_band = jax.lax.dynamic_slice_in_dim(vs, start, band, axis=0)
+            kj_idx = start + jnp.arange(band)
+        else:
+            ks_band, vs_band = ks, vs
+            kj_idx = jnp.arange(nk)
+
+        def kv_step(carry, kj_kv):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_kv
+            k_pos = k_pos_base + kj * kv_block
+            # GQA: expand KV heads within the block (block is small).
+            ke = jnp.repeat(kblk, groups, axis=2)  # (B, kb, Hq, D)
+            ve = jnp.repeat(vblk, groups, axis=2)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qblk, ke) * scale
+            mask = jnp.ones((q_block, kv_block), bool)
+            mask &= (k_pos[None, :] < T)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            logits = jnp.where(mask[None, None], logits, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            # guard -inf rows: exp(-inf - -inf) -> use finite max
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(logits - m_safe[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, ve)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hq, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hq, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hq, q_block, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kj_idx, ks_band, vs_band)
+        )
+        y = acc / jnp.maximum(l[..., None], 1e-30)  # (B, Hq, qb, D)
+        return None, jnp.moveaxis(y, 1, 2)  # (B, qb, Hq, D)
+
+    _, ys = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(ys, 0, 1).reshape(B, nq * q_block, Hq, Dv)[:, :S]
+    return out.astype(q.dtype)

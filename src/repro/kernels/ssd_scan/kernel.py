@@ -1,0 +1,161 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid ``(B, n_chunks)`` with the chunk dimension innermost/sequential: the
+running (H, P, N) recurrent state lives in a VMEM scratch that is
+initialized at chunk 0 and carried across chunks of the same sequence —
+exactly the TPU-native shape of the state-space *duality*: within a chunk
+the quadratic masked-attention form feeds the MXU; across chunks the
+linear recurrence is a cheap VMEM update.
+
+Per-chunk VMEM working set (defaults: Q=128, H=64, P=64, N=128):
+  x tile (Q, H*P) bf16 = 1 MiB, B/C tiles (Q, G*N), decay matrices (H, Q, Q)
+  f32, state scratch (H, P, N) f32 = 2 MiB — comfortably under ~16 MiB.
+
+Validated against ``ref.ssd_ref`` (incl. carried initial state) in
+interpret mode by ``tests/test_kernels_ssd.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _kernel(
+    x_ref,  # (1, Q, H, P)
+    dt_ref,  # (1, Q, H)
+    a_ref,  # (1, H)
+    b_ref,  # (1, Q, G, N)
+    c_ref,  # (1, Q, G, N)
+    y_ref,  # (1, Q, H, P) out
+    fs_ref,  # (1, H, P, N) out (final state)
+    state_scr,  # (H, P, N) f32
+    *,
+    chunk: int,
+    n_chunks: int,
+    hpg: int,
+    has_init: bool,
+    init_ref=None,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        if has_init:
+            state_scr[...] = init_ref[0].astype(jnp.float32)
+        else:
+            state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (Q, H)
+    A = a_ref[0].astype(jnp.float32)  # (H,)
+    Bm = b_ref[0].astype(jnp.float32)  # (Q, G, N)
+    Cm = c_ref[0].astype(jnp.float32)
+
+    xbar = x * dt[..., None]  # (Q, H, P)
+    a_dt = dt * A[None, :]  # (Q, H)
+    a_cum = jnp.cumsum(a_dt, axis=0)  # (Q, H)
+
+    # Broadcast groups to heads.
+    Bh = jnp.repeat(Bm, hpg, axis=1)  # (Q, H, N)
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+
+    # Intra-chunk quadratic term: decay(i<-j) = exp(a_cum_i - a_cum_j), i>=j.
+    diff = a_cum[:, None, :] - a_cum[None, :, :]  # (Q, Q, H)
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril = row >= col
+    decay = jnp.where(tril[..., None], jnp.exp(diff), 0.0)  # (Q, Q, H)
+    scores = jnp.einsum("ihn,jhn->ijh", Ch, Bh)  # (Q, Q, H)
+    y_diag = jnp.einsum("ijh,jhp->ihp", scores * decay, xbar)
+
+    # Inter-chunk: contribution of the carried state.
+    state = state_scr[...]  # (H, P, N)
+    state_decay = jnp.exp(a_cum)  # (Q, H)
+    y_off = jnp.einsum("ihn,hpn->ihp", Ch, state) * state_decay[..., None]
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # State update: S' = exp(sum a_dt) * S + sum_j decay_to_end_j * x_j B_j^T
+    total = a_cum[-1]  # (H,)
+    decay_to_end = jnp.exp(total[None, :] - a_cum)  # (Q, H)
+    new_state = state * jnp.exp(total)[:, None, None] + jnp.einsum(
+        "jhp,jhn,jh->hpn", xbar, Bh, decay_to_end
+    )
+    state_scr[...] = new_state
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        fs_ref[0] = new_state.astype(fs_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, L, G, N)
+    Cm: jax.Array,  # (B, L, G, N)
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hpg = h // g
+    orig_l = l
+    if l % chunk:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = x.shape[1]
+    nc = l // chunk
+    has_init = initial_state is not None
+
+    in_specs = [
+        pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+        pl.BlockSpec((1, chunk, h), lambda bi, ci: (bi, ci, 0)),
+        pl.BlockSpec((1, h), lambda bi, ci: (0, 0)),
+        pl.BlockSpec((1, chunk, g, n), lambda bi, ci: (bi, ci, 0, 0)),
+        pl.BlockSpec((1, chunk, g, n), lambda bi, ci: (bi, ci, 0, 0)),
+    ]
+    args = [x, dt, A[None], Bm, Cm]
+    if has_init:
+        in_specs.append(pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)))
+        args.append(initial_state)
+
+    def kernel(*refs):
+        if has_init:
+            x_r, dt_r, a_r, b_r, c_r, init_r, y_r, fs_r, scr = refs
+        else:
+            x_r, dt_r, a_r, b_r, c_r, y_r, fs_r, scr = refs
+            init_r = None
+        _kernel(
+            x_r, dt_r, a_r, b_r, c_r, y_r, fs_r, scr,
+            chunk=chunk, n_chunks=nc, hpg=hpg, has_init=has_init, init_ref=init_r,
+        )
+
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=(b, nc),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return y[:, :orig_l], fs

@@ -1,0 +1,46 @@
+"""jit-ready wrapper for the Mamba2 SSD chunked scan (see flash ops)."""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+
+from .ref import ssd_decode_step_ref, ssd_ref
+
+__all__ = ["ssd_scan", "ssd_decode_step"]
+
+
+def _use_pallas() -> bool:
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "1":
+        return True
+    if force == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int = 256,
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    if _use_pallas():
+        from .kernel import ssd_scan_pallas
+
+        return ssd_scan_pallas(
+            x, dt, A, Bm, Cm, chunk=chunk, initial_state=initial_state,
+            interpret=jax.default_backend() != "tpu",
+        )
+    return ssd_ref(x, dt, A, Bm, Cm, chunk=chunk, initial_state=initial_state)
+
+
+ssd_decode_step = jax.jit(ssd_decode_step_ref)

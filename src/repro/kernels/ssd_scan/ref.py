@@ -1,0 +1,143 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan (arXiv:2405.21060, §6).
+
+State-space duality: within a chunk the recurrence is computed as masked
+attention (quadratic in the chunk length); across chunks a linear recurrence
+carries the (H, P, N) state.  This is the `ssd_minimal_discrete` reference
+algorithm, adapted to grouped B/C (ngroups) and an optional initial state so
+decode-vs-scan equivalence is testable.
+
+Shapes
+------
+x  : (B, L, H, P)   — per-head inputs (already multiplied by nothing; the
+                      discretization ``x * dt`` happens inside)
+dt : (B, L, H)      — softplus-activated step sizes
+A  : (H,)           — negative decay rates (A = -exp(A_log))
+Bm : (B, L, G, N)   — input projections (groups broadcast to heads)
+Cm : (B, L, G, N)   — output projections
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import constrain, current_rules
+
+__all__ = ["ssd_ref", "ssd_decode_step_ref"]
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable 'segment sum': out[..., i, j] = sum_{k=j+1..i} x[..., k]
+    for j < i (and 0 on the diagonal, -inf above)."""
+    q = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]  # sum_{j+1..i}
+    idx = jnp.arange(q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int = 256,
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns ``(y, final_state)`` with y: (B, L, H, P) and
+    final_state: (B, H, P, N)."""
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert h % g == 0
+    if l % chunk != 0:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1]
+    nc, q = L // chunk, chunk
+    hpg = h // g
+
+    f32 = jnp.float32
+    x_ = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, nc, q, h, p)
+    a_dt = (A.astype(f32) * dt.astype(f32)).reshape(b, nc, q, h)  # (b,c,q,h)
+    # Broadcast grouped B/C to heads.
+    Bh = jnp.repeat(Bm.astype(f32), hpg, axis=2).reshape(b, nc, q, h, n)
+    Ch = jnp.repeat(Cm.astype(f32), hpg, axis=2).reshape(b, nc, q, h, n)
+
+    # 1) Intra-chunk (quadratic, "attention-like") term.  The (b,c,h,q,s)
+    # intermediates are the SSD working set; for head counts that do not
+    # divide the model axis they would replicate per chip, so we shard the
+    # q rows instead when the launcher enables "q_seq" (§Perf H1).  The
+    # Pallas kernel holds these tiles in VMEM and never spills them.
+    a_dt_t = jnp.moveaxis(a_dt, -1, -2)  # (b,c,h,q)
+    decay_mat = jnp.exp(_segsum(a_dt_t))  # (b,c,h,q,s) lower-tri
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Ch, Bh)
+    rules = current_rules()
+    if rules is not None and rules.rules.get("q_seq"):
+        # Only when the launcher activates row-parallel blocks: forcing a
+        # constraint otherwise fights XLA's own (better) choice.
+        decay_mat = constrain(decay_mat, ("batch", None, None, "q_seq", None))
+        scores = constrain(scores, ("batch", None, None, "q_seq", None))
+    y_diag = jnp.einsum("bchqs,bchqs,bcshp->bcqhp", scores, decay_mat, x_)
+
+    # 2) Per-chunk final states.
+    a_cum = jnp.cumsum(a_dt, axis=2)  # (b,c,q,h)
+    total = a_cum[:, :, -1:, :]  # (b,c,1,h)
+    decay_to_end = jnp.exp(total - a_cum)  # (b,c,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_to_end, x_)
+
+    # 3) Inter-chunk linear recurrence over chunk states.
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # (b,c,h)
+    s0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), f32)
+    )
+
+    def step(carry, inp):
+        dec, st = inp  # (b,h), (b,h,p,n)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    final, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,c,h,p,n)
+
+    # 4) Inter-chunk contribution to outputs.
+    state_decay = jnp.exp(a_cum)  # decay from chunk start to each position
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, L, h, p)[:, :l]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step_ref(
+    state: jax.Array,  # (B, H, P, N)
+    x_t: jax.Array,  # (B, H, P)
+    dt_t: jax.Array,  # (B, H)
+    A: jax.Array,  # (H,)
+    B_t: jax.Array,  # (B, G, N)
+    C_t: jax.Array,  # (B, G, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent step; returns ``(y_t, new_state)``."""
+    b, h, p, n = state.shape
+    g = B_t.shape[1]
+    hpg = h // g
+    f32 = jnp.float32
+    dA = jnp.exp(A.astype(f32) * dt_t.astype(f32))  # (B, H)
+    Bh = jnp.repeat(B_t.astype(f32), hpg, axis=1)  # (B, H, N)
+    Ch = jnp.repeat(C_t.astype(f32), hpg, axis=1)
+    xbar = x_t.astype(f32) * dt_t.astype(f32)[..., None]  # (B, H, P)
+    new_state = state.astype(f32) * dA[..., None, None] + xbar[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x_t.dtype), new_state

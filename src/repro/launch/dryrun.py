@@ -1,0 +1,334 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, with no real device allocation (ShapeDtypeStruct inputs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+
+Per combination this prints/records ``compiled.memory_analysis()`` (fits?),
+``compiled.cost_analysis()`` (FLOPs / bytes for §Roofline) and the collective
+byte summary parsed from the optimized HLO.
+
+NOTE: the XLA_FLAGS line above must run before any other import initializes
+jax — do not move it.  (No ``from __future__`` import here for the same
+reason: the docstring sits after the env var on purpose.)
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, get_config
+from repro.config.base import InputShape, ModelConfig
+from repro.configs import ASSIGNED_ARCHS
+from repro.distributed.partitioning import (
+    MeshRules,
+    cache_specs,
+    default_rules,
+    mesh_rules,
+    param_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HW, format_row, roofline_terms
+from repro.models import init_cache, init_params, input_specs
+from repro.models.model_zoo import cache_len_for
+from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.training.optimizer import init_adamw
+from repro.training.train_loop import TrainConfig, make_train_step
+
+__all__ = ["run_case", "main"]
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _batch_specs(cfg: ModelConfig, shape: InputShape, rules: MeshRules) -> Dict[str, P]:
+    out: Dict[str, P] = {}
+    for name, sds in input_specs(cfg, shape).items():
+        logical = ["batch"] + [None] * (len(sds.shape) - 1)
+        out[name] = rules.resolve(logical, sds.shape)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D forward-only."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def run_case(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    mesh=None,
+    save_hlo: Optional[str] = None,
+    variant: str = "baseline",
+) -> Dict[str, Any]:
+    """``variant`` selects the sharding/implementation scheme:
+
+    * ``baseline``  — the paper-faithful first lowering (FSDP+TP everywhere).
+    * ``opt``       — the beyond-paper optimized scheme (EXPERIMENTS.md §Perf):
+        - decode: weight-stationary serving layout (no FSDP param gathers);
+        - MoE with E %% model == 0: expert-parallel weight placement.
+    """
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    decode_long = shape_name == "long_500k"
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rules = default_rules(mesh)
+    if decode_long:
+        # batch=1: shard the KV sequence instead (context parallel).
+        rules.rules["kv_seq"] = "data"
+    if variant == "opt":
+        if shape.kind == "decode":
+            # Serving mesh view (same 256/512 chips): factor the model axis
+            # into ("kv", "tp") so the KV cache can LIVE kv-head-sharded —
+            # eliminating the end-of-step whole-cache all-gather (H3) — and
+            # keep weights stationary (no FSDP gathers).
+            kv_size = 8 if cfg.n_kv_heads % 8 == 0 else (
+                4 if cfg.n_kv_heads and cfg.n_kv_heads % 4 == 0 else 1
+            )
+            tp_size = 16 // kv_size
+            if multi_pod:
+                mesh = jax.make_mesh((2, 16, kv_size, tp_size), ("pod", "data", "kv", "tp"))
+            else:
+                mesh = jax.make_mesh((16, kv_size, tp_size), ("data", "kv", "tp"))
+            mesh_name = "x".join(str(x) for x in mesh.devices.shape) + "(kv)"
+            model_axes = ("kv", "tp") if tp_size > 1 else ("kv",)
+            rules = MeshRules(
+                mesh=mesh,
+                rules={
+                    "batch": ("pod", "data") if multi_pod else ("data",),
+                    "seq": None,
+                    "model": model_axes,
+                    "fsdp": None,  # weight-stationary serving
+                    "expert": None,
+                    "vocab": model_axes,
+                    "kv_seq": "data" if decode_long else None,
+                    "kv_heads": "kv" if kv_size > 1 else None,
+                    "kv_latent": model_axes,  # MLA: shard the latent dim
+                },
+            )
+        model_axis = rules.rules.get("model")
+        if cfg.moe.enabled and model_axis is not None and (
+            cfg.moe.num_experts % rules.axis_size(model_axis) == 0
+        ):
+            rules.rules["expert"] = model_axis
+        if shape.kind != "decode" and cfg.n_heads and cfg.n_heads % 16 != 0:
+            # Heads don't divide the model axis: row-parallel attention/SSD
+            # blocks instead of replicated per-chip intermediates (H1).
+            rules.rules["q_seq"] = rules.rules.get("model")
+    t0 = time.time()
+
+    with mesh, mesh_rules(rules):
+        max_dec_len = max(shape.seq_len + 8, 4096)  # whisper learned positions
+        params_struct = jax.eval_shape(
+            lambda k: init_params(k, cfg, dtype=jnp.bfloat16, max_dec_len=max_dec_len),
+            jax.random.PRNGKey(0),
+        )
+        p_shard = _ns(mesh, param_specs(params_struct, rules))
+        b_specs = input_specs(cfg, shape)
+        b_shard = _ns(mesh, _batch_specs(cfg, shape, rules))
+
+        if shape.kind == "train":
+            tcfg = TrainConfig(remat=True)
+            step = make_train_step(cfg, tcfg)
+            opt_struct = jax.eval_shape(init_adamw, params_struct)
+            o_shard = type(opt_struct)(
+                step=NamedSharding(mesh, P()), mu=p_shard, nu=p_shard
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+            )
+            lowered = jitted.lower(params_struct, opt_struct, b_specs)
+        elif shape.kind == "prefill":
+            cap = shape.seq_len + cfg.meta_tokens
+            cache_struct = jax.eval_shape(
+                functools.partial(
+                    init_cache, cfg, shape.global_batch, cap, dtype=jnp.bfloat16
+                )
+            )
+            c_shard = _ns(mesh, cache_specs(cache_struct, rules))
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, b_shard, c_shard),
+                out_shardings=(None, c_shard),
+            )
+            lowered = jitted.lower(params_struct, b_specs, cache_struct)
+        else:  # decode
+            cap = cache_len_for(cfg, shape)
+            cache_struct = jax.eval_shape(
+                functools.partial(
+                    init_cache,
+                    cfg,
+                    shape.global_batch,
+                    cap,
+                    dtype=jnp.bfloat16,
+                    decode_long=decode_long,
+                )
+            )
+            c_shard = _ns(
+                mesh, cache_specs(cache_struct, rules, context_parallel=decode_long)
+            )
+            step = make_serve_step(cfg, decode_long=decode_long, greedy=True)
+            len_struct = jax.ShapeDtypeStruct((), jnp.int32)
+            rng_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            repl = NamedSharding(mesh, P())
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, b_shard["token"], c_shard, repl, repl),
+                out_shardings=(b_shard["token"], c_shard),
+            )
+            lowered = jitted.lower(
+                params_struct, b_specs["token"], cache_struct, len_struct, rng_struct
+            )
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # ---- analyses ------------------------------------------------------ #
+    mem = compiled.memory_analysis()
+    mem_info: Dict[str, float] = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        try:
+            mem_info[attr] = float(getattr(mem, attr))
+        except Exception:
+            pass
+    peak = (
+        mem_info.get("argument_size_in_bytes", 0.0)
+        - mem_info.get("alias_size_in_bytes", 0.0)
+        + mem_info.get("output_size_in_bytes", 0.0)
+        + mem_info.get("temp_size_in_bytes", 0.0)
+    )
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    terms = roofline_terms(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_text=hlo,
+        model_flops=model_flops(cfg, shape),
+        peak_memory_bytes=peak,
+    )
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_info,
+        "peak_device_bytes": peak,
+        "xla_cost_analysis": {
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed", "optimal_seconds")
+        },
+        "roofline": terms.to_dict(),
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument(
+        "--mesh", default="single", choices=["single", "multi", "both"],
+        help="single=16x16 (256 chips), multi=2x16x16 (512)"
+    )
+    ap.add_argument("--all", action="store_true", help="all archs x shapes")
+    ap.add_argument("--out", default="experiments/dryrun", help="output dir for JSON records")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=["baseline", "opt"])
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if args.variant != "baseline":
+                    tag += f"__{args.variant}"
+                out_path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(out_path):
+                    print(f"[skip] {tag} (exists)")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_case(
+                        arch,
+                        shape,
+                        multi_pod=mp,
+                        variant=args.variant,
+                        save_hlo=os.path.join(args.out, tag + ".hlo")
+                        if args.save_hlo
+                        else None,
+                    )
+                except Exception as e:  # a failure here is a bug in our system
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+                    continue
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                r = rec["roofline"]
+                print(
+                    f"[ok] {tag}: lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                    f"flops/chip={r['flops']:.3e} bytes/chip={r['hbm_bytes']:.3e} "
+                    f"coll/chip={r['coll_bytes']:.3e} dom={r['dominant']} "
+                    f"peak_dev_mem={rec['peak_device_bytes']/2**30:.2f}GiB",
+                    flush=True,
+                )
+    if failures:
+        print("\nFAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        raise SystemExit(1)
+    print("\nAll dry-run cases compiled.")
+
+
+if __name__ == "__main__":
+    main()

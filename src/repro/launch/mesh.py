@@ -1,0 +1,24 @@
+"""Production mesh definition (kept as functions — importing this module
+never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e target: 16x16 = 256 chips per pod; 2 pods multi-pod.
+
+    Axes: ``data`` (batch / FSDP) x ``model`` (tensor parallel), plus a
+    leading ``pod`` axis in the multi-pod configuration (DCN-connected).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small CPU meshes, e.g. (2, 4))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

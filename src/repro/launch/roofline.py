@@ -1,0 +1,168 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms, per (arch x shape x mesh), all in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16 / chip)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s / chip)
+    collective = collective_bytes / link_bw        (~50 GB/s/link ICI)
+
+All three inputs come from :mod:`repro.launch.hlo_analysis` over the
+optimized per-device HLO (``compiled.as_text()``), because XLA's own
+``cost_analysis()`` counts ``while`` bodies once — a ~n_layers undercount
+with scan-over-layers.  The analyzer multiplies through loop trip counts,
+models in-place dynamic-update-slice (KV-cache writes) and sums collective
+output-shard sizes per kind.  ``xla_cost`` is recorded alongside for
+reference.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional, Tuple
+
+from .hlo_analysis import HloCosts, analyze_hlo
+
+__all__ = ["HW", "RooflineTerms", "collective_bytes", "roofline_terms", "format_row"]
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip constants (assignment-specified)."""
+
+    peak_flops: float = 197e12  # bf16
+    hbm_bw: float = 819e9  # bytes/s
+    ici_bw: float = 50e9  # bytes/s/link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[16,512,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES) + r")\("
+)
+# tuple-result collectives:  = (bf16[..], bf16[..]) all-to-all(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum output-shard bytes of collective ops in optimized HLO."""
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            per_kind[kind] += _shape_bytes(dtype, dims)
+            count[kind] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dm in _SHAPE_RE.finditer(shapes):
+                per_kind[kind] += _shape_bytes(dm.group(1), dm.group(2))
+            count[kind] += 1
+    total = sum(per_kind.values())
+    per_kind = {k: v for k, v in per_kind.items() if v}
+    per_kind["_counts"] = {k: v for k, v in count.items() if v}  # type: ignore
+    return total, per_kind
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per-chip HLO flops
+    hbm_bytes: float  # per-chip bytes accessed
+    coll_bytes: float  # per-chip collective bytes (output-size convention)
+    compute_s: float
+    memory_s: float
+    # Memory term excluding pure dtype-convert/copy traffic — the CPU HLO
+    # upcasts bf16 dot operands to f32, which TPU does not (DESIGN.md).
+    memory_tpu_native_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float  # 6*N*D (active params) — global
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    peak_memory_bytes: float = 0.0
+    per_kind: Dict[str, float] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh: str,
+    chips: int,
+    hlo_text: str,
+    model_flops: float,
+    peak_memory_bytes: float = 0.0,
+    hw: HW = HW(),
+    costs: Optional[HloCosts] = None,
+) -> RooflineTerms:
+    h = costs if costs is not None else analyze_hlo(hlo_text)
+    flops, hbm, coll = h.flops, h.bytes, h.collective_bytes
+    compute_s = flops / hw.peak_flops
+    memory_s = hbm / hw.hbm_bw
+    memory_native_s = getattr(h, "bytes_tpu_native", hbm) / hw.hbm_bw
+    collective_s = coll / hw.ici_bw
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", collective_s)),
+        key=lambda kv: kv[1],
+    )[0]
+    useful = model_flops / max(flops * chips, 1.0)
+    per_kind = {k: float(v) for k, v in h.collective_by_kind.items()}
+    per_kind.update({f"n_{k}": float(v) for k, v in h.collective_counts.items()})
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh,
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(coll),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        memory_tpu_native_s=memory_native_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        peak_memory_bytes=peak_memory_bytes,
+        per_kind=per_kind,
+    )
+
+
+def format_row(t: RooflineTerms) -> str:
+    return (
+        f"{t.arch:22s} {t.shape:12s} {t.mesh:10s} "
+        f"comp={t.compute_s*1e3:9.3f}ms mem={t.memory_s*1e3:9.3f}ms "
+        f"coll={t.collective_s*1e3:9.3f}ms dom={t.dominant:10s} "
+        f"useful={t.useful_ratio:6.3f} peak_dev_mem={t.peak_memory_bytes/2**30:7.2f}GiB"
+    )

@@ -1,0 +1,16 @@
+"""Model substrate: the ten assigned architectures (+ unified zoo API)."""
+
+from .model_zoo import (
+    decode,
+    forward,
+    init_cache,
+    init_params,
+    input_specs,
+    prefill,
+    reduced_config,
+)
+
+__all__ = [
+    "decode", "forward", "init_cache", "init_params", "input_specs",
+    "prefill", "reduced_config",
+]

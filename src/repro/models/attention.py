@@ -1,0 +1,238 @@
+"""Grouped-query attention with the assigned archs' variants:
+
+* GQA with arbitrary (n_heads, n_kv_heads)        [all dense archs]
+* qk_norm (per-head RMSNorm on q and k)           [qwen3]
+* QKV bias                                        [qwen2, whisper]
+* sliding-window attention                        [hymba; long_500k variant]
+* M-RoPE                                          [qwen2-vl]
+* cross-attention over precomputed encoder KV     [whisper decoder]
+* KV-cache prefill + single-token decode
+
+Compute goes through the kernel wrappers (Pallas on TPU, jnp oracle on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from .layers import (
+    Params,
+    apply_mrope,
+    apply_rope,
+    init_linear,
+    init_norm,
+    linear,
+    rms_norm,
+)
+
+__all__ = [
+    "init_attention",
+    "attention_forward",
+    "attention_decode",
+    "init_cross_attention",
+    "cross_attention_forward",
+    "init_kv_cache",
+]
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim_
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": init_linear(k0, d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(k1, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(k2, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(k3, cfg.n_heads * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd, dtype)
+        p["k_norm"] = init_norm(hd, dtype)
+    return p
+
+
+def _project_qkv(
+    params: Params, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = linear(params["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = linear(params["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = linear(params["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(params["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _rope(q, k, positions, cfg: ModelConfig):
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    elif not cfg.learned_pos_emb:  # whisper uses learned absolute positions
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attention_forward(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    positions: jax.Array,  # (B, S) or (3, B, S) for M-RoPE
+    *,
+    window: int = 0,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _rope(q, k, positions, cfg)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    B, S = x.shape[:2]
+    return linear(params["wo"], out.reshape(B, S, -1))
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    """Head-major KV cache: (B, H_kv, T, D).
+
+    Decode's cache dot contracts D with batch dims (B, H) — head-major makes
+    those the leading axes, so the cache streams through the step with ZERO
+    transpose copies (§Perf H3: the (B, T, H, D) layout cost ~2x cache bytes
+    in transpose materialization per step, per layer)."""
+    hd = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, max_len, hd), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, max_len, hd), dtype),
+    }
+
+
+def _write_prefill(cache_arr: jax.Array, new: jax.Array) -> jax.Array:
+    """Write prefill K/V into the head-major cache (may be a ring buffer).
+
+    ``new`` is (B, S, H, D) from the projection; the cache is (B, H, T, D).
+    Full cache (capacity >= S): contiguous write at slot 0.  Sliding-window
+    ring (capacity < S): keep the last ``capacity`` tokens, laid out so that
+    token position ``p`` lands in slot ``p % capacity`` (static gather —
+    shapes are compile-time constants)."""
+    import numpy as np
+
+    S = new.shape[1]
+    cap = cache_arr.shape[2]
+    new_hm = jnp.swapaxes(new, 1, 2)  # (B, H, S, D), once per prefill
+    if S <= cap:
+        return jax.lax.dynamic_update_slice(
+            cache_arr, new_hm.astype(cache_arr.dtype), (0,) * cache_arr.ndim
+        )
+    pos = np.arange(S - cap, S)
+    order = np.argsort(pos % cap)  # slot j receives position pos[order[j]]
+    tail = new_hm[:, :, pos[order]]
+    return tail.astype(cache_arr.dtype)
+
+
+def attention_prefill(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: Dict[str, jax.Array],
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill: full forward + write K/V (ring-aware for SWA layers)."""
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _rope(q, k, positions, cfg)
+    out = flash_attention(q, k, v, causal=True, window=window)
+    B, S = x.shape[:2]
+    new_cache = {
+        "k": _write_prefill(cache["k"], k),
+        "v": _write_prefill(cache["v"], v),
+    }
+    return linear(params["wo"], out.reshape(B, S, -1)), new_cache
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d) — one new token
+    cfg: ModelConfig,
+    cache: Dict[str, jax.Array],
+    cache_len: jax.Array,  # scalar int32: number of valid slots
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode: append to cache, attend over valid prefix."""
+    B = x.shape[0]
+    T = cache["k"].shape[2]  # capacity; == window for SWA ring buffers
+    positions = jnp.broadcast_to(cache_len[None, None], (B, 1)).astype(jnp.int32)
+    if cfg.mrope_sections:
+        positions = jnp.stack([positions] * len(cfg.mrope_sections), axis=0)
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _rope(q, k, positions, cfg)
+    # Ring write: position p lives in slot p % capacity (== p when the
+    # cache is full-length).  Attention is permutation-invariant given the
+    # validity mask, and RoPE was applied at write time, so ring order is
+    # safe (see DESIGN.md §5).
+    slot = jax.lax.rem(cache_len, jnp.int32(T))
+    zero = jnp.zeros((), jnp.int32)
+    # Head-major write: the (B, 1, H, D) projection becomes (B, H, 1, D).
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], jnp.swapaxes(k, 1, 2).astype(cache["k"].dtype),
+            (zero, zero, slot, zero),
+        ),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], jnp.swapaxes(v, 1, 2).astype(cache["v"].dtype),
+            (zero, zero, slot, zero),
+        ),
+    }
+    lengths = jnp.full((B,), jnp.minimum(cache_len + 1, T), jnp.int32)
+    # The ring itself enforces the window once capacity == window.
+    eff_window = 0 if (window and T <= window) else window
+    # Pass the cache at its stored dtype: decode_attention reads it exactly
+    # once and accumulates in f32 (no whole-cache convert — §Perf H3).
+    out = decode_attention(
+        q[:, 0],
+        new_cache["k"],
+        new_cache["v"],
+        lengths,
+        window=eff_window,
+    )
+    return linear(params["wo"], out.reshape(B, 1, -1)), new_cache
+
+
+# --------------------------------------------------------------------- #
+# Cross-attention (whisper decoder)                                      #
+# --------------------------------------------------------------------- #
+def init_cross_attention(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention_forward(
+    params: Params,
+    x: jax.Array,  # (B, S, d) decoder states
+    cross_kv: Tuple[jax.Array, jax.Array],  # precomputed (B, T, Hkv, D) pairs
+    cfg: ModelConfig,
+) -> jax.Array:
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = linear(params["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k, v = cross_kv
+    out = flash_attention(q, k.astype(q.dtype), v.astype(q.dtype), causal=False)
+    return linear(params["wo"], out.reshape(B, S, -1))
+
+
+def cross_attention_kv(
+    params: Params, encoder_out: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Precompute the encoder-side K/V once per request (whisper serving)."""
+    B, T, _ = encoder_out.shape
+    hd = cfg.head_dim_
+    k = linear(params["wk"], encoder_out).reshape(B, T, cfg.n_kv_heads, hd)
+    v = linear(params["wv"], encoder_out).reshape(B, T, cfg.n_kv_heads, hd)
+    return k, v

@@ -1,0 +1,193 @@
+"""Decoder-block variants and their cache/prefill/decode wiring.
+
+A layer is described by a :class:`LayerSpec` — ``(mixer, ffn, window)``:
+
+* mixer: ``attn`` | ``mla`` | ``ssm`` | ``hybrid`` (parallel attn+mamba, hymba)
+* ffn:   ``dense`` | ``moe`` | ``none`` (mamba2 blocks have no FFN; d_ff=0)
+* window: sliding-window size for the attention path (0 = full)
+
+Blocks are pre-norm residual: ``x + mixer(norm1(x))`` then
+``x + ffn(norm2(x))``.  Hybrid runs attention and Mamba on the same normed
+input and averages the branch outputs (Hymba, arXiv:2411.13676 §2.1 —
+per-branch output norms folded into the branches here).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from .attention import (
+    attention_decode,
+    attention_forward,
+    attention_prefill,
+    init_attention,
+    init_kv_cache,
+)
+from .layers import Params, init_mlp, init_norm, mlp, rms_norm
+from .mla import init_mla, init_mla_cache, mla_decode, mla_forward, mla_prefill
+from .moe import init_moe, moe_apply
+from .ssm import (
+    init_mamba,
+    init_mamba_cache,
+    mamba_decode,
+    mamba_forward,
+    mamba_prefill,
+)
+
+__all__ = [
+    "LayerSpec",
+    "init_block",
+    "init_block_cache",
+    "block_forward",
+    "block_prefill",
+    "block_decode",
+]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str  # attn | mla | ssm | hybrid
+    ffn: str  # dense | moe | none
+    window: int = 0
+
+
+def init_block(key: jax.Array, cfg: ModelConfig, spec: LayerSpec, dtype=jnp.float32) -> Params:
+    k_mix, k_mamba, k_ffn = jax.random.split(key, 3)
+    p: Params = {"norm1": init_norm(cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = init_attention(k_mix, cfg, dtype)
+    elif spec.mixer == "mla":
+        p["mla"] = init_mla(k_mix, cfg, dtype)
+    elif spec.mixer == "ssm":
+        p["mamba"] = init_mamba(k_mix, cfg, dtype)
+    elif spec.mixer == "hybrid":
+        p["attn"] = init_attention(k_mix, cfg, dtype)
+        p["mamba"] = init_mamba(k_mamba, cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        p["norm2"] = init_norm(cfg.d_model, dtype)
+        p["ffn"] = init_mlp(k_ffn, cfg.d_model, cfg.d_ff, act=cfg.act, dtype=dtype)
+    elif spec.ffn == "moe":
+        p["norm2"] = init_norm(cfg.d_model, dtype)
+        p["moe"] = init_moe(k_ffn, cfg, dtype)
+    return p
+
+
+def init_block_cache(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Dict[str, Any]:
+    cache: Dict[str, Any] = {}
+    if spec.mixer in ("attn", "hybrid"):
+        cache.update(init_kv_cache(cfg, batch, max_len, dtype))
+    if spec.mixer == "mla":
+        cache.update(init_mla_cache(cfg, batch, max_len, dtype))
+    if spec.mixer in ("ssm", "hybrid"):
+        cache.update(init_mamba_cache(cfg, batch, dtype))
+    return cache
+
+
+def _mix_forward(params, x, cfg, spec, positions):
+    if spec.mixer == "attn":
+        return attention_forward(params["attn"], x, cfg, positions, window=spec.window)
+    if spec.mixer == "mla":
+        return mla_forward(params["mla"], x, cfg, positions, window=spec.window)
+    if spec.mixer == "ssm":
+        return mamba_forward(params["mamba"], x, cfg)
+    # hybrid: parallel attention + mamba heads, averaged.
+    a = attention_forward(params["attn"], x, cfg, positions, window=spec.window)
+    m = mamba_forward(params["mamba"], x, cfg)
+    return 0.5 * (a + m)
+
+
+def block_forward(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    positions: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns ``(y, lb_loss, z_loss)`` (zeros when the block has no router)."""
+    h = rms_norm(params["norm1"], x, cfg.norm_eps)
+    x = x + _mix_forward(params, h, cfg, spec, positions)
+    lb = jnp.zeros((), jnp.float32)
+    zl = jnp.zeros((), jnp.float32)
+    if spec.ffn == "dense":
+        x = x + mlp(params["ffn"], rms_norm(params["norm2"], x, cfg.norm_eps), cfg.act)
+    elif spec.ffn == "moe":
+        y, lb, zl = moe_apply(params["moe"], rms_norm(params["norm2"], x, cfg.norm_eps), cfg)
+        x = x + y
+    return x, lb, zl
+
+
+def block_prefill(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    positions: jax.Array,
+    cache: Dict[str, Any],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    h = rms_norm(params["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if spec.mixer == "attn":
+        y, kv = attention_prefill(params["attn"], h, cfg, positions, cache, window=spec.window)
+        new_cache.update(kv)
+    elif spec.mixer == "mla":
+        y, kv = mla_prefill(params["mla"], h, cfg, positions, cache, window=spec.window)
+        new_cache.update(kv)
+    elif spec.mixer == "ssm":
+        y, st = mamba_prefill(params["mamba"], h, cfg, cache)
+        new_cache.update(st)
+    else:  # hybrid
+        ya, kv = attention_prefill(params["attn"], h, cfg, positions, cache, window=spec.window)
+        ym, st = mamba_prefill(params["mamba"], h, cfg, cache)
+        new_cache.update(kv)
+        new_cache.update(st)
+        y = 0.5 * (ya + ym)
+    x = x + y
+    if spec.ffn == "dense":
+        x = x + mlp(params["ffn"], rms_norm(params["norm2"], x, cfg.norm_eps), cfg.act)
+    elif spec.ffn == "moe":
+        y, _, _ = moe_apply(params["moe"], rms_norm(params["norm2"], x, cfg.norm_eps), cfg)
+        x = x + y
+    return x, new_cache
+
+
+def block_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    cache: Dict[str, Any],
+    cache_len: jax.Array,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    h = rms_norm(params["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if spec.mixer == "attn":
+        y, kv = attention_decode(params["attn"], h, cfg, cache, cache_len, window=spec.window)
+        new_cache.update(kv)
+    elif spec.mixer == "mla":
+        y, kv = mla_decode(params["mla"], h, cfg, cache, cache_len, window=spec.window)
+        new_cache.update(kv)
+    elif spec.mixer == "ssm":
+        y, st = mamba_decode(params["mamba"], h, cfg, cache)
+        new_cache.update(st)
+    else:  # hybrid
+        ya, kv = attention_decode(params["attn"], h, cfg, cache, cache_len, window=spec.window)
+        ym, st = mamba_decode(params["mamba"], h, cfg, cache)
+        new_cache.update(kv)
+        new_cache.update(st)
+        y = 0.5 * (ya + ym)
+    x = x + y
+    if spec.ffn == "dense":
+        x = x + mlp(params["ffn"], rms_norm(params["norm2"], x, cfg.norm_eps), cfg.act)
+    elif spec.ffn == "moe":
+        y, _, _ = moe_apply(params["moe"], rms_norm(params["norm2"], x, cfg.norm_eps), cfg)
+        x = x + y
+    return x, new_cache

@@ -1,0 +1,233 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs()`` supplies precomputed frame embeddings (B, 1500, d) — the
+output of whisper's two conv layers.  We implement the transformer proper:
+
+* Encoder: bidirectional self-attention + GELU MLP, pre-LayerNorm,
+  sinusoidal-equivalent learned positions.
+* Decoder: causal self-attention (KV cache) + cross-attention over the
+  encoder output (K/V precomputed once per request) + GELU MLP.
+
+Serving: ``encdec_prefill`` runs the encoder, precomputes per-layer cross
+K/V, prefills the decoder self-cache; ``encdec_decode`` is the one-token
+step used by ``decode_32k`` / ``long_500k`` (with SWA on self-attention).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.distributed.partitioning import constrain
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from .attention import (
+    attention_decode,
+    attention_forward,
+    attention_prefill,
+    cross_attention_forward,
+    cross_attention_kv,
+    init_attention,
+    init_kv_cache,
+)
+from .layers import Params, init_linear, init_mlp, init_norm, layer_norm, linear, mlp
+
+__all__ = [
+    "init_encdec",
+    "encdec_forward",
+    "encdec_prefill",
+    "encdec_decode",
+    "init_encdec_cache",
+]
+
+
+def _init_enc_block(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_norm(cfg.d_model, dtype, with_bias=True),
+        "attn": init_attention(k1, cfg, dtype),
+        "norm2": init_norm(cfg.d_model, dtype, with_bias=True),
+        "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff, act="gelu", dtype=dtype),
+    }
+
+
+def _init_dec_block(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": init_norm(cfg.d_model, dtype, with_bias=True),
+        "attn": init_attention(k1, cfg, dtype),
+        "norm_x": init_norm(cfg.d_model, dtype, with_bias=True),
+        "cross": init_attention(k2, cfg, dtype),
+        "norm2": init_norm(cfg.d_model, dtype, with_bias=True),
+        "ffn": init_mlp(k3, cfg.d_model, cfg.d_ff, act="gelu", dtype=dtype),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig, *, dtype=jnp.float32, max_dec_len: int = 4096) -> Params:
+    ke, kd, kt, kp_e, kp_d = jax.random.split(key, 5)
+    V, d = cfg.padded_vocab, cfg.d_model
+    enc = jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(
+        jax.random.split(ke, cfg.n_encoder_layers)
+    )
+    dec = jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(
+        jax.random.split(kd, cfg.n_layers)
+    )
+    return {
+        "embedding": (jax.random.normal(kt, (V, d)) * 0.02).astype(dtype),
+        "enc_pos": (jax.random.normal(kp_e, (cfg.encoder_seq, d)) * 0.01).astype(dtype),
+        "dec_pos": (jax.random.normal(kp_d, (max_dec_len, d)) * 0.01).astype(dtype),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_final_norm": init_norm(d, dtype, with_bias=True),
+        "final_norm": init_norm(d, dtype, with_bias=True),
+    }
+
+
+def _enc_block(params: Params, x: jax.Array, cfg: ModelConfig, positions) -> jax.Array:
+    h = layer_norm(params["norm1"], x, cfg.norm_eps)
+    x = x + attention_forward(params["attn"], h, cfg, positions, causal=False)
+    h = layer_norm(params["norm2"], x, cfg.norm_eps)
+    return x + mlp(params["ffn"], h, "gelu")
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, T_enc, d) precomputed conv features (frontend stub)."""
+    B, T, d = frames.shape
+    x = frames + params["enc_pos"][:T].astype(frames.dtype)
+    x = constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(h, layer_params):
+        h = constrain(h, ("batch", "seq", None))
+        return _enc_block(layer_params, h, cfg, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layer_norm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def _dec_block_full(params, x, cfg, positions, enc_out):
+    h = layer_norm(params["norm1"], x, cfg.norm_eps)
+    x = x + attention_forward(params["attn"], h, cfg, positions, causal=True)
+    h = layer_norm(params["norm_x"], x, cfg.norm_eps)
+    kv = cross_attention_kv(params["cross"], enc_out, cfg)
+    x = x + cross_attention_forward(params["cross"], h, kv, cfg)
+    h = layer_norm(params["norm2"], x, cfg.norm_eps)
+    return x + mlp(params["ffn"], h, "gelu")
+
+
+def encdec_forward(
+    params: Params,
+    cfg: ModelConfig,
+    frames: jax.Array,  # (B, T_enc, d)
+    tokens: jax.Array,  # (B, S)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Training forward: encoder + teacher-forced decoder -> logits."""
+    enc_out = encode(params, frames, cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    x = x + params["dec_pos"][:S].astype(x.dtype)
+    x = constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, layer_params):
+        h = constrain(h, ("batch", "seq", None))
+        return _dec_block_full(layer_params, h, cfg, positions, enc_out), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = layer_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"].astype(x.dtype))
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) >= cfg.vocab_size, -1e9, logits)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    return logits, aux
+
+
+# --------------------------------------------------------------------- #
+# Serving                                                                #
+# --------------------------------------------------------------------- #
+def init_encdec_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Dict[str, Any]:
+    one = init_kv_cache(cfg, batch, max_len, dtype)
+    self_cache = jax.tree.map(lambda a: jnp.stack([a] * cfg.n_layers), one)
+    hd = cfg.head_dim_
+    cross = {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, hd), dtype),
+    }
+    return {"self": self_cache, "cross": cross}
+
+
+def encdec_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    frames: jax.Array,
+    tokens: jax.Array,
+    cache: Dict[str, Any],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run encoder, precompute cross K/V, prefill decoder self-cache."""
+    enc_out = encode(params, frames, cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    x = x + params["dec_pos"][:S].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, xs):
+        layer_params, self_cache = xs
+        hh = layer_norm(layer_params["norm1"], h, cfg.norm_eps)
+        y, new_self = attention_prefill(layer_params["attn"], hh, cfg, positions, self_cache)
+        h = h + y
+        hh = layer_norm(layer_params["norm_x"], h, cfg.norm_eps)
+        kv = cross_attention_kv(layer_params["cross"], enc_out, cfg)
+        h = h + cross_attention_forward(layer_params["cross"], hh, kv, cfg)
+        hh = layer_norm(layer_params["norm2"], h, cfg.norm_eps)
+        h = h + mlp(layer_params["ffn"], hh, "gelu")
+        return h, {"self": new_self, "cross": {"k": kv[0].astype(self_cache["k"].dtype),
+                                               "v": kv[1].astype(self_cache["v"].dtype)}}
+
+    x, updated = jax.lax.scan(body, x, (params["decoder"], cache["self"]))
+    new_cache = {"self": updated["self"], "cross": updated["cross"]}
+    x = layer_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"].astype(x.dtype))
+    return logits, new_cache
+
+
+def encdec_decode(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1)
+    cache: Dict[str, Any],
+    cache_len: jax.Array,
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    B = token.shape[0]
+    x = jnp.take(params["embedding"], token, axis=0)
+    max_pos = params["dec_pos"].shape[0]
+    pos_idx = jnp.minimum(cache_len, max_pos - 1)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos_idx, 1, 0).astype(x.dtype)[None]
+
+    def body(h, xs):
+        layer_params, self_cache, cross_kv = xs
+        hh = layer_norm(layer_params["norm1"], h, cfg.norm_eps)
+        y, new_self = attention_decode(
+            layer_params["attn"], hh, cfg, self_cache, cache_len, window=window
+        )
+        h = h + y
+        hh = layer_norm(layer_params["norm_x"], h, cfg.norm_eps)
+        h = h + cross_attention_forward(
+            layer_params["cross"], hh, (cross_kv["k"], cross_kv["v"]), cfg
+        )
+        hh = layer_norm(layer_params["norm2"], h, cfg.norm_eps)
+        h = h + mlp(layer_params["ffn"], hh, "gelu")
+        return h, new_self
+
+    x, new_self = jax.lax.scan(body, x, (params["decoder"], cache["self"], cache["cross"]))
+    new_cache = {"self": new_self, "cross": cache["cross"]}
+    x = layer_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"].astype(x.dtype))
+    return logits, new_cache

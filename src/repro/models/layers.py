@@ -1,0 +1,183 @@
+"""Shared neural-net layers (functional style: ``init_*`` -> params pytree,
+``apply`` functions are pure).
+
+Parameter dictionaries use *conventional key names* (``wq``, ``wk``, ``wv``,
+``wo``, ``w_gate``, ``w_up``, ``w_down``, ``embedding`` ...) which the
+partitioner (:mod:`repro.distributed.partitioning`) matches path-based rules
+against — the model code stays sharding-agnostic.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Params",
+    "rms_norm",
+    "layer_norm",
+    "init_linear",
+    "linear",
+    "init_norm",
+    "init_mlp",
+    "mlp",
+    "rope_frequencies",
+    "apply_rope",
+    "mrope_position_ids",
+    "apply_mrope",
+]
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+# Norms                                                                  #
+# --------------------------------------------------------------------- #
+def init_norm(d: int, dtype=jnp.float32, with_bias: bool = False) -> Params:
+    p: Params = {"scale": jnp.ones((d,), dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rms_norm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# Linear / embedding                                                     #
+# --------------------------------------------------------------------- #
+def init_linear(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    *,
+    bias: bool = False,
+    dtype=jnp.float32,
+    scale: Optional[float] = None,
+) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p: Params = {"kernel": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params: Params, x: jax.Array) -> jax.Array:
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------------- #
+# MLP (SwiGLU / GELU)                                                    #
+# --------------------------------------------------------------------- #
+def init_mlp(
+    key: jax.Array, d_model: int, d_ff: int, *, act: str = "silu", dtype=jnp.float32
+) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu":  # SwiGLU: gate + up + down
+        return {
+            "w_gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+            "w_up": init_linear(k2, d_model, d_ff, dtype=dtype),
+            "w_down": init_linear(k3, d_ff, d_model, dtype=dtype),
+        }
+    return {  # classic 2-matrix MLP (whisper)
+        "w_up": init_linear(k1, d_model, d_ff, bias=True, dtype=dtype),
+        "w_down": init_linear(k2, d_ff, d_model, bias=True, dtype=dtype),
+    }
+
+
+def mlp(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    if "w_gate" in params:
+        g = jax.nn.silu(linear(params["w_gate"], x))
+        u = linear(params["w_up"], x)
+        return linear(params["w_down"], g * u)
+    h = jax.nn.gelu(linear(params["w_up"], x))
+    return linear(params["w_down"], h)
+
+
+# --------------------------------------------------------------------- #
+# RoPE / M-RoPE                                                          #
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse frequencies for rotary embeddings: (head_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    # Pairing convention: split halves (llama/qwen style).
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Rotary embedding.  ``x``: (B, S, H, D); ``positions``: (B, S) int."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (B, S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def mrope_position_ids(
+    batch: int, seq: int, sections: Sequence[int]
+) -> jax.Array:
+    """Text-only M-RoPE positions (3, B, S): all three sections advance with
+    the sequence index (qwen2-vl's behaviour for pure-text spans; the vision
+    frontend stub supplies real (t,h,w) grids for patch spans)."""
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    return jnp.stack([pos] * len(sections), axis=0)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions_3d: jax.Array,
+    sections: Sequence[int],
+    theta: float = 1_000_000.0,
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl, arXiv:2409.12191 §2.1).
+
+    The head-dim frequency bands are partitioned into ``sections`` (t, h, w);
+    each band rotates by its own coordinate stream.  ``positions_3d`` is
+    (3, B, S).  With all three streams equal this reduces to 1-D RoPE.
+    """
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # (D/2,)
+    # Section s owns a contiguous slice of the frequency bands.
+    sec = jnp.asarray(sections)
+    band_section = jnp.repeat(jnp.arange(len(sections)), sec, total_repeat_length=d // 2)
+    pos = positions_3d.astype(jnp.float32)  # (3, B, S)
+    pos_per_band = jnp.take(pos, band_section, axis=0)  # (D/2, ...) -> wrong axis
+    # take along axis 0 gives (D/2, B, S); rearrange to (B, S, D/2)
+    pos_per_band = jnp.moveaxis(pos_per_band, 0, -1)  # (B, S, D/2)
+    ang = pos_per_band * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,219 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434 §2.1).
+
+The KV is compressed into a rank-``kv_lora_rank`` latent ``c_kv`` plus a
+shared RoPE key ``k_rope``; the cache stores only ``(c_kv, k_rope)`` —
+(512 + 64) floats/token for V2-Lite vs 16*2*128 = 4096 for vanilla MHA.
+
+Two decode paths:
+
+* ``absorb=False`` (naive): decompress the whole cache to per-head K/V and
+  run standard attention.  Simple, memory-bandwidth heavy.
+* ``absorb=True``: fold ``W_UK`` into the query and ``W_UV`` into the output
+  projection so attention runs *in the latent space* — the cache is read
+  once at latent width.  This is the paper's inference optimization and our
+  `long-context` default.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.distributed.partitioning import constrain
+from .layers import Params, apply_rope, init_linear, init_norm, linear, rms_norm
+
+__all__ = [
+    "init_mla",
+    "mla_forward",
+    "mla_prefill",
+    "mla_decode",
+    "init_mla_cache",
+]
+
+
+def init_mla(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    r = cfg.kv_lora_rank
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # V2-Lite: queries are not low-rank (q_lora_rank null).
+        "wq": init_linear(ks[0], d, cfg.n_heads * qd, dtype=dtype),
+        # Joint KV down-projection: latent + shared rope key.
+        "w_dkv": init_linear(ks[1], d, r + cfg.qk_rope_head_dim, dtype=dtype),
+        "kv_norm": init_norm(r, dtype),
+        "w_uk": init_linear(ks[2], r, cfg.n_heads * cfg.qk_nope_head_dim, dtype=dtype),
+        "w_uv": init_linear(ks[3], r, cfg.n_heads * cfg.v_head_dim, dtype=dtype),
+        "wo": init_linear(ks[4], cfg.n_heads * cfg.v_head_dim, d, dtype=dtype),
+    }
+
+
+def _compress(params: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """x -> (c_kv normalized, k_rope rotated)."""
+    B, S, _ = x.shape
+    r = cfg.kv_lora_rank
+    dkv = linear(params["w_dkv"], x)
+    c_kv = rms_norm(params["kv_norm"], dkv[..., :r], cfg.norm_eps)  # (B,S,r)
+    k_rope = dkv[..., r:].reshape(B, S, 1, cfg.qk_rope_head_dim)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _queries(params: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    B, S, _ = x.shape
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    q = linear(params["wq"], x).reshape(B, S, cfg.n_heads, qd)
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _expand_kv(params: Params, c_kv: jax.Array, cfg: ModelConfig):
+    B, S, _ = c_kv.shape
+    k_nope = linear(params["w_uk"], c_kv).reshape(B, S, cfg.n_heads, cfg.qk_nope_head_dim)
+    v = linear(params["w_uv"], c_kv).reshape(B, S, cfg.n_heads, cfg.v_head_dim)
+    return k_nope, v
+
+
+def mla_forward(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Train/prefill forward (decompressed attention)."""
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_kv, k_rope = _compress(params, x, cfg, positions)
+    k_nope, v = _expand_kv(params, c_kv, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, cfg.n_heads, cfg.qk_rope_head_dim))],
+        axis=-1,
+    )
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    out = flash_attention(q, k, v, causal=True, window=window, scale=scale)
+    return linear(params["wo"], out.reshape(B, S, -1))
+
+
+def init_mla_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: Dict[str, jax.Array],
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, _ = x.shape
+    c_kv, k_rope = _compress(params, x, cfg, positions)
+    new_cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)
+        ),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), (0, 0, 0)
+        ),
+    }
+    y = mla_forward(params, x, cfg, positions, window=window)
+    return y, new_cache
+
+
+def mla_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ModelConfig,
+    cache: Dict[str, jax.Array],
+    cache_len: jax.Array,
+    *,
+    absorb: bool = True,
+    window: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    r = cfg.kv_lora_rank
+    T = cache["c_kv"].shape[1]  # capacity; == window for SWA ring buffers
+    positions = jnp.broadcast_to(cache_len[None, None], (B, 1)).astype(jnp.int32)
+    q_nope, q_rope = _queries(params, x, cfg, positions)  # (B,1,H,·)
+    c_kv, k_rope = _compress(params, x, cfg, positions)
+    slot = jax.lax.rem(cache_len, jnp.int32(T))
+    zero = jnp.zeros((), jnp.int32)
+    new_cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (zero, slot, zero)
+        ),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), (zero, slot, zero)
+        ),
+    }
+    length = jnp.minimum(cache_len + 1, T)
+    valid = (jnp.arange(T)[None, :] < length)  # (1, T) -> broadcast (B, T)
+    if window > 0 and T > window:
+        valid = valid & (jnp.arange(T)[None, :] >= jnp.maximum(length - window, 0))
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    # Latent cache is read at its stored dtype; matmuls accumulate in f32
+    # via preferred_element_type (no whole-cache f32 copy — §Perf H2/H3).
+    ckv = new_cache["c_kv"]  # (B,T,r)
+    krp = new_cache["k_rope"]  # (B,T,rope)
+    f32 = jnp.float32
+
+    if absorb:
+        # Absorbed: q' = q_nope @ W_UK^T per head -> latent-space logits.
+        w_uk = params["w_uk"]["kernel"].reshape(r, cfg.n_heads, cfg.qk_nope_head_dim)
+        q_lat = jnp.einsum(
+            "bhe,rhe->bhr", q_nope[:, 0], w_uk, preferred_element_type=f32
+        )
+        # Match the cache's latent sharding so the contraction partial-sums
+        # (a small logits all-reduce) instead of all-gathering the cache.
+        q_lat = constrain(q_lat, ("batch", None, "kv_latent"))
+        logits = jnp.einsum(
+            "bhr,btr->bht", q_lat.astype(ckv.dtype), ckv, preferred_element_type=f32
+        )
+        logits = logits + jnp.einsum(
+            "bhe,bte->bht",
+            q_rope[:, 0].astype(krp.dtype),
+            krp,
+            preferred_element_type=f32,
+        )
+        logits = jnp.where(valid[:, None, :], logits * scale, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum(
+            "bht,btr->bhr", probs.astype(ckv.dtype), ckv, preferred_element_type=f32
+        )
+        w_uv = params["w_uv"]["kernel"].reshape(r, cfg.n_heads, cfg.v_head_dim)
+        out = jnp.einsum(
+            "bhr,rhv->bhv", o_lat, w_uv.astype(f32), preferred_element_type=f32
+        )
+    else:
+        k_nope, vv = _expand_kv(params, new_cache["c_kv"].astype(x.dtype), cfg)
+        k = jnp.concatenate(
+            [
+                k_nope,
+                jnp.broadcast_to(
+                    krp[:, :, None, :], (B, T, cfg.n_heads, cfg.qk_rope_head_dim)
+                ).astype(x.dtype),
+            ],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)[:, 0].astype(jnp.float32)
+        logits = jnp.einsum("bhd,bthd->bht", q, k.astype(jnp.float32)) * scale
+        logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bht,bthv->bhv", probs, vv.astype(jnp.float32))
+
+    y = linear(params["wo"], out.reshape(B, 1, -1).astype(x.dtype))
+    return y, new_cache

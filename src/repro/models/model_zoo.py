@@ -1,0 +1,169 @@
+"""Unified model API over all assigned architectures.
+
+``init_params`` / ``forward`` / ``prefill`` / ``decode`` dispatch between the
+decoder-only stack (:mod:`repro.models.transformer`) and the whisper
+encoder-decoder (:mod:`repro.models.encdec`).  ``input_specs`` builds
+ShapeDtypeStruct stand-ins for every model input of a given benchmark shape
+(the dry-run never allocates real tensors), and ``reduced_config`` produces
+the CPU smoke-test variant of each family (2 layers, d_model<=512, <=4
+experts — per the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import InputShape, ModelConfig, MoEConfig, SSMConfig
+from . import encdec as ed
+from . import transformer as tf
+
+__all__ = [
+    "reduced_config",
+    "init_params",
+    "init_cache",
+    "forward",
+    "prefill",
+    "decode",
+    "input_specs",
+    "cache_len_for",
+]
+
+
+# --------------------------------------------------------------------- #
+# Reduced (smoke) variants                                               #
+# --------------------------------------------------------------------- #
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """2 layers, d_model<=512, <=4 experts; same family wiring."""
+    kw: Dict[str, Any] = dict(
+        n_layers=2,
+        d_model=256,
+        d_ff=512 if cfg.d_ff else 0,
+        vocab_size=1000,
+        head_dim=64,
+        n_heads=4 if cfg.n_heads else 0,
+        n_kv_heads=2 if cfg.n_kv_heads else 0,
+        meta_tokens=8 if cfg.meta_tokens else 0,
+    )
+    if cfg.arch_type in ("ssm", "hybrid"):
+        kw["ssm"] = SSMConfig(
+            d_state=16, d_conv=4, expand=2, head_dim=32, n_groups=1, chunk_size=32
+        )
+    if cfg.moe.enabled:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=4,
+            top_k=2,
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            d_ff_expert=128,
+            d_ff_shared=128,
+            # E/k = 2: cf >= 2 makes dispatch dropless, so decode (tiny T)
+            # and full forward (large T) stay numerically comparable.
+            capacity_factor=2.5,
+        )
+        kw["first_k_dense_layers"] = min(cfg.first_k_dense_layers, 1)
+        kw["d_ff"] = 512
+    if cfg.kv_lora_rank:
+        kw.update(kv_lora_rank=64, qk_rope_head_dim=16, qk_nope_head_dim=32, v_head_dim=32)
+    if cfg.arch_type == "encdec":
+        kw.update(n_encoder_layers=2, encoder_seq=64)
+    if cfg.global_attn_layers:
+        kw["global_attn_layers"] = (0,)
+    if cfg.sliding_window:
+        kw["sliding_window"] = 32
+    if cfg.mrope_sections:
+        kw["mrope_sections"] = (8, 12, 12)  # sums to head_dim/2 = 32
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **kw)
+
+
+# --------------------------------------------------------------------- #
+# Unified API                                                            #
+# --------------------------------------------------------------------- #
+def init_params(key: jax.Array, cfg: ModelConfig, *, dtype=jnp.float32, max_dec_len: int = 4096):
+    if cfg.arch_type == "encdec":
+        return ed.init_encdec(key, cfg, dtype=dtype, max_dec_len=max_dec_len)
+    return tf.init_lm(key, cfg, dtype=dtype)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16, decode_long: bool = False
+):
+    if cfg.arch_type == "encdec":
+        cap = min(max_len, 8192) if decode_long else max_len
+        return ed.init_encdec_cache(cfg, batch, cap, dtype)
+    return tf.init_lm_cache(cfg, batch, max_len, dtype=dtype, decode_long=decode_long)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *, remat: bool = False):
+    """Training/eval forward -> (logits, aux)."""
+    if cfg.arch_type == "encdec":
+        return ed.encdec_forward(params, cfg, batch["frames"], batch["tokens"])
+    if cfg.frontend_stub:  # vlm: precomputed patch/frame embeddings
+        return tf.lm_forward(
+            params, cfg, inputs_embeds=batch["embeds"], remat=remat
+        )
+    return tf.lm_forward(params, cfg, batch["tokens"], remat=remat)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array], cache, *, decode_long=False):
+    if cfg.arch_type == "encdec":
+        return ed.encdec_prefill(params, cfg, batch["frames"], batch["tokens"], cache)
+    if cfg.frontend_stub:
+        return tf.lm_prefill(
+            params, cfg, caches=cache, inputs_embeds=batch["embeds"], decode_long=decode_long
+        )
+    return tf.lm_prefill(params, cfg, batch["tokens"], cache, decode_long=decode_long)
+
+
+def decode(params, cfg: ModelConfig, token, cache, cache_len, *, decode_long=False):
+    if cfg.arch_type == "encdec":
+        window = 8192 if decode_long else 0
+        return ed.encdec_decode(params, cfg, token, cache, cache_len, window=window)
+    return tf.lm_decode(params, cfg, token, cache, cache_len, decode_long=decode_long)
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Cache capacity for a decode shape (meta tokens included)."""
+    return shape.seq_len + cfg.meta_tokens
+
+
+# --------------------------------------------------------------------- #
+# ShapeDtypeStruct inputs for the dry-run                                 #
+# --------------------------------------------------------------------- #
+def input_specs(
+    cfg: ModelConfig, shape: InputShape, *, dtype=jnp.bfloat16
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Stand-ins for every model input of one benchmark shape.
+
+    train: {tokens/embeds/frames, labels}; prefill: model inputs only;
+    decode: {token} (cache/params specs are built separately).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.arch_type == "encdec":
+            return {
+                "frames": sds((B, cfg.encoder_seq, cfg.d_model), dtype),
+                "tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32),
+            }
+        if cfg.frontend_stub:
+            return {
+                "embeds": sds((B, S, cfg.d_model), dtype),
+                "labels": sds((B, S), jnp.int32),
+            }
+        return {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.arch_type == "encdec":
+            return {
+                "frames": sds((B, cfg.encoder_seq, cfg.d_model), dtype),
+                "tokens": sds((B, S), jnp.int32),
+            }
+        if cfg.frontend_stub:
+            return {"embeds": sds((B, S, cfg.d_model), dtype)}
+        return {"tokens": sds((B, S), jnp.int32)}
+    # decode: ONE new token against a cache of seq_len.
+    return {"token": sds((B, 1), jnp.int32)}

@@ -1,0 +1,173 @@
+"""Mamba2 block (SSD, arXiv:2405.21060) — attention-free token mixer.
+
+Layout follows the reference implementation: a fused input projection to
+``(z, x, B, C, dt)``, a short depthwise causal conv over ``(x, B, C)``, the
+SSD scan (Pallas kernel on TPU / jnp oracle on CPU), a per-head skip ``D``,
+a gated RMSNorm and the output projection.
+
+Decode carries two states per layer: the conv window ``(B, d_conv-1, cdim)``
+and the SSM state ``(B, H, P, N)`` — constant-size, independent of context
+length (why ``long_500k`` is natively sub-quadratic for this family).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.kernels.ssd_scan.ops import ssd_decode_step, ssd_scan
+from .layers import Params, init_linear, init_norm, linear, rms_norm
+
+__all__ = ["init_mamba", "mamba_forward", "mamba_prefill", "mamba_decode", "init_mamba_cache"]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    sc = cfg.ssm
+    di = sc.d_inner(cfg.d_model)
+    nh = sc.n_heads(cfg.d_model)
+    cdim = di + 2 * sc.n_groups * sc.d_state
+    return di, nh, sc.head_dim, sc.d_state, cdim
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    sc = cfg.ssm
+    d = cfg.d_model
+    di, nh, hp, n, cdim = _dims(cfg)
+    k_in, k_conv, k_dt, k_a, k_out = jax.random.split(key, 5)
+    # dt bias: softplus^-1 of log-uniform [dt_min, dt_max] (ref init).
+    u = jax.random.uniform(k_dt, (nh,))
+    dt = jnp.exp(u * (math.log(sc.dt_max) - math.log(sc.dt_min)) + math.log(sc.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    lo, hi = sc.a_init_range
+    a = jax.random.uniform(k_a, (nh,), minval=lo, maxval=hi)
+    return {
+        "in_proj": init_linear(k_in, d, 2 * di + 2 * sc.n_groups * n + nh, dtype=dtype),
+        "conv_w": (jax.random.normal(k_conv, (cdim, sc.d_conv)) / math.sqrt(sc.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_norm": init_norm(di, dtype),
+        "out_proj": init_linear(k_out, di, d, dtype=dtype),
+    }
+
+
+def _split_in(proj: jax.Array, cfg: ModelConfig):
+    di, nh, hp, n, cdim = _dims(cfg)
+    g = cfg.ssm.n_groups
+    z = proj[..., :di]
+    xBC = proj[..., di : di + cdim]
+    dt = proj[..., di + cdim :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  xBC: (B, L, C); w: (C, K)."""
+    B, L, C = xBC.shape
+    K = w.shape[1]
+    lhs = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    rhs = jnp.transpose(w)[:, None, :]  # (K, 1, C)  — WIO layout
+    out = jax.lax.conv_general_dilated(
+        lhs.astype(jnp.float32),
+        rhs.astype(jnp.float32),
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    return (out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _ssd_inputs(params: Params, x: jax.Array, cfg: ModelConfig):
+    """Project + conv; returns (z, xh, dt, Bm, Cm) with xh: (B,L,H,P)."""
+    di, nh, hp, n, cdim = _dims(cfg)
+    g = cfg.ssm.n_groups
+    B, L, _ = x.shape
+    proj = linear(params["in_proj"], x)
+    z, xBC, dt = _split_in(proj, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    xs = xBC[..., :di].reshape(B, L, nh, hp)
+    Bm = xBC[..., di : di + g * n].reshape(B, L, g, n)
+    Cm = xBC[..., di + g * n :].reshape(B, L, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    return z, xs, dt, Bm, Cm, xBC
+
+
+def mamba_forward(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    di, nh, hp, n, cdim = _dims(cfg)
+    B, L, _ = x.shape
+    z, xs, dt, Bm, Cm, _ = _ssd_inputs(params, x, cfg)
+    A = -jnp.exp(params["A_log"])
+    y, _ = ssd_scan(xs, dt, A, Bm, Cm, chunk=cfg.ssm.chunk_size)
+    y = y + xs * params["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, L, di)
+    y = rms_norm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return linear(params["out_proj"], y)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    di, nh, hp, n, cdim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, cdim), dtype),
+        "ssm": jnp.zeros((batch, nh, hp, n), jnp.float32),
+    }
+
+
+def mamba_prefill(
+    params: Params, x: jax.Array, cfg: ModelConfig, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    di, nh, hp, n, cdim = _dims(cfg)
+    B, L, _ = x.shape
+    z, xs, dt, Bm, Cm, xBC = _ssd_inputs(params, x, cfg)
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd_scan(xs, dt, A, Bm, Cm, chunk=cfg.ssm.chunk_size)
+    y = y + xs * params["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, L, di)
+    y = rms_norm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    # Conv state needs the *pre-conv* activations of the last K-1 steps.
+    proj = linear(params["in_proj"], x)
+    _, xBC_raw, _ = _split_in(proj, cfg)
+    K = cfg.ssm.d_conv
+    tail = xBC_raw[:, -(K - 1) :, :]
+    new_cache = {
+        "conv": tail.astype(cache["conv"].dtype),
+        "ssm": final_state.astype(cache["ssm"].dtype),
+    }
+    return linear(params["out_proj"], y), new_cache
+
+
+def mamba_decode(
+    params: Params, x: jax.Array, cfg: ModelConfig, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step.  x: (B, 1, d)."""
+    di, nh, hp, n, cdim = _dims(cfg)
+    g = cfg.ssm.n_groups
+    B = x.shape[0]
+    proj = linear(params["in_proj"], x[:, 0])  # (B, ·)
+    z = proj[..., :di]
+    xBC_t = proj[..., di : di + cdim]
+    dt_t = proj[..., di + cdim :]
+    # Conv over the rolled window [cache..., new].
+    window = jnp.concatenate([cache["conv"].astype(xBC_t.dtype), xBC_t[:, None, :]], axis=1)
+    conv_out = jnp.einsum(
+        "bkc,ck->bc", window.astype(jnp.float32), params["conv_w"].astype(jnp.float32)
+    ) + params["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(x.dtype)
+    xs = xBC[..., :di].reshape(B, nh, hp)
+    B_t = xBC[..., di : di + g * n].reshape(B, g, n)
+    C_t = xBC[..., di + g * n :].reshape(B, g, n)
+    dt_t = jax.nn.softplus(dt_t.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_state = ssd_decode_step(cache["ssm"], xs, dt_t, A, B_t, C_t)
+    y = y + xs * params["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B, di)
+    y = rms_norm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    new_cache = {
+        "conv": window[:, 1:].astype(cache["conv"].dtype),
+        "ssm": new_state.astype(cache["ssm"].dtype),
+    }
+    return linear(params["out_proj"], y)[:, None, :], new_cache

@@ -1,0 +1,277 @@
+"""Decoder-only language model with scan-over-layers.
+
+Consecutive layers with identical :class:`LayerSpec` are stacked into a
+*group* whose parameters (and caches) carry a leading layer axis; each group
+runs under one ``jax.lax.scan``.  This keeps the lowered HLO size (and
+compile time) independent of depth — essential for dry-running an 80-layer
+72B model on 512 emulated devices.
+
+Heterogeneous stacks (deepseek's leading dense layer, hymba's global-attn
+layers) simply produce several groups.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.distributed.partitioning import constrain
+from .blocks import (
+    LayerSpec,
+    block_decode,
+    block_forward,
+    block_prefill,
+    init_block,
+    init_block_cache,
+)
+from .layers import Params, init_norm, mrope_position_ids, rms_norm
+
+__all__ = [
+    "layer_specs",
+    "group_specs",
+    "init_lm",
+    "init_lm_cache",
+    "lm_forward",
+    "lm_prefill",
+    "lm_decode",
+]
+
+
+# --------------------------------------------------------------------- #
+# Layer layout                                                           #
+# --------------------------------------------------------------------- #
+def layer_specs(cfg: ModelConfig, *, decode_long: bool = False) -> Tuple[LayerSpec, ...]:
+    """Per-layer specs for an architecture.  ``decode_long`` swaps full
+    attention for the sliding-window variant (the long_500k policy,
+    DESIGN.md §4)."""
+    specs: List[LayerSpec] = []
+    for i in range(cfg.n_layers):
+        window = cfg.sliding_window
+        if cfg.global_attn_layers and i in cfg.global_attn_layers:
+            window = 0
+        if decode_long and window == 0 and cfg.arch_type not in ("ssm",):
+            window = 8192  # forced SWA for long decode (DESIGN.md §4)
+        if cfg.arch_type == "ssm":
+            specs.append(LayerSpec(mixer="ssm", ffn="none", window=0))
+        elif cfg.arch_type == "hybrid":
+            specs.append(LayerSpec(mixer="hybrid", ffn="dense", window=window))
+        elif cfg.arch_type == "moe":
+            mixer = "mla" if cfg.kv_lora_rank else "attn"
+            ffn = "dense" if i < cfg.first_k_dense_layers else "moe"
+            specs.append(LayerSpec(mixer=mixer, ffn=ffn, window=window))
+        else:  # dense | vlm
+            specs.append(LayerSpec(mixer="attn", ffn="dense", window=window))
+    return tuple(specs)
+
+
+def group_specs(specs: Sequence[LayerSpec]) -> Tuple[Tuple[LayerSpec, int], ...]:
+    """Run-length encode consecutive identical specs into scan groups."""
+    groups: List[Tuple[LayerSpec, int]] = []
+    for s in specs:
+        if groups and groups[-1][0] == s:
+            groups[-1] = (s, groups[-1][1] + 1)
+        else:
+            groups.append((s, 1))
+    return tuple(groups)
+
+
+# --------------------------------------------------------------------- #
+# Init                                                                   #
+# --------------------------------------------------------------------- #
+def init_lm(
+    key: jax.Array,
+    cfg: ModelConfig,
+    *,
+    dtype=jnp.float32,
+    decode_long: bool = False,
+) -> Params:
+    specs = layer_specs(cfg, decode_long=decode_long)
+    groups = group_specs(specs)
+    k_embed, k_head, k_meta, *k_groups = jax.random.split(key, 3 + len(groups))
+    V, d = cfg.padded_vocab, cfg.d_model
+    params: Params = {
+        "embedding": (jax.random.normal(k_embed, (V, d)) * 0.02).astype(dtype),
+        "final_norm": init_norm(d, dtype),
+        "groups": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (d, V)) * 0.02).astype(dtype)
+    if cfg.meta_tokens:
+        params["meta_tokens"] = (
+            jax.random.normal(k_meta, (cfg.meta_tokens, d)) * 0.02
+        ).astype(dtype)
+    for (spec, count), kg in zip(groups, k_groups):
+        stacked = jax.vmap(lambda k: init_block(k, cfg, spec, dtype))(
+            jax.random.split(kg, count)
+        )
+        params["groups"].append(stacked)
+    return params
+
+
+def init_lm_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    *,
+    dtype=jnp.bfloat16,
+    decode_long: bool = False,
+) -> List[Dict[str, Any]]:
+    specs = layer_specs(cfg, decode_long=decode_long)
+    groups = group_specs(specs)
+    caches: List[Dict[str, Any]] = []
+    for spec, count in groups:
+        # Sliding-window layers only need a window-sized cache.
+        layer_len = min(max_len, spec.window) if spec.window else max_len
+        one = init_block_cache(cfg, spec, batch, layer_len, dtype)
+        caches.append(jax.tree.map(lambda a: jnp.stack([a] * count), one))
+    return caches
+
+
+# --------------------------------------------------------------------- #
+# Forward paths                                                          #
+# --------------------------------------------------------------------- #
+def _positions(cfg: ModelConfig, B: int, S: int) -> jax.Array:
+    if cfg.mrope_sections:
+        return mrope_position_ids(B, S, cfg.mrope_sections)
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
+def _embed(params: Params, cfg: ModelConfig, tokens=None, inputs_embeds=None):
+    if inputs_embeds is not None:
+        x = inputs_embeds
+    else:
+        x = jnp.take(params["embedding"], tokens, axis=0)
+    return x
+
+
+def _logits(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"].astype(x.dtype))
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return logits
+
+
+def lm_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,  # (B, S) int32
+    *,
+    inputs_embeds: Optional[jax.Array] = None,  # (B, S, d) frontend stub
+    positions: Optional[jax.Array] = None,
+    remat: bool = False,
+    decode_long: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full forward; returns ``(logits, aux)`` with router aux losses."""
+    x = _embed(params, cfg, tokens, inputs_embeds)
+    B, S = x.shape[:2]
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta_tokens"].astype(x.dtype), (B, cfg.meta_tokens, x.shape[-1])
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+        S = S + cfg.meta_tokens
+    if positions is None:
+        positions = _positions(cfg, B, S)
+    x = constrain(x, ("batch", "seq", None))
+
+    specs = layer_specs(cfg, decode_long=decode_long)
+    groups = group_specs(specs)
+    lb = jnp.zeros((), jnp.float32)
+    zl = jnp.zeros((), jnp.float32)
+    for (spec, count), stacked in zip(groups, params["groups"]):
+        def body(carry, layer_params, _spec=spec):
+            h, l, z = carry
+            h = constrain(h, ("batch", "seq", None))
+            y, dl, dz = block_forward(layer_params, h, cfg, _spec, positions)
+            return (y, l + dl, z + dz), None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        (x, lb, zl), _ = jax.lax.scan(body, (x, lb, zl), stacked)
+
+    if cfg.meta_tokens:
+        x = x[:, cfg.meta_tokens :]
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits, {"lb_loss": lb, "z_loss": zl}
+
+
+def lm_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    caches: Optional[List[Dict[str, Any]]] = None,
+    *,
+    inputs_embeds: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    decode_long: bool = False,
+) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+    """Prefill the caches; returns ``(last_token_logits, new_caches)``.
+
+    Meta tokens (hymba) are prepended here exactly as in ``lm_forward``; the
+    cache capacity must therefore cover ``S + cfg.meta_tokens`` slots and the
+    engine's ``cache_len`` starts at that value."""
+    x = _embed(params, cfg, tokens, inputs_embeds)
+    B, S = x.shape[:2]
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta_tokens"].astype(x.dtype), (B, cfg.meta_tokens, x.shape[-1])
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+        S = S + cfg.meta_tokens
+    if positions is None:
+        positions = _positions(cfg, B, S)
+    x = constrain(x, ("batch", "seq", None))
+    specs = layer_specs(cfg, decode_long=decode_long)
+    groups = group_specs(specs)
+    new_caches: List[Dict[str, Any]] = []
+    for (spec, count), stacked, cache in zip(groups, params["groups"], caches):
+        def body(h, xs, _spec=spec):
+            layer_params, layer_cache = xs
+            h = constrain(h, ("batch", "seq", None))
+            y, new_cache = block_prefill(layer_params, h, cfg, _spec, positions, layer_cache)
+            return y, new_cache
+
+        x, updated = jax.lax.scan(body, x, (stacked, cache))
+        new_caches.append(updated)
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits, new_caches
+
+
+def lm_decode(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1) int32
+    caches: List[Dict[str, Any]],
+    cache_len: jax.Array,  # scalar int32
+    *,
+    decode_long: bool = False,
+) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+    """One decode step; returns ``(logits, new_caches)``."""
+    x = _embed(params, cfg, token)
+    x = constrain(x, ("batch", None, None))
+    specs = layer_specs(cfg, decode_long=decode_long)
+    groups = group_specs(specs)
+    new_caches: List[Dict[str, Any]] = []
+    for (spec, count), stacked, cache in zip(groups, params["groups"], caches):
+        def body(h, xs, _spec=spec):
+            layer_params, layer_cache = xs
+            y, new_cache = block_decode(layer_params, h, cfg, _spec, layer_cache, cache_len)
+            return y, new_cache
+
+        x, updated = jax.lax.scan(body, x, (stacked, cache))
+        new_caches.append(updated)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits, new_caches

@@ -1,0 +1,101 @@
+"""Serving engine: jit'd prefill / decode steps + a simple generator.
+
+``make_serve_step`` builds exactly the function the multi-pod dry-run lowers
+for the decode shapes (``decode_32k``, ``long_500k``): ONE new token against
+a KV cache of ``seq_len``, returning sampled tokens and updated caches.
+Batch padding buckets keep the jit cache small under the Anveshak
+scheduler's *dynamic* batch sizes (TPU adaptation, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import decode, forward, init_cache, init_params, prefill
+from .sampling import sample_tokens
+
+__all__ = ["make_serve_step", "make_prefill_step", "Generator", "bucket_for"]
+
+
+def bucket_for(n: int, buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128)) -> int:
+    """Smallest bucket >= n (jit cache friendliness for dynamic batches)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def make_serve_step(
+    cfg: ModelConfig,
+    *,
+    decode_long: bool = False,
+    greedy: bool = True,
+    temperature: float = 1.0,
+):
+    """(params, token, caches, cache_len, rng) -> (next_token, caches)."""
+
+    def serve_step(params, token, caches, cache_len, rng):
+        logits, new_caches = decode(
+            params, cfg, token, caches, cache_len, decode_long=decode_long
+        )
+        next_token = sample_tokens(
+            logits[:, -1], rng, greedy=greedy, temperature=temperature,
+            vocab_size=cfg.vocab_size,
+        )
+        return next_token[:, None], new_caches
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, decode_long: bool = False):
+    def prefill_step(params, batch, caches):
+        return prefill(params, cfg, batch, caches, decode_long=decode_long)
+
+    return prefill_step
+
+
+class Generator:
+    """Single-host convenience wrapper: prefill + greedy decode loop."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, max_len: int = 512,
+                 cache_dtype=jnp.float32) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def generate(
+        self,
+        prompts: jax.Array,  # (B, S) int32
+        max_new_tokens: int = 32,
+        *,
+        frames: Optional[jax.Array] = None,
+        seed: int = 0,
+    ) -> jax.Array:
+        B, S = prompts.shape
+        cfg = self.cfg
+        caches = init_cache(
+            cfg, B, S + max_new_tokens + cfg.meta_tokens + 1, dtype=self.cache_dtype
+        )
+        batch: Dict[str, jax.Array] = {"tokens": prompts}
+        if cfg.arch_type == "encdec":
+            assert frames is not None, "whisper needs encoder frames"
+            batch["frames"] = frames
+        logits, caches = self._prefill(self.params, batch, caches)
+        rng = jax.random.PRNGKey(seed)
+        token = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+        out = [token]
+        cache_len = jnp.asarray(S + cfg.meta_tokens, jnp.int32)
+        for i in range(max_new_tokens - 1):
+            rng, sub = jax.random.split(rng)
+            token, caches = self._step(self.params, token, caches, cache_len, sub)
+            cache_len = cache_len + 1
+            out.append(token)
+        return jnp.concatenate(out, axis=1)

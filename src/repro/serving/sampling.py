@@ -1,0 +1,31 @@
+"""Token sampling: greedy / temperature / top-k, padded-vocab aware."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_tokens"]
+
+
+def sample_tokens(
+    logits: jax.Array,  # (B, V)
+    rng: jax.Array,
+    *,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    vocab_size: Optional[int] = None,
+) -> jax.Array:
+    V = logits.shape[-1]
+    if vocab_size is not None and vocab_size < V:
+        logits = jnp.where(jnp.arange(V) >= vocab_size, -jnp.inf, logits)
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / jnp.maximum(temperature, 1e-6)
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,211 @@
+"""Anveshak-scheduled serving: the paper's runtime knobs in front of jit'd
+model steps.
+
+This is where the paper's contribution becomes a first-class feature of the
+JAX stack: a :class:`ServedStage` wraps one jit-compiled batched step (VA
+embedding, CR re-id, LM decode...) with
+
+* a **completion budget** (:class:`TaskBudget`) updated by accept/reject
+  signals,
+* the paper's **three drop points** around the device step, and
+* the **dynamic deadline batcher** (§4.4) whose ``xi(b)`` cost model is
+  *calibrated by timing the compiled step* on the padding buckets —
+  replacing the paper's empirical benchmarking table.
+
+Batches are padded to the bucket sizes so XLA recompilation never happens on
+the serving path (TPU adaptation of the paper's arbitrary batch sizes).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batching import DynamicBatcher, PendingEvent
+from repro.core.budget import TaskBudget
+from repro.core.dropping import drop_before_exec, drop_before_queuing, drop_before_transmit
+from repro.core.events import Event, EventHeader, EventRecord, new_event_id
+
+__all__ = ["StageRequest", "StageResult", "ServedStage", "calibrate_xi"]
+
+
+@dataclass
+class StageRequest:
+    """One unit of work (e.g. a camera frame's features)."""
+
+    payload: np.ndarray
+    source_time: float
+    event_id: int = field(default_factory=new_event_id)
+    avoid_drop: bool = False
+
+
+@dataclass
+class StageResult:
+    event_id: int
+    output: Any
+    latency: float
+    batch_size: int
+    dropped: bool = False
+
+
+def calibrate_xi(
+    step_fn: Callable[[np.ndarray], Any],
+    payload_shape: Sequence[int],
+    buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    repeats: int = 3,
+) -> Callable[[int], float]:
+    """Measure the compiled step on each bucket; return interpolating xi(b).
+
+    Replaces the paper's offline benchmarking: on TPU the compiled cost is
+    stable, so a few timed calls per bucket give a reliable batch cost model.
+    """
+    times: List[Tuple[int, float]] = []
+    for b in buckets:
+        x = np.zeros((b, *payload_shape), np.float32)
+        step_fn(x)  # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(step_fn(x))
+        times.append((b, (time.perf_counter() - t0) / repeats))
+    bs = np.array([b for b, _ in times], np.float64)
+    ts = np.array([t for _, t in times], np.float64)
+
+    def xi(b: int) -> float:
+        return float(np.interp(b, bs, ts))
+
+    return xi
+
+
+class ServedStage:
+    """One pipeline stage: budgeted, batched, droppable jit'd step."""
+
+    def __init__(
+        self,
+        name: str,
+        step_fn: Callable[[np.ndarray], Any],  # batched device step
+        xi: Callable[[int], float],
+        *,
+        gamma: float = 15.0,
+        m_max: int = 32,
+        buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+        drops_enabled: bool = True,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self.name = name
+        self.step_fn = step_fn
+        self.xi = xi
+        self.gamma = float(gamma)
+        self.buckets = tuple(buckets)
+        self.drops_enabled = drops_enabled
+        self.clock = clock
+        self.budget = TaskBudget(name, xi, m_max=m_max)
+        self.batcher = DynamicBatcher(xi, m_max=m_max)
+        self.stats = {"arrived": 0, "dropped": 0, "executed": 0, "batches": 0}
+
+    # -- Anveshak signal hooks (downstream stages call these) ----------- #
+    def on_reject(self, event_id: int, epsilon: float, q_bar: float) -> None:
+        from repro.core.events import RejectSignal
+
+        self.budget.on_reject(RejectSignal(event_id, epsilon, q_bar))
+
+    def on_accept(self, event_id: int, epsilon: float, xi_bar: float) -> None:
+        from repro.core.events import AcceptSignal
+
+        self.budget.on_accept(AcceptSignal(event_id, epsilon, xi_bar))
+
+    # -- Request path ---------------------------------------------------- #
+    def submit(self, req: StageRequest) -> Optional[List[StageResult]]:
+        """Drop point 1 + dynamic batching; returns results if a batch ran."""
+        now = self.clock()
+        self.stats["arrived"] += 1
+        beta = self.budget.min_budget() if self.drops_enabled else math.inf
+        if self.drops_enabled and drop_before_queuing(
+            req.source_time, now, self.xi(1), beta, avoid_drop=req.avoid_drop
+        ):
+            self.stats["dropped"] += 1
+            return [StageResult(req.event_id, None, now - req.source_time, 0, dropped=True)]
+        ev = Event(
+            header=EventHeader(
+                event_id=req.event_id,
+                source_arrival=req.source_time,
+                avoid_drop=req.avoid_drop,
+            ),
+            key=req.event_id,
+            value=req.payload,
+        )
+        pe = PendingEvent(event=ev, arrival=now, deadline=req.source_time + beta)
+        if math.isinf(beta):  # bootstrap: streaming (paper §4.5)
+            return self._execute([pe])
+        batch = self.batcher.offer(pe, now)
+        if batch:
+            return self._execute(batch)
+        return None
+
+    def flush(self) -> Optional[List[StageResult]]:
+        """Submit the open batch if its auto-submit deadline passed."""
+        batch = self.batcher.flush_if_due(self.clock())
+        if batch:
+            return self._execute(batch)
+        return None
+
+    def next_due_time(self) -> float:
+        return self.batcher.next_due_time()
+
+    # -- Execution: drop points 2/3 around the device step --------------- #
+    def _execute(self, batch: List[PendingEvent]) -> List[StageResult]:
+        now = self.clock()
+        beta = self.budget.min_budget() if self.drops_enabled else math.inf
+        b = len(batch)
+        tuples = [
+            (pe.event.header.source_arrival, pe.arrival, now - pe.arrival, pe.event)
+            for pe in batch
+        ]
+        if self.drops_enabled:
+            retained, dropped = drop_before_exec(tuples, self.xi(b), beta)
+        else:
+            retained, dropped = [t[3] for t in tuples], []
+        results: List[StageResult] = []
+        for ev in dropped:
+            self.stats["dropped"] += 1
+            results.append(
+                StageResult(ev.event_id, None, now - ev.header.source_arrival, 0, dropped=True)
+            )
+        if not retained:
+            return results
+        pe_by_id = {pe.event.event_id: pe for pe in batch}
+        m = len(retained)
+        # Pad to the bucket so XLA reuses the compiled executable.
+        bucket = next((x for x in self.buckets if m <= x), self.buckets[-1])
+        payloads = np.stack([ev.value for ev in retained])
+        if bucket > m:
+            pad = np.zeros((bucket - m, *payloads.shape[1:]), payloads.dtype)
+            payloads = np.concatenate([payloads, pad])
+        out = jax.device_get(self.step_fn(payloads))
+        end = self.clock()
+        exec_dur = end - now
+        self.stats["executed"] += m
+        self.stats["batches"] += 1
+        for ev in retained:
+            pe = pe_by_id[ev.event_id]
+            u = pe.arrival - ev.header.source_arrival
+            q = now - pe.arrival
+            pi = q + exec_dur
+            self.budget.record(
+                ev.event_id, EventRecord(departure=u + pi, queuing=q, batch_size=m, xi=exec_dur)
+            )
+            idx = retained.index(ev)
+            row = jax.tree.map(lambda a: a[idx], out)
+            if self.drops_enabled and drop_before_transmit(
+                0.0, u, pi, beta, avoid_drop=ev.header.avoid_drop
+            ):
+                self.stats["dropped"] += 1
+                results.append(StageResult(ev.event_id, None, u + pi, m, dropped=True))
+            else:
+                results.append(StageResult(ev.event_id, row, u + pi, m))
+        return results

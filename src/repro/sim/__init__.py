@@ -1,0 +1,11 @@
+"""Discrete-event simulation of the many-camera network (paper §5 setup)."""
+
+from .cameras import CameraNetwork, EntityWalk, Frame
+from .scenario import ScenarioConfig, ScenarioResult, TrackingScenario, linear_xi
+from .simulator import DiscreteEventSimulator, NetworkModel
+
+__all__ = [
+    "CameraNetwork", "DiscreteEventSimulator", "EntityWalk", "Frame",
+    "NetworkModel", "ScenarioConfig", "ScenarioResult", "TrackingScenario",
+    "linear_xi",
+]

@@ -1,0 +1,430 @@
+"""End-to-end tracking scenario (paper §5 experiments).
+
+Wires the full Anveshak dataflow over the discrete-event engine:
+
+    cameras --frames--> FC (one per camera, edge hosts)
+      --> VA instances (hash by camera) --> CR instances --> UV sink
+    UV --detections--> TL --(de)activate--> FC states      (feedback)
+
+Execution times are charged through each task's ``xi(b)`` cost model
+(calibrated to the paper: CR ~120 ms/event streaming for App 1, ~63% more
+for App 2), network transits through :class:`NetworkModel`, and all of the
+paper's knobs are exposed: batching strategy, drops on/off, TL strategy,
+entity peak speed ``es``, bandwidth schedule, clock skews.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.batching import DynamicBatcher, NOBBatcher, StaticBatcher
+from repro.core.budget import TaskBudget
+from repro.core.clock import Clock
+from repro.core.events import Event, EventHeader, new_event_id
+from repro.core.pipeline import SinkTask, Task
+from repro.core.roadnet import RoadNetwork, make_road_network
+from repro.core.tracking import (
+    Detection,
+    TLBFS,
+    TLBase,
+    TLProbabilistic,
+    TLWBFS,
+    TrackingLogic,
+)
+from .cameras import CameraNetwork, EntityWalk, Frame
+from .simulator import DiscreteEventSimulator, NetworkModel
+
+__all__ = ["ScenarioConfig", "ScenarioResult", "TrackingScenario", "linear_xi"]
+
+
+def linear_xi(c0: float, c1: float) -> Callable[[int], float]:
+    """Affine batch cost model ``xi(b) = c0 + c1 * b`` (monotone, amortizes
+    the fixed model-invocation overhead — paper §2.2.2)."""
+
+    def xi(b: int) -> float:
+        return c0 + c1 * max(int(b), 0)
+
+    return xi
+
+
+@dataclass
+class ScenarioConfig:
+    # Workload (paper §5.1)
+    num_cameras: int = 1000
+    duration_s: float = 600.0
+    fps: float = 1.0
+    entity_speed_mps: float = 1.0
+    fov_radius_m: float = 6.0
+    seed: int = 0
+    # QoS
+    gamma: float = 15.0
+    epsilon_max: float = 1.0
+    # Tracking logic knob
+    tl: str = "bfs"  # base | bfs | wbfs | prob
+    tl_peak_speed: float = 4.0  # es (m/s)
+    tl_update_period: float = 1.0
+    tl_min_radius_m: float = 0.0
+    # Batching knob
+    batching: str = "dynamic"  # dynamic | static | nob
+    static_batch: int = 1
+    m_max: int = 25
+    # Dropping knob
+    drops_enabled: bool = False
+    avoid_drop_positives: bool = False
+    # Deployment (paper: 10 VA + 10 CR on 10 compute nodes)
+    num_va: int = 10
+    num_cr: int = 10
+    num_nodes: int = 10
+    # Cost models: (c0, c1) of xi(b) = c0 + c1 b, seconds.
+    fc_cost: Tuple[float, float] = (0.0002, 0.0008)
+    va_cost: Tuple[float, float] = (0.020, 0.010)
+    # CR streaming cost xi(1) = 0.067 + 0.053 = 120 ms/event (App 1, §5.2.1);
+    # batched capacity ~19 events/s (§5.2.3).
+    cr_cost: Tuple[float, float] = (0.067, 0.053)
+    # Detection model
+    p_true_positive: float = 0.9
+    # Network dynamics (Fig. 9): t -> bandwidth multiplier.
+    bandwidth_schedule: Optional[Callable[[float], float]] = None
+    # Clock skew per compute node (§4.6.2); source/sink stay at skew 0.
+    node_clock_skews: Optional[Sequence[float]] = None
+
+
+@dataclass
+class ScenarioResult:
+    config: ScenarioConfig
+    active_timeline: List[Tuple[float, int]]
+    latencies: List[Tuple[float, float]]  # (sink time, end-to-end latency)
+    on_time: int
+    delayed: int
+    source_events: int
+    dropped: int
+    drops_by_task: Dict[str, int]
+    batch_sizes: Dict[str, List[int]]
+    positives_generated: int
+    positives_completed: int
+    positives_dropped: int
+    detections_on_time: int
+
+    @property
+    def peak_active(self) -> int:
+        return max((c for _, c in self.active_timeline), default=0)
+
+    @property
+    def median_latency(self) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.median([l for _, l in self.latencies]))
+
+    @property
+    def p99_latency(self) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile([l for _, l in self.latencies], 99))
+
+    @property
+    def delayed_fraction(self) -> float:
+        total = self.on_time + self.delayed
+        return self.delayed / total if total else 0.0
+
+    @property
+    def dropped_fraction(self) -> float:
+        return self.dropped / self.source_events if self.source_events else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "source_events": self.source_events,
+            "on_time": self.on_time,
+            "delayed": self.delayed,
+            "dropped": self.dropped,
+            "delayed_frac": round(self.delayed_fraction, 4),
+            "dropped_frac": round(self.dropped_fraction, 4),
+            "median_latency_s": round(self.median_latency, 3),
+            "p99_latency_s": round(self.p99_latency, 3),
+            "peak_active": self.peak_active,
+            "positives_generated": self.positives_generated,
+            "positives_completed": self.positives_completed,
+        }
+
+
+class TrackingScenario:
+    """Builds and runs one configured tracking experiment."""
+
+    def __init__(self, config: ScenarioConfig) -> None:
+        self.cfg = config
+        self.road = make_road_network(seed=config.seed)
+        self.walk = EntityWalk(
+            self.road,
+            start_vertex=0,
+            speed_mps=config.entity_speed_mps,
+            duration_s=config.duration_s + 60.0,
+            seed=config.seed + 7,
+        )
+        self.cameras = CameraNetwork(
+            self.road,
+            self.walk,
+            num_cameras=config.num_cameras,
+            fov_radius_m=config.fov_radius_m,
+            fps=config.fps,
+            seed=config.seed + 13,
+        )
+        network = NetworkModel()
+        if config.bandwidth_schedule is not None:
+            network.bandwidth_schedule = config.bandwidth_schedule
+        self.sim = DiscreteEventSimulator(network)
+        self._build_tl()
+        self._build_pipeline()
+        self._stats_active: List[Tuple[float, int]] = []
+        self._positives_generated = 0
+        self._positives_completed = 0
+        self._detections_on_time = 0
+        self._pending_detections: List[Detection] = []
+        self._source_events = 0
+
+    # ------------------------------------------------------------------ #
+    def _build_tl(self) -> None:
+        cfg = self.cfg
+        kw = dict(
+            entity_speed=cfg.tl_peak_speed,
+            min_radius_m=cfg.tl_min_radius_m,
+        )
+        cams = self.cameras.camera_vertices
+        if cfg.tl == "base":
+            self.tl: TrackingLogic = TLBase(self.road, cams, **kw)
+        elif cfg.tl == "bfs":
+            self.tl = TLBFS(self.road, cams, fixed_edge_length_m=84.5, **kw)
+        elif cfg.tl == "wbfs":
+            self.tl = TLWBFS(self.road, cams, **kw)
+        elif cfg.tl == "prob":
+            self.tl = TLProbabilistic(self.road, cams, **kw)
+        else:
+            raise ValueError(f"unknown tl strategy {cfg.tl!r}")
+        # The query names a last-seen location (Fig. 1: start with only the
+        # camera covering it active).
+        start_cam = min(
+            cams,
+            key=lambda c: float(
+                np.linalg.norm(
+                    self.road.positions[cams[c]] - self.road.positions[self.walk.vertices[0]]
+                )
+            ),
+        )
+        self.tl.last_seen_camera = start_cam
+        self.tl.last_seen_time = 0.0
+        self.tl.active = self.tl.spotlight(0.0) if self.cfg.tl != "base" else set(cams)
+
+    def _make_batcher(self, xi: Callable[[int], float]):
+        cfg = self.cfg
+        if cfg.batching == "dynamic":
+            return DynamicBatcher(xi, m_max=cfg.m_max)
+        if cfg.batching == "static":
+            return StaticBatcher(xi, batch_size=cfg.static_batch)
+        if cfg.batching == "nob":
+            return NOBBatcher(xi, m_max=cfg.m_max)
+        raise ValueError(f"unknown batching {cfg.batching!r}")
+
+    def _build_pipeline(self) -> None:
+        cfg = self.cfg
+        sim = self.sim
+        skews = list(cfg.node_clock_skews or [0.0] * cfg.num_nodes)
+        if len(skews) < cfg.num_nodes:
+            skews += [0.0] * (cfg.num_nodes - len(skews))
+
+        self.sink = SinkTask(
+            "UV",
+            sim,
+            gamma=cfg.gamma,
+            epsilon_max=cfg.epsilon_max,
+            on_event=self._on_sink_event,
+            clock=Clock(0.0),  # kappa_n == kappa_1 (§4.6.2)
+            node="head",
+        )
+        sim.host_of["UV"] = "head"
+
+        fc_xi = linear_xi(*cfg.fc_cost)
+        va_xi = linear_xi(*cfg.va_cost)
+        cr_xi = linear_xi(*cfg.cr_cost)
+
+        self.cr_tasks: List[Task] = []
+        for i in range(cfg.num_cr):
+            node = f"node{i % cfg.num_nodes}"
+            t = Task(
+                f"CR-{i}",
+                sim,
+                cr_xi,
+                self._make_batcher(cr_xi),
+                logic=self._cr_logic,
+                clock=Clock(skews[i % cfg.num_nodes]),
+                budget=TaskBudget(f"CR-{i}", cr_xi, m_max=cfg.m_max),
+                drops_enabled=cfg.drops_enabled,
+                node=node,
+            )
+            t.output_event_bytes = 256.0  # metadata only (§2.2.3)
+            t.connect(self.sink)
+            t.partitioner = lambda ev: "UV"
+            self.cr_tasks.append(t)
+            sim.host_of[t.name] = node
+
+        self.va_tasks: List[Task] = []
+        for i in range(cfg.num_va):
+            node = f"node{i % cfg.num_nodes}"
+            t = Task(
+                f"VA-{i}",
+                sim,
+                va_xi,
+                self._make_batcher(va_xi),
+                logic=self._va_logic,
+                clock=Clock(skews[i % cfg.num_nodes]),
+                budget=TaskBudget(f"VA-{i}", va_xi, m_max=cfg.m_max),
+                drops_enabled=cfg.drops_enabled,
+                node=node,
+            )
+            for cr in self.cr_tasks:
+                t.connect(cr)
+            t.partitioner = lambda ev: f"CR-{hash(ev.key) % cfg.num_cr}"
+            self.va_tasks.append(t)
+            sim.host_of[t.name] = node
+
+        self.fc_tasks: Dict[int, Task] = {}
+        for cam in self.cameras.camera_vertices:
+            # FC co-located with the camera on an edge host; round-robin the
+            # *downstream* VA by camera id (paper: FCs scheduled round-robin).
+            t = Task(
+                f"FC-{cam}",
+                sim,
+                fc_xi,
+                StaticBatcher(fc_xi, batch_size=1),  # FC logic is simple/edge
+                logic=self._fc_logic,
+                clock=Clock(0.0),  # source clock kappa_1
+                budget=TaskBudget(f"FC-{cam}", fc_xi, m_max=1),
+                drops_enabled=cfg.drops_enabled,
+                node=f"edge{cam}",
+            )
+            for va in self.va_tasks:
+                t.connect(va)
+            t.partitioner = lambda ev: f"VA-{hash(ev.key) % cfg.num_va}"
+            t.state["isActive"] = cam in self.tl.active
+            self.fc_tasks[cam] = t
+            sim.host_of[t.name] = f"edge{cam}"
+
+    # ------------------------------------------------------------------ #
+    # Module logics                                                       #
+    # ------------------------------------------------------------------ #
+    def _fc_logic(self, events: List[Event], state: Dict) -> List[Event]:
+        out = [ev for ev in events if state.get("isActive", True)]
+        # FC may inspect frame content (§2.2.1); a cheap edge-side candidate
+        # filter flags likely positives so no drop point sheds them (§4.3.3).
+        if self.cfg.avoid_drop_positives:
+            for ev in out:
+                if getattr(ev.value, "has_entity", False):
+                    ev.header.avoid_drop = True
+        return out
+
+    def _va_logic(self, events: List[Event], state: Dict) -> List[Event]:
+        # Object detection: every frame yields candidate boxes (1:1).  A
+        # high-confidence candidate match flags the event avoid-drop (§4.3.3)
+        # so the downstream drop points cannot shed it.
+        if self.cfg.avoid_drop_positives:
+            for ev in events:
+                if getattr(ev.value, "has_entity", False):
+                    ev.header.avoid_drop = True
+        return list(events)
+
+    def _cr_logic(self, events: List[Event], state: Dict) -> List[Event]:
+        rng = state.setdefault("rng", np.random.default_rng(self.cfg.seed + 101))
+        out: List[Event] = []
+        for ev in events:
+            frame: Frame = ev.value
+            positive = bool(frame.has_entity) and (
+                float(rng.uniform()) <= self.cfg.p_true_positive
+            )
+            det = Detection(
+                camera_id=frame.camera_id, positive=positive, timestamp=frame.timestamp
+            )
+            if positive and self.cfg.avoid_drop_positives:
+                ev.header.avoid_drop = True
+            out.append(Event(header=ev.header, key=ev.key, value=det))
+        return out
+
+    # ------------------------------------------------------------------ #
+    # Sink + TL feedback                                                  #
+    # ------------------------------------------------------------------ #
+    def _on_sink_event(self, ev: Event, now: float) -> None:
+        det: Detection = ev.value
+        if det.positive:
+            self._positives_completed += 1
+            if now - ev.header.source_arrival <= self.cfg.gamma:
+                self._detections_on_time += 1
+        self._pending_detections.append(det)
+
+    def _tl_tick(self) -> None:
+        now = self.sim.time
+        dets, self._pending_detections = self._pending_detections, []
+        new_active = self.tl.update(dets, now)
+        self._stats_active.append((now, len(new_active)))
+        # Control events to FCs (TL -> FC, §2.2.1) after a control latency.
+        for cam, fc in self.fc_tasks.items():
+            want = cam in new_active
+            if fc.state.get("isActive") != want:
+                self.sim.schedule(
+                    self.sim.network.man_latency_s,
+                    lambda f=fc, w=want: f.state.__setitem__("isActive", w),
+                )
+        if now + self.cfg.tl_update_period <= self.cfg.duration_s:
+            self.sim.schedule(self.cfg.tl_update_period, self._tl_tick)
+
+    # ------------------------------------------------------------------ #
+    # Frame generation                                                    #
+    # ------------------------------------------------------------------ #
+    def _frame_tick(self) -> None:
+        t = self.sim.time
+        for cam, fc in self.fc_tasks.items():
+            if not fc.state.get("isActive", False):
+                continue
+            frame = self.cameras.frame(cam, t)
+            if frame.has_entity:
+                self._positives_generated += 1
+            header = EventHeader(event_id=new_event_id(), source_arrival=t)
+            self._source_events += 1
+            fc.on_arrival(Event(header=header, key=cam, value=frame))
+        if t + 1.0 / self.cfg.fps <= self.cfg.duration_s:
+            self.sim.schedule(1.0 / self.cfg.fps, self._frame_tick)
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> ScenarioResult:
+        cfg = self.cfg
+        self.sim.schedule(0.0, self._frame_tick)
+        self.sim.schedule(cfg.tl_update_period, self._tl_tick)
+        # Allow in-flight events to drain past the generation horizon.
+        self.sim.run(until=cfg.duration_s + 3.0 * cfg.gamma)
+
+        drops: Dict[str, int] = {}
+        batch_sizes: Dict[str, List[int]] = {"VA": [], "CR": []}
+        total_dropped = 0
+        for t in list(self.va_tasks) + list(self.cr_tasks) + list(self.fc_tasks.values()):
+            if t.stats.dropped:
+                drops[t.name] = t.stats.dropped
+                total_dropped += t.stats.dropped
+        for t in self.va_tasks:
+            batch_sizes["VA"].extend(t.stats.batch_sizes)
+        for t in self.cr_tasks:
+            batch_sizes["CR"].extend(t.stats.batch_sizes)
+
+        return ScenarioResult(
+            config=cfg,
+            active_timeline=self._stats_active,
+            latencies=list(self.sink.latencies),
+            on_time=self.sink.on_time,
+            delayed=self.sink.delayed,
+            source_events=self._source_events,
+            dropped=total_dropped,
+            drops_by_task=drops,
+            batch_sizes=batch_sizes,
+            positives_generated=self._positives_generated,
+            positives_completed=self._positives_completed,
+            positives_dropped=self._positives_generated - self._positives_completed,
+            detections_on_time=self._detections_on_time,
+        )

@@ -1,0 +1,21 @@
+"""Training substrate: optimizer, schedules, loop, data, checkpointing."""
+
+from .checkpoint import load_checkpoint, save_checkpoint
+from .data import SyntheticLM, lm_batches
+from .optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    cosine_schedule,
+    init_adamw,
+    make_schedule,
+    wsd_schedule,
+)
+from .train_loop import TrainConfig, cross_entropy, loss_fn, make_train_step, train_loop
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "SyntheticLM", "TrainConfig", "adamw_update",
+    "cosine_schedule", "cross_entropy", "init_adamw", "lm_batches",
+    "load_checkpoint", "loss_fn", "make_schedule", "make_train_step",
+    "save_checkpoint", "train_loop", "wsd_schedule",
+]

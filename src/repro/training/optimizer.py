@@ -1,0 +1,146 @@
+"""AdamW + LR schedules, implemented in-house (no optax dependency).
+
+Schedules: cosine-with-warmup (default) and **WSD** (Warmup-Stable-Decay,
+MiniCPM arXiv:2404.06395 §4) — minicpm-2b's assigned schedule.
+Functional style: ``init_adamw`` builds the state pytree; ``adamw_update``
+is pure and jit/pjit-safe (all hyperparameters are static or scalars).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWConfig",
+    "init_adamw",
+    "adamw_update",
+    "cosine_schedule",
+    "wsd_schedule",
+    "make_schedule",
+    "global_norm",
+    "clip_by_global_norm",
+]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: Any  # first moment (pytree like params)
+    nu: Any  # second moment
+
+
+def init_adamw(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+    cfg: AdamWConfig,
+    lr: jax.Array,
+) -> Tuple[Any, AdamWState]:
+    """One AdamW step with decoupled weight decay on matrix params only."""
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay > 0:  # no decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+# --------------------------------------------------------------------- #
+# Schedules                                                              #
+# --------------------------------------------------------------------- #
+def cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+        return base_lr * jnp.where(s < warmup_steps, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(
+    base_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    decay_fraction: float = 0.1,
+    min_ratio: float = 0.01,
+) -> Callable[[jax.Array], jax.Array]:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, long flat stage, then a
+    short exponential decay over the final ``decay_fraction`` of training."""
+    decay_steps = max(int(total_steps * decay_fraction), 1)
+    stable_end = total_steps - decay_steps
+
+    def lr(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        in_decay = jnp.clip((s - stable_end) / decay_steps, 0.0, 1.0)
+        decay = jnp.power(jnp.asarray(min_ratio, jnp.float32), in_decay)
+        val = jnp.where(s < warmup_steps, warm, decay)
+        return base_lr * val
+
+    return lr
+
+
+def make_schedule(kind: str, base_lr: float, warmup: int, total: int):
+    if kind == "wsd":
+        return wsd_schedule(base_lr, warmup, total)
+    return cosine_schedule(base_lr, warmup, total)

@@ -1,0 +1,133 @@
+"""Batching strategies (§4.4) + clock-skew resilience properties (§4.6.2)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batching import (
+    DynamicBatcher,
+    NOBBatcher,
+    PendingEvent,
+    StaticBatcher,
+    build_nob_table,
+)
+from repro.core.events import Event, EventHeader
+
+
+def xi(b):
+    return 0.05 + 0.01 * b
+
+
+def pe(eid, arrival, deadline):
+    ev = Event(header=EventHeader(event_id=eid, source_arrival=arrival), key=eid)
+    return PendingEvent(event=ev, arrival=arrival, deadline=deadline)
+
+
+class TestDynamicBatcher:
+    def test_accumulates_until_deadline(self):
+        b = DynamicBatcher(xi, m_max=25)
+        # deadline far away: events accumulate
+        assert b.offer(pe(0, 0.0, 10.0), 0.0) is None
+        assert b.offer(pe(1, 0.1, 10.0), 0.1) is None
+        assert b.current_size == 2
+
+    def test_submits_when_event_cannot_join(self):
+        b = DynamicBatcher(xi, m_max=25)
+        b.offer(pe(0, 0.0, 0.2), 0.0)
+        # t + xi(2) = 1.0 + 0.07 > min(0.2, inf) -> flush previous batch
+        out = b.offer(pe(1, 1.0, 99.0), 1.0)
+        assert out is not None and len(out) == 1 and out[0].event.event_id == 0
+        assert b.current_size == 1
+
+    def test_m_max_flushes(self):
+        b = DynamicBatcher(xi, m_max=3)
+        b.offer(pe(0, 0.0, 100.0), 0.0)
+        b.offer(pe(1, 0.0, 100.0), 0.0)
+        out = b.offer(pe(2, 0.0, 100.0), 0.0)
+        assert out is not None and len(out) == 3
+
+    def test_auto_submit_time_is_deadline_minus_exec(self):
+        b = DynamicBatcher(xi, m_max=25)
+        b.offer(pe(0, 0.0, 5.0), 0.0)
+        b.offer(pe(1, 0.0, 4.0), 0.0)  # batch deadline = min = 4.0
+        assert b.next_due_time() == pytest.approx(4.0 - xi(2))
+        assert b.flush_if_due(3.0) is None
+        out = b.flush_if_due(4.0 - xi(2) + 1e-9)
+        assert out is not None and len(out) == 2
+
+
+class TestStaticBatcher:
+    def test_fixed_size(self):
+        b = StaticBatcher(xi, batch_size=3)
+        assert b.offer(pe(0, 0.0, 1.0), 0.0) is None
+        assert b.offer(pe(1, 0.0, 1.0), 0.0) is None
+        out = b.offer(pe(2, 0.0, 1.0), 0.0)
+        assert out is not None and len(out) == 3
+
+    def test_streaming_b1(self):
+        b = StaticBatcher(xi, batch_size=1)
+        out = b.offer(pe(0, 0.0, 1.0), 0.0)
+        assert out is not None and len(out) == 1
+
+    def test_never_auto_submits(self):
+        b = StaticBatcher(xi, batch_size=5)
+        b.offer(pe(0, 0.0, 1.0), 0.0)
+        assert math.isinf(b.next_due_time())
+
+
+class TestNOB:
+    def test_table_monotone(self):
+        table = build_nob_table(xi, m_max=25)
+        sizes = [b for _, b in table]
+        assert all(b2 >= b1 for b1, b2 in zip(sizes, sizes[1:])), "batch grows with rate"
+
+    def test_picks_small_batches_at_low_rate(self):
+        b = NOBBatcher(xi, m_max=25)
+        out = None
+        for i in range(3):
+            out = b.offer(pe(i, i * 1.0, 99.0), i * 1.0)  # 1 event/sec
+            if out:
+                break
+        assert out is not None, "low rate => small batch => quick submit"
+
+
+# ----------------------------------------------------------------------- #
+# Clock-skew resilience (§4.6.2): adding a constant skew sigma to the     #
+# local clock shifts arrivals, now, and (learned) deadlines equally, so    #
+# the admit decision is unchanged.                                         #
+# ----------------------------------------------------------------------- #
+@settings(max_examples=200, deadline=None)
+@given(
+    sigma=st.floats(-50, 50, allow_nan=False),
+    arrivals=st.lists(st.floats(0, 10), min_size=2, max_size=8),
+    beta=st.floats(0.1, 5.0),
+)
+def test_dynamic_batcher_skew_invariance(sigma, arrivals, beta):
+    arrivals = sorted(arrivals)
+
+    def run(skew: float):
+        b = DynamicBatcher(xi, m_max=25)
+        decisions = []
+        for i, a in enumerate(arrivals):
+            # deadline = a_1 + beta measured on the skewed clock: both the
+            # event deadline and 'now' carry the same +skew.
+            out = b.offer(pe(i, a + skew, a + skew + beta), a + skew)
+            decisions.append(0 if out is None else len(out))
+        return decisions
+
+    assert run(0.0) == run(sigma)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    deadlines=st.lists(st.floats(1.0, 20.0), min_size=1, max_size=10),
+)
+def test_batch_deadline_is_min_of_event_deadlines(deadlines):
+    b = DynamicBatcher(xi, m_max=100)
+    for i, d in enumerate(deadlines):
+        b.offer(pe(i, 0.0, d), 0.0)
+    if b.current_size == len(deadlines):  # no intermediate flush happened
+        assert b.next_due_time() == pytest.approx(
+            min(deadlines) - xi(len(deadlines))
+        )

@@ -1,0 +1,79 @@
+"""Unit tests for the completion-budget protocol (paper §4.5)."""
+
+import math
+
+import pytest
+
+from repro.core.budget import TaskBudget
+from repro.core.events import AcceptSignal, EventRecord, RejectSignal
+
+
+def xi(b):  # affine cost model
+    return 0.05 + 0.01 * b
+
+
+def make_budget(**kw):
+    return TaskBudget("T", xi, m_max=25, **kw)
+
+
+def test_bootstrap_budget_is_infinite():
+    tb = make_budget()
+    assert math.isinf(tb.budget())
+    assert math.isinf(tb.min_budget())
+
+
+def test_reject_reduces_budget():
+    tb = make_budget()
+    tb.record(1, EventRecord(departure=1.0, queuing=0.4, batch_size=4, xi=xi(4)))
+    new = tb.on_reject(RejectSignal(event_id=1, epsilon=0.5, q_bar=0.8))
+    # lam = min(0.5 * 0.4/0.8, xi(4)-xi(1)) = min(0.25, 0.03) = 0.03
+    assert new == pytest.approx(1.0 - 0.03)
+    # A later, milder reject cannot increase it (min with beta_old).
+    tb.record(2, EventRecord(departure=5.0, queuing=0.1, batch_size=2, xi=xi(2)))
+    newer = tb.on_reject(RejectSignal(event_id=2, epsilon=0.1, q_bar=0.8))
+    assert newer <= new or newer == pytest.approx(new)
+
+
+def test_accept_increases_budget():
+    tb = make_budget()
+    tb.record(1, EventRecord(departure=1.0, queuing=0.2, batch_size=4, xi=xi(4)))
+    new = tb.on_accept(AcceptSignal(event_id=1, epsilon=10.0, xi_bar=0.3))
+    # share = 10 * xi(4)/0.3 = 3.0; headroom = 21*0.05 + xi(25)-xi(4) = 1.26
+    # lam = min(3.0, 1.26) => beta = 1.0 + 1.26
+    assert new == pytest.approx(1.0 + (25 - 4) * (0.2 / 4) + xi(25) - xi(4))
+    # Out-of-order older accept with smaller value cannot reduce it.
+    tb.record(2, EventRecord(departure=0.1, queuing=0.0, batch_size=1, xi=xi(1)))
+    newer = tb.on_accept(AcceptSignal(event_id=2, epsilon=0.01, xi_bar=0.3))
+    assert newer >= new
+
+
+def test_first_signal_ignores_beta_old():
+    tb = make_budget()
+    tb.record(1, EventRecord(departure=2.0, queuing=0.5, batch_size=5, xi=xi(5)))
+    # First signal is a reject: the budget is set directly (bootstrap).
+    new = tb.on_reject(RejectSignal(event_id=1, epsilon=1.0, q_bar=1.0))
+    assert new is not None and not math.isinf(new)
+
+
+def test_unknown_event_signal_is_ignored():
+    tb = make_budget()
+    assert tb.on_reject(RejectSignal(event_id=99, epsilon=1.0, q_bar=1.0)) is None
+    assert tb.on_accept(AcceptSignal(event_id=99, epsilon=1.0, xi_bar=1.0)) is None
+    assert math.isinf(tb.budget())
+
+
+def test_per_downstream_budgets_are_independent():
+    tb = make_budget()
+    tb.record(1, EventRecord(departure=1.0, queuing=0.4, batch_size=4, xi=xi(4)))
+    tb.on_reject(RejectSignal(event_id=1, epsilon=0.5, q_bar=0.8), downstream="A")
+    assert not math.isinf(tb.budget("A"))
+    assert math.isinf(tb.budget("B"))
+    assert tb.min_budget() == tb.budget("A")
+
+
+def test_record_capacity_evicts_lru():
+    tb = TaskBudget("T", xi, m_max=8, record_capacity=4)
+    for k in range(10):
+        tb.record(k, EventRecord(departure=1.0, queuing=0.1, batch_size=1, xi=xi(1)))
+    assert tb.get_record(0) is None
+    assert tb.get_record(9) is not None

@@ -1,0 +1,107 @@
+"""Serving engine + Anveshak-scheduled stages."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.models import init_params, reduced_config
+from repro.serving import (
+    Generator,
+    ServedStage,
+    StageRequest,
+    bucket_for,
+    calibrate_xi,
+    embed_frames,
+    init_reid_tower,
+    match,
+    sample_tokens,
+)
+
+
+def test_bucket_for():
+    assert bucket_for(1) == 1
+    assert bucket_for(3) == 4
+    assert bucket_for(100) == 128
+    assert bucket_for(10_000) == 128  # clamped to largest
+
+
+def test_sampling_greedy_and_masked():
+    logits = jnp.asarray([[0.0, 5.0, 1.0, 9.0]])
+    rng = jax.random.PRNGKey(0)
+    assert int(sample_tokens(logits, rng, greedy=True)[0]) == 3
+    # padded-vocab mask: index 3 is out of the real vocab
+    assert int(sample_tokens(logits, rng, greedy=True, vocab_size=3)[0]) == 1
+
+
+def test_generator_decodes_consistently_with_forward():
+    from repro.models import forward
+
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    gen = Generator(cfg, params)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    out = gen.generate(prompts, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    # first generated token == argmax of the forward logits at the prompt end
+    logits, _ = forward(params, cfg, {"tokens": prompts})
+    expect = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), np.asarray(expect))
+
+
+class TestServedStage:
+    def make_stage(self, gamma=5.0, drops=True):
+        tower = init_reid_tower(jax.random.PRNGKey(1), d_in=64, d_embed=64)
+        step = lambda x: embed_frames(tower, jnp.asarray(x))
+        xi = calibrate_xi(step, (64,), buckets=(1, 4, 16), repeats=1)
+        return ServedStage(
+            "CR", step, xi, gamma=gamma, m_max=16, buckets=(1, 4, 16), drops_enabled=drops
+        )
+
+    def test_processes_requests(self):
+        stage = self.make_stage()
+        results = []
+        for _ in range(8):
+            r = stage.submit(StageRequest(np.random.randn(64).astype(np.float32),
+                                          source_time=stage.clock()))
+            if r:
+                results.extend(r)
+        r = stage.flush()
+        if r:
+            results.extend(r)
+        done = [x for x in results if not x.dropped]
+        assert len(done) >= 1
+        assert all(x.output is not None and x.output.shape == (64,) for x in done)
+
+    def test_drops_stale_requests(self):
+        stage = self.make_stage(gamma=0.5)
+        # Teach the budget a small value via a reject-style path: directly
+        # install a budget so DP1 has something to compare against.
+        stage.budget.set_budget(0.01)
+        stale = StageRequest(
+            np.zeros(64, np.float32), source_time=stage.clock() - 10.0
+        )
+        res = stage.submit(stale)
+        assert res is not None and res[0].dropped
+
+    def test_avoid_drop_protects(self):
+        stage = self.make_stage(gamma=0.5)
+        stage.budget.set_budget(0.01)
+        protected = StageRequest(
+            np.zeros(64, np.float32), source_time=stage.clock() - 10.0, avoid_drop=True
+        )
+        res = stage.submit(protected)
+        done = (res or []) + (stage.flush() or [])
+        assert all(not r.dropped for r in done)
+
+
+def test_reid_match_pipeline():
+    tower = init_reid_tower(jax.random.PRNGKey(2), d_in=32, d_embed=16)
+    frames = jax.random.normal(jax.random.PRNGKey(3), (20, 32))
+    query = embed_frames(tower, frames[5:6])
+    scores, best, is_match = match(tower, frames, query, threshold=0.999)
+    assert bool(is_match[5])
+    assert int(jnp.argmax(scores)) == 5

@@ -1,0 +1,87 @@
+"""Tracking logic + road network (paper §2.2.4, §5.2.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core.roadnet import make_road_network
+from repro.core.tracking import Detection, TLBFS, TLBase, TLProbabilistic, TLWBFS
+
+
+@pytest.fixture(scope="module")
+def road():
+    return make_road_network(num_vertices=300, target_edges=840, seed=3)
+
+
+@pytest.fixture(scope="module")
+def cameras(road):
+    return {cam: cam for cam in range(road.num_vertices)}  # camera per vertex
+
+
+def test_road_network_stats():
+    net = make_road_network(num_vertices=1000, target_edges=2817, seed=0)
+    assert net.num_vertices == 1000
+    assert abs(net.num_edges - 2817) <= 60  # paper: 2817 edges
+    assert abs(net.mean_edge_length - 84.5) < 1.0  # rescaled to match
+
+    # connected: weighted ball with infinite radius reaches everything
+    ball = net.weighted_ball(0, float("inf"))
+    assert len(ball) == net.num_vertices
+
+
+def test_spotlight_contracts_on_positive(road, cameras):
+    tl = TLWBFS(road, cameras, entity_speed=4.0)
+    active = tl.update([Detection(camera_id=7, positive=True, timestamp=10.0)], now=10.0)
+    assert active == {7}
+    assert tl.last_seen_camera == 7
+
+
+def test_spotlight_expands_while_lost(road, cameras):
+    tl = TLWBFS(road, cameras, entity_speed=4.0)
+    tl.update([Detection(camera_id=7, positive=True, timestamp=10.0)], now=10.0)
+    a1 = tl.update([], now=15.0)   # radius 20 m
+    a2 = tl.update([], now=40.0)   # radius 120 m
+    assert len(a2) >= len(a1) >= 1
+    assert 7 in a1
+
+
+def test_wbfs_tighter_than_bfs(road, cameras):
+    """The paper's §5.2.2 claim: WBFS (true lengths) activates fewer cameras
+    than BFS (fixed length) for the same blind-spot duration, because hop
+    counting rounds every edge up to the fixed length."""
+    es, fixed = 4.0, 84.5
+    sizes_bfs, sizes_wbfs = [], []
+    for start in [5, 50, 150]:
+        bfs = TLBFS(road, cameras, entity_speed=es, fixed_edge_length_m=fixed)
+        wbfs = TLWBFS(road, cameras, entity_speed=es)
+        for tl in (bfs, wbfs):
+            tl.update([Detection(camera_id=start, positive=True, timestamp=0.0)], now=0.0)
+        for t in (30.0, 60.0, 90.0):
+            sizes_bfs.append(len(bfs.update([], now=t)))
+            sizes_wbfs.append(len(wbfs.update([], now=t)))
+    assert np.mean(sizes_wbfs) <= np.mean(sizes_bfs) * 1.2
+    assert max(sizes_wbfs) <= max(sizes_bfs) * 1.5
+
+
+def test_tl_base_keeps_everything_active(road, cameras):
+    tl = TLBase(road, cameras)
+    active = tl.update([Detection(camera_id=3, positive=True, timestamp=1.0)], now=1.0)
+    assert active == set(cameras)
+
+
+def test_probabilistic_subset_of_reachable(road, cameras):
+    es = 4.0
+    wbfs = TLWBFS(road, cameras, entity_speed=es)
+    prob = TLProbabilistic(road, cameras, entity_speed=es, coverage=0.8)
+    for tl in (wbfs, prob):
+        tl.update([Detection(camera_id=10, positive=True, timestamp=0.0)], now=0.0)
+    full = wbfs.update([], now=60.0)
+    subset = prob.update([], now=60.0)
+    assert subset.issubset(full)
+    assert len(subset) >= 1
+
+
+def test_never_seen_searches_everywhere(road, cameras):
+    tl = TLWBFS(road, cameras, entity_speed=4.0)
+    tl.last_seen_camera = None
+    tl.last_seen_time = None
+    assert tl.update([], now=5.0) == set(cameras)

@@ -1,0 +1,95 @@
+"""Training substrate: optimizer math, schedules, loss descent, checkpoints."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.models import init_params, reduced_config
+from repro.training import (
+    AdamWConfig,
+    TrainConfig,
+    cosine_schedule,
+    init_adamw,
+    lm_batches,
+    load_checkpoint,
+    save_checkpoint,
+    train_loop,
+    wsd_schedule,
+)
+from repro.training.optimizer import adamw_update, clip_by_global_norm, global_norm
+
+
+def test_adamw_moves_toward_gradient():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.ones((4, 4))}
+    state = init_adamw(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+    new, state = adamw_update(params, grads, state, cfg, jnp.asarray(0.1))
+    assert bool(jnp.all(new["w"] < params["w"]))
+    assert int(state.step) == 1
+
+
+def test_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    grads = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    state = init_adamw(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.1, grad_clip=0.0)
+    new, _ = adamw_update(params, grads, state, cfg, jnp.asarray(0.1))
+    assert bool(jnp.all(new["w"] < 1.0))  # decayed
+    np.testing.assert_allclose(np.asarray(new["b"]), 1.0)  # not decayed
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) == pytest.approx(float(jnp.sqrt(10.0 * 100 ** 2)), rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup_steps=10, total_steps=100, min_ratio=0.1)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_wsd_schedule_shape():
+    """MiniCPM WSD: warmup, long flat stable stage, sharp final decay."""
+    lr = wsd_schedule(1.0, warmup_steps=10, total_steps=100, decay_fraction=0.2)
+    assert float(lr(jnp.asarray(5))) == pytest.approx(0.5)
+    for s in (20, 50, 79):  # stable plateau
+        assert float(lr(jnp.asarray(s))) == pytest.approx(1.0)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.01, abs=1e-3)
+    assert float(lr(jnp.asarray(90))) < 1.0
+
+
+def test_loss_decreases_on_synthetic_lm():
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainConfig(total_steps=80, warmup_steps=8, adamw=AdamWConfig(lr=1e-3))
+    params, _, hist = train_loop(
+        params, cfg, tcfg, lm_batches(cfg, batch=8, seq=64, seed=0),
+        steps=80, log_every=79, log_fn=lambda s: None,
+    )
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = reduced_config(get_config("qwen2-1.5b"))
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params, metadata={"arch": cfg.name})
+    restored = load_checkpoint(path, jax.eval_shape(lambda: params))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        load_checkpoint(path, {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
