@@ -1,8 +1,14 @@
 """Benchmark harness: one function per paper table/figure + kernel timings
 + the roofline table.  Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run                    # everything
     PYTHONPATH=src python -m benchmarks.run --only fig567
+    PYTHONPATH=src python -m benchmarks.run --only pipeline --json BENCH_pipeline.json
+
+``--json PATH`` writes the machine-readable records
+``{bench, case, us_per_event, derived}`` accumulated by the selected
+benchmarks, so future PRs can track the perf trajectory (the checked-in
+``BENCH_pipeline.json`` is the output of the ``pipeline`` bench).
 """
 
 from __future__ import annotations
@@ -14,9 +20,88 @@ import time
 
 import numpy as np
 
-from .scenarios import row, run_scenario
+from .scenarios import RECORDS, record, row, run_scenario
 
 SEP = "-" * 78
+
+
+# --------------------------------------------------------------------- #
+# Pipeline hot-path benchmark (PERF.md): wall-clock per source event on   #
+# the two reference scenarios, against the frozen seed-commit baseline.   #
+# --------------------------------------------------------------------- #
+
+# Measured at the seed commit (9931f3f, pure-Python per-event runtime)
+# on the same container this harness runs in; see PERF.md for methodology.
+SEED_US_PER_EVENT = {
+    "Base_SB-20_200c": 107.5,
+    "BFS_DB-25_1000c": 284.1,
+}
+
+PIPELINE_CASES = [
+    ("Base_SB-20_200c", dict(tl="base", num_cameras=200, batching="static", static_batch=20)),
+    ("BFS_DB-25_1000c", dict(tl="bfs", batching="dynamic", m_max=25)),
+]
+
+
+def bench_pipeline(reps: int = 3) -> None:
+    print(f"{SEP}\n# Pipeline hot path — us per source event vs seed baseline (best of {reps})")
+    for name, kw in PIPELINE_CASES:
+        wall = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            res = run_scenario(tl_peak_speed=4.0, **kw)
+            wall = min(wall, time.time() - t0)
+        us = wall * 1e6 / max(res.source_events, 1)
+        seed_us = SEED_US_PER_EVENT.get(name)
+        speedup = f"{seed_us / us:.2f}" if seed_us else "n/a"
+        s = res.summary()
+        record(
+            "pipeline",
+            name,
+            us,
+            f"seed_us_per_event={seed_us};speedup_x={speedup};"
+            f"events={s['source_events']};median_lat_s={s['median_latency_s']};"
+            f"delayed={s['delayed']};dropped={s['dropped']};peak_active={s['peak_active']}",
+        )
+        print(f"pipeline_{name},{us:.1f},seed={seed_us};speedup={speedup}x")
+
+
+# --------------------------------------------------------------------- #
+# Fig. 13 (new): scale sweep — 1k/5k/10k cameras x 1/5 fps               #
+# --------------------------------------------------------------------- #
+def bench_scale_fig13() -> None:
+    print(f"{SEP}\n# Fig 13 — scale sweep (spotlight TL, dynamic batching)")
+    for num_cameras in (1000, 5000, 10000):
+        for fps in (1.0, 5.0):
+            name = f"scale_{num_cameras}c_{fps:g}fps"
+            t0 = time.time()
+            res = run_scenario(
+                tl="bfs",
+                tl_peak_speed=4.0,
+                batching="dynamic",
+                m_max=25,
+                num_cameras=num_cameras,
+                fps=fps,
+                duration_s=60.0,
+            )
+            print(row(name, res, time.time() - t0, bench="fig13"))
+    # Multi-entity probabilistic spotlight: batched CSR relaxation kernel
+    # vs the incremental python path.
+    from repro.core.roadnet import make_road_network
+    from repro.core.tracking import TLProbabilistic
+
+    net = make_road_network(seed=0)
+    cams = {c: c for c in range(net.num_vertices)}
+    tl = TLProbabilistic(net, cams, entity_speed=4.0, coverage=0.9)
+    for i in range(8):
+        tl.track(f"entity{i}", camera_id=(i * 97) % net.num_vertices, timestamp=float(i))
+    for label, use_kernel in (("python", False), ("kernel", True)):
+        tl._entity_searches.clear()
+        t0 = time.perf_counter()
+        active = tl.spotlight_multi(60.0, use_kernel=use_kernel)
+        us = (time.perf_counter() - t0) * 1e6
+        record("fig13", f"multi_entity_{label}", us / 8.0, f"entities=8;active={len(active)}")
+        print(f"multi_entity_{label},{us/8.0:.1f},entities=8;active={len(active)}")
 
 
 # --------------------------------------------------------------------- #
@@ -36,7 +121,7 @@ def bench_batching_fig567() -> None:
     for name, kw in cases:
         t0 = time.time()
         res = run_scenario(tl="bfs", **kw)
-        print(row(name, res, time.time() - t0))
+        print(row(name, res, time.time() - t0, bench="fig567"))
 
 
 # --------------------------------------------------------------------- #
@@ -56,7 +141,7 @@ def bench_tracking_fig10() -> None:
     for name, kw in cases:
         t0 = time.time()
         res = run_scenario(tl_peak_speed=4.0, **kw)
-        print(row(name, res, time.time() - t0))
+        print(row(name, res, time.time() - t0, bench="fig10"))
 
 
 # --------------------------------------------------------------------- #
@@ -73,7 +158,7 @@ def bench_dropping_fig11() -> None:
     ]:
         t0 = time.time()
         res = run_scenario(**overload, **kw)
-        print(row(name, res, time.time() - t0))
+        print(row(name, res, time.time() - t0, bench="fig11"))
 
 
 # --------------------------------------------------------------------- #
@@ -88,7 +173,7 @@ def bench_network_fig9() -> None:
     ]:
         t0 = time.time()
         res = run_scenario(tl="bfs", tl_peak_speed=4.0, bandwidth_schedule=schedule, **kw)
-        print(row(name, res, time.time() - t0))
+        print(row(name, res, time.time() - t0, bench="fig9"))
 
 
 # --------------------------------------------------------------------- #
@@ -112,7 +197,7 @@ def bench_app2_fig12() -> None:
     for name, kw in cases:
         t0 = time.time()
         res = run_scenario(tl=kw.pop("tl", "bfs"), cr_cost=cr2, **kw)
-        print(row(name, res, time.time() - t0))
+        print(row(name, res, time.time() - t0, bench="fig12"))
 
 
 # --------------------------------------------------------------------- #
@@ -125,6 +210,7 @@ def bench_kernels() -> None:
     from repro.kernels.decode_attention.ops import decode_attention
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.reid_match.ops import reid_match
+    from repro.kernels.spotlight_ball.ops import spotlight_ball
     from repro.kernels.ssd_scan.ops import ssd_scan
 
     print(f"{SEP}\n# Kernel micro-benchmarks (CPU reference path)")
@@ -136,6 +222,7 @@ def bench_kernels() -> None:
         for _ in range(reps):
             jax.block_until_ready(fn(*args))
         us = (time.perf_counter() - t0) / reps * 1e6
+        record("kernels", name, us, derived)
         print(f"{name},{us:.1f},{derived}")
 
     B, S, H, Hkv, D = 1, 1024, 8, 2, 64
@@ -165,6 +252,19 @@ def bench_kernels() -> None:
     qq = jax.random.normal(key, (4, 128))
     timeit("reid_match_4k", lambda *a: reid_match(*a)[0], g, qq,
            derived="gallery=4096x128")
+
+    from repro.core.roadnet import make_road_network
+
+    net = make_road_network(num_vertices=512, target_edges=1442, seed=0)
+    indptr, indices, weights = net.csr()
+    rng = np.random.default_rng(0)
+    sources = rng.integers(0, 512, size=16).astype(np.int32)
+    radii = rng.uniform(100, 1500, size=16).astype(np.float32)
+    timeit(
+        "spotlight_ball_512v_16q",
+        lambda: spotlight_ball(indptr, indices, weights.astype(np.float32), sources, radii),
+        derived="V=512;Q=16;dense min-plus relaxation",
+    )
 
 
 # --------------------------------------------------------------------- #
@@ -224,6 +324,8 @@ def bench_serving() -> None:
             dropped += 1 if r.dropped else 0
         wall = time.perf_counter() - t0
         sizes = stage.stats["executed"] / max(stage.stats["batches"], 1)
+        record("serving", f"serving_rate{rate_hz}", wall / n * 1e6,
+               f"done={done};dropped={dropped};mean_batch={sizes:.1f}")
         print(
             f"serving_rate{rate_hz},{wall/n*1e6:.1f},"
             f"done={done};dropped={dropped};mean_batch={sizes:.1f};"
@@ -232,11 +334,13 @@ def bench_serving() -> None:
 
 
 BENCHES = {
+    "pipeline": bench_pipeline,
     "fig567": bench_batching_fig567,
     "fig10": bench_tracking_fig10,
     "fig11": bench_dropping_fig11,
     "fig9": bench_network_fig9,
     "fig12": bench_app2_fig12,
+    "fig13": bench_scale_fig13,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
     "serving": bench_serving,
@@ -246,6 +350,12 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write machine-readable {bench, case, us_per_event, derived} records",
+    )
     args = ap.parse_args()
     t0 = time.time()
     for name, fn in BENCHES.items():
@@ -253,6 +363,11 @@ def main() -> None:
             continue
         fn()
     print(f"{SEP}\nTotal benchmark wall time: {time.time()-t0:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"harness": "benchmarks.run", "records": RECORDS}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(RECORDS)} records to {args.json}")
 
 
 if __name__ == "__main__":

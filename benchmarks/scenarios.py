@@ -3,11 +3,27 @@
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from repro.sim import ScenarioConfig, ScenarioResult, TrackingScenario
 
-__all__ = ["run_scenario", "row"]
+__all__ = ["run_scenario", "row", "record", "RECORDS"]
+
+# Machine-readable benchmark records accumulated across a run; written out by
+# `python -m benchmarks.run --json PATH` so perf trajectories can be tracked
+# across PRs.
+RECORDS: List[Dict] = []
+
+
+def record(bench: str, case: str, us_per_event: float, derived: str = "") -> Dict:
+    rec = {
+        "bench": bench,
+        "case": case,
+        "us_per_event": round(float(us_per_event), 2),
+        "derived": derived,
+    }
+    RECORDS.append(rec)
+    return rec
 
 
 def run_scenario(**kw) -> ScenarioResult:
@@ -16,12 +32,14 @@ def run_scenario(**kw) -> ScenarioResult:
     return TrackingScenario(ScenarioConfig(**base)).run()
 
 
-def row(name: str, res: ScenarioResult, wall_s: float) -> str:
+def row(name: str, res: ScenarioResult, wall_s: float, bench: str = "") -> str:
     s = res.summary()
-    return (
-        f"{name},{wall_s*1e6/max(s['source_events'],1):.1f},"
+    us_per_event = wall_s * 1e6 / max(s["source_events"], 1)
+    derived = (
         f"median_lat_s={s['median_latency_s']};p99_s={s['p99_latency_s']};"
         f"delayed={s['delayed']};delayed_frac={s['delayed_frac']};"
         f"dropped={s['dropped']};dropped_frac={s['dropped_frac']};"
         f"peak_active={s['peak_active']};events={s['source_events']}"
     )
+    record(bench or "scenario", name, us_per_event, derived)
+    return f"{name},{us_per_event:.1f},{derived}"

@@ -36,7 +36,7 @@ __all__ = ["PendingEvent", "DynamicBatcher", "StaticBatcher", "NOBBatcher", "bui
 CostModel = Callable[[int], float]
 
 
-@dataclass
+@dataclass(slots=True)
 class PendingEvent:
     """A queued event together with the timestamps the batcher needs."""
 

@@ -88,15 +88,20 @@ class TaskBudget:
         self._records: "OrderedDict[int, EventRecord]" = OrderedDict()
         self._capacity = int(record_capacity)
         self._budgets: Dict[str, BudgetState] = {}
+        # Cached min over per-downstream budgets: ``min_budget`` is consulted
+        # once per arriving event, so recomputing the min there is hot.
+        self._min_cache: Optional[float] = None
 
     # ------------------------------------------------------------------ #
     # Records                                                            #
     # ------------------------------------------------------------------ #
     def record(self, event_id: int, rec: EventRecord) -> None:
-        self._records[event_id] = rec
-        self._records.move_to_end(event_id)
-        while len(self._records) > self._capacity:
-            self._records.popitem(last=False)
+        records = self._records
+        if event_id in records:
+            records.move_to_end(event_id)
+        records[event_id] = rec
+        if len(records) > self._capacity:
+            records.popitem(last=False)
 
     def get_record(self, event_id: int) -> Optional[EventRecord]:
         return self._records.get(event_id)
@@ -116,14 +121,21 @@ class TaskBudget:
     def min_budget(self) -> float:
         """Most conservative budget across downstream paths (used at drop
         points before the destination of an event is known)."""
+        cached = self._min_cache
+        if cached is not None:
+            return cached
         if not self._budgets:
-            return math.inf
-        return min(s.effective for s in self._budgets.values())
+            value = math.inf
+        else:
+            value = min(s.effective for s in self._budgets.values())
+        self._min_cache = value
+        return value
 
     def set_budget(self, value: float, downstream: str = "") -> None:
         st = self.state(downstream)
         st.value = value
         st.initialized = True
+        self._min_cache = None
 
     # ------------------------------------------------------------------ #
     # Signal handling (paper §4.5)                                       #
@@ -151,6 +163,7 @@ class TaskBudget:
         else:
             st.value = min(candidate, st.effective)
         st.initialized = True
+        self._min_cache = None
         return st.value
 
     def on_accept(self, sig: AcceptSignal, downstream: str = "") -> Optional[float]:
@@ -172,4 +185,5 @@ class TaskBudget:
         else:
             st.value = max(candidate, st.value if st.value is not None else -math.inf)
         st.initialized = True
+        self._min_cache = None
         return st.value

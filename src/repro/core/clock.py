@@ -14,7 +14,7 @@ from dataclasses import dataclass
 __all__ = ["Clock"]
 
 
-@dataclass
+@dataclass(slots=True)
 class Clock:
     """A device clock: reads true (simulation) time plus a fixed skew.
 

@@ -6,13 +6,21 @@ causal event ``e_k^i`` input to task ``tau_i``.  Events carry a small header
 with the *source arrival time* ``a_k^1`` (measured on the source clock) plus
 the running sums of upstream execution time (``xi_bar``) and queuing delay
 (``q_bar``) used by the budget-update protocol (paper §4.5).
+
+Performance note: headers and events sit on the runtime's per-event hot path
+(a 1000-camera scenario creates one header per frame per task hop), so both
+carry ``__slots__`` and ``advanced()`` avoids :func:`dataclasses.replace`,
+drawing recycled header objects from a small free-list pool instead.  Code
+that provably ends an event's life inside the runtime (drop points, sink)
+may return its header via :func:`release_header`; everything else can simply
+let headers be garbage collected.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field, replace
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any, List, Optional
 
 __all__ = [
     "EventHeader",
@@ -22,6 +30,8 @@ __all__ = [
     "AcceptSignal",
     "ProbeSignal",
     "new_event_id",
+    "release_header",
+    "source_header",
 ]
 
 _id_counter = itertools.count()
@@ -32,7 +42,6 @@ def new_event_id() -> int:
     return next(_id_counter)
 
 
-@dataclass
 class EventHeader:
     """Header propagated with every causal downstream event (paper §4.2, §4.5).
 
@@ -54,45 +63,142 @@ class EventHeader:
     is_probe:
         Probe signals are forwarded downstream without drops to recover from
         budget collapse (paper §4.5.2).
+    path:
+        The task-path this event has traversed (its *pipeline*, §4.2):
+        signals are delivered to the tasks on this path, not the whole DAG.
     """
 
-    event_id: int
-    source_arrival: float
-    xi_bar: float = 0.0
-    q_bar: float = 0.0
-    avoid_drop: bool = False
-    is_probe: bool = False
-    # The task-path this event has traversed (its *pipeline*, §4.2): signals
-    # are delivered to the tasks on this path, not the whole dataflow DAG.
-    path: tuple = ()
+    __slots__ = (
+        "event_id",
+        "source_arrival",
+        "xi_bar",
+        "q_bar",
+        "avoid_drop",
+        "is_probe",
+        "path",
+    )
+
+    def __init__(
+        self,
+        event_id: int,
+        source_arrival: float,
+        xi_bar: float = 0.0,
+        q_bar: float = 0.0,
+        avoid_drop: bool = False,
+        is_probe: bool = False,
+        path: tuple = (),
+    ) -> None:
+        self.event_id = event_id
+        self.source_arrival = source_arrival
+        self.xi_bar = xi_bar
+        self.q_bar = q_bar
+        self.avoid_drop = avoid_drop
+        self.is_probe = is_probe
+        self.path = path
+
+    def __repr__(self) -> str:  # keep the old dataclass ergonomics
+        return (
+            f"EventHeader(event_id={self.event_id!r}, "
+            f"source_arrival={self.source_arrival!r}, xi_bar={self.xi_bar!r}, "
+            f"q_bar={self.q_bar!r}, avoid_drop={self.avoid_drop!r}, "
+            f"is_probe={self.is_probe!r}, path={self.path!r})"
+        )
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, EventHeader):
+            return NotImplemented
+        return (
+            self.event_id == other.event_id
+            and self.source_arrival == other.source_arrival
+            and self.xi_bar == other.xi_bar
+            and self.q_bar == other.q_bar
+            and self.avoid_drop == other.avoid_drop
+            and self.is_probe == other.is_probe
+            and self.path == other.path
+        )
 
     def advanced(self, xi: float, q: float, task: str = "") -> "EventHeader":
         """Header for the causal downstream event after this task."""
-        return replace(
-            self,
-            xi_bar=self.xi_bar + xi,
-            q_bar=self.q_bar + q,
-            path=self.path + (task,) if task else self.path,
-        )
+        h = _acquire_header()
+        h.event_id = self.event_id
+        h.source_arrival = self.source_arrival
+        h.xi_bar = self.xi_bar + xi
+        h.q_bar = self.q_bar + q
+        h.avoid_drop = self.avoid_drop
+        h.is_probe = self.is_probe
+        h.path = self.path + (task,) if task else self.path
+        return h
+
+    def advance_in_place(self, xi: float, q: float, task: str = "") -> "EventHeader":
+        """In-place variant of :meth:`advanced` for the common 1:1 case where
+        the caller holds the only reference (no allocation at all)."""
+        self.xi_bar += xi
+        self.q_bar += q
+        if task:
+            self.path = self.path + (task,)
+        return self
 
 
-@dataclass
+# Free-list pool for headers: ``advanced()`` is called once per event per task
+# hop, which made header construction the single largest allocation site in
+# the scenario engine.  The pool is bounded and purely an optimization —
+# failing to release a header is always safe.
+_HEADER_POOL: List[EventHeader] = []
+_HEADER_POOL_MAX = 4096
+
+
+def _acquire_header() -> EventHeader:
+    if _HEADER_POOL:
+        return _HEADER_POOL.pop()
+    return EventHeader.__new__(EventHeader)
+
+
+def release_header(header: Optional[EventHeader]) -> None:
+    """Return a header to the pool.  Only call when the event is provably
+    dead (dropped inside the runtime, or fully consumed at the sink)."""
+    if header is not None and len(_HEADER_POOL) < _HEADER_POOL_MAX:
+        _HEADER_POOL.append(header)
+
+
+def source_header(event_id: int, source_arrival: float) -> EventHeader:
+    """Pool-backed constructor for a fresh source-event header (the one
+    allocation every sourced frame must make)."""
+    h = _acquire_header()
+    h.event_id = event_id
+    h.source_arrival = source_arrival
+    h.xi_bar = 0.0
+    h.q_bar = 0.0
+    h.avoid_drop = False
+    h.is_probe = False
+    h.path = ()
+    return h
+
+
 class Event:
     """A key-value event on a stream (paper §2.2.1).
 
     ``key`` is typically the camera ID; ``value`` the frame / detections.
+    ``batch_slowest`` is set by the runtime on the slowest event of a batch
+    so the sink can generate accept signals (§4.5.2).
     """
 
-    header: EventHeader
-    key: Any
-    value: Any = None
+    __slots__ = ("header", "key", "value", "batch_slowest")
+
+    def __init__(self, header: EventHeader, key: Any, value: Any = None) -> None:
+        self.header = header
+        self.key = key
+        self.value = value
+        self.batch_slowest = False
+
+    def __repr__(self) -> str:
+        return f"Event(header={self.header!r}, key={self.key!r}, value={self.value!r})"
 
     @property
     def event_id(self) -> int:
         return self.header.event_id
 
 
-@dataclass
+@dataclass(slots=True)
 class EventRecord:
     """The 3-tuple ``<d_k^i, q_k^i, m_k^i>`` each task stores per processed
     event (paper §4.5), used when an accept/reject signal arrives later.
@@ -108,7 +214,7 @@ class EventRecord:
     xi: float
 
 
-@dataclass
+@dataclass(slots=True)
 class RejectSignal:
     """Sent upstream when task ``tau_j`` drops event ``k`` (paper §4.5.1)."""
 
@@ -118,7 +224,7 @@ class RejectSignal:
     from_task: str = ""
 
 
-@dataclass
+@dataclass(slots=True)
 class AcceptSignal:
     """Sent upstream when the sink sees the slowest event of a batch arrive
     more than ``epsilon_max`` early (paper §4.5.2)."""
@@ -129,7 +235,7 @@ class AcceptSignal:
     from_task: str = ""
 
 
-@dataclass
+@dataclass(slots=True)
 class ProbeSignal:
     """Every k-th dropped event is forwarded as a probe that cannot be
     dropped; if it reaches the sink within gamma an accept is generated so

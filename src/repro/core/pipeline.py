@@ -8,9 +8,9 @@ event to a downstream task instance.  Execution is single-server per task
 Anveshak.
 
 The runtime is driven by a discrete-event scheduler (``sim``) that provides
-``now`` (true time) and ``schedule(delay, fn)``; each task reads time through
-its own skewed :class:`Clock`, so the clock-skew resilience of the drop /
-batch / budget logic (§4.6.2) is exercised for real.
+``now`` (true time) and ``schedule(delay, fn, *args)``; each task reads time
+through its own skewed :class:`Clock`, so the clock-skew resilience of the
+drop / batch / budget logic (§4.6.2) is exercised for real.
 
 Event life-cycle inside a task (Fig. 4):
 
@@ -21,15 +21,22 @@ Reject signals flow to *all upstream* tasks of the pipeline path; accept
 signals originate at the sink for the slowest event of a batch arriving more
 than ``epsilon_max`` early.  Probe events (every ``probe_every``-th drop) are
 forwarded un-droppably to let collapsed budgets recover (§4.5.2).
+
+Hot-path notes: this module runs ~10 times per source event in a full
+scenario, so it avoids per-event closures (``schedule`` takes ``(fn, *args)``
+instead), advances headers in place for the common 1:1-selectivity case, and
+keeps the per-event bookkeeping (``_event_downstream``) in a bounded LRU so a
+long run cannot grow memory without bound.
 """
 
 from __future__ import annotations
 
 import math
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
-from .batching import DynamicBatcher, PendingEvent, _BatcherBase
+from .batching import DynamicBatcher, PendingEvent, StaticBatcher, _BatcherBase
 from .budget import TaskBudget
 from .clock import Clock
 from .dropping import drop_before_exec, drop_before_queuing, drop_before_transmit
@@ -39,6 +46,7 @@ from .events import (
     EventHeader,
     EventRecord,
     RejectSignal,
+    release_header,
 )
 
 __all__ = ["Task", "SinkTask", "PipelineStats", "Scheduler"]
@@ -54,7 +62,7 @@ class Scheduler:
     def time(self) -> float:  # pragma: no cover - interface
         raise NotImplementedError
 
-    def schedule(self, delay: float, fn: Callable[[], None]) -> None:  # pragma: no cover
+    def schedule(self, delay: float, fn: Callable[..., None], *args: Any) -> None:  # pragma: no cover
         raise NotImplementedError
 
     def transit_delay(self, src: str, dst: str, size_bytes: float) -> float:
@@ -64,7 +72,7 @@ class Scheduler:
     tasks: Dict[str, "Task"] = {}
 
 
-@dataclass
+@dataclass(slots=True)
 class PipelineStats:
     """Counters a task accumulates (drives the §5 analyses)."""
 
@@ -83,6 +91,12 @@ class PipelineStats:
 
 class Task:
     """One module instance (Executor) in the dataflow."""
+
+    # Bounded size of the event-id -> downstream-name map used to attribute
+    # late accept/reject signals (§4.3.4).  One entry per routed event was an
+    # unbounded leak; signals for evicted (old) events are safely ignored
+    # because budget updates clamp against ``beta_old``.
+    EVENT_DOWNSTREAM_CAPACITY = 8192
 
     def __init__(
         self,
@@ -116,10 +130,27 @@ class Task:
         self.stats = PipelineStats()
         self._drop_count = 0
         self._busy = False
-        self._run_queue: List[List[PendingEvent]] = []
-        self._event_downstream: Dict[int, str] = {}
+        self._run_queue: Deque[List[PendingEvent]] = deque()
+        self._event_downstream: "OrderedDict[int, str]" = OrderedDict()
         self._timer_pending = False
         self._upstream_cache = None
+        self._batcher_is_dynamic = isinstance(batcher, DynamicBatcher)
+        self._batcher_is_static = type(batcher) is StaticBatcher
+        # Streaming tasks (static batch of 1) skip the batcher entirely:
+        # every arrival is its own batch, so ``offer``/timer bookkeeping is
+        # pure overhead for them (FC sources are all in this regime).
+        self._streaming = (
+            isinstance(batcher, StaticBatcher) and getattr(batcher, "batch_size", 0) == 1
+        )
+        # Fused streaming (opt-in, see ``fuse_streaming``): collapse the
+        # execute->transmit pair into a single scheduled downstream arrival.
+        self.fuse_streaming = False
+        self._xi1 = xi(1)
+        self._busy_until = -math.inf
+        self._drain_pending = False
+        # dst_name -> fixed transit delay, populated only while the
+        # scheduler reports a time-invariant network (``transit_is_static``).
+        self._transit_memo: Dict[str, float] = {}
         # Event sizes for network modelling: bytes per event leaving this task.
         self.output_event_bytes: float = 2900.0  # paper: 2.9 kB median JPG
         if not hasattr(sim, "tasks") or sim.tasks is Scheduler.tasks:
@@ -161,52 +192,104 @@ class Task:
     # Arrival + drop point 1                                             #
     # ------------------------------------------------------------------ #
     def on_arrival(self, ev: Event) -> None:
-        now_local = self.clock.now(self.sim.time)
+        now_local = self.sim.time + self.clock.skew
         self.stats.arrived += 1
-        beta = self.budget.min_budget() if self.drops_enabled else math.inf
-        if self.drops_enabled and drop_before_queuing(
-            ev.header.source_arrival,
-            now_local,
-            self.xi(1),
-            beta,
-            avoid_drop=ev.header.avoid_drop or ev.header.is_probe,
+        header = ev.header
+        if not self.drops_enabled and (
+            self._streaming
+            # Budget-less dynamic batching is the paper's bootstrap regime:
+            # batch size pinned to 1 (§4.5), i.e. streaming as well.
+            or (self._batcher_is_dynamic and not self.batcher._current)
         ):
-            self.stats.dropped_dp1 += 1
-            u = now_local - ev.header.source_arrival
-            self._on_drop(ev, epsilon=u + self.xi(1) - beta)
+            # Streaming fast path: the event is immediately its own batch.
+            busy = self._busy or now_local < self._busy_until
+            if not busy:
+                exec_dur = self._xi1
+                if self.fuse_streaming:
+                    # Fused: run the logic now, mark the server busy for
+                    # xi(1), and schedule the downstream arrival directly at
+                    # exec-end + transit — one heap event instead of two.
+                    # (Only enabled by callers whose logic may read state at
+                    # arrival rather than completion time; identical whenever
+                    # control updates are slower than xi(1).)
+                    self._busy_until = now_local + exec_dur
+                    # depart_at is absolute *simulation* time: durations are
+                    # skew-free but now_local carries the device skew.
+                    self._finish_streaming(
+                        ev, now_local, exec_dur, depart_at=self.sim.time + exec_dur
+                    )
+                    return
+                self._busy = True
+                self.sim.schedule(exec_dur, self._finish_streaming_event, ev, now_local, exec_dur)
+                return
+            self._run_queue.append(
+                [PendingEvent(event=ev, arrival=now_local, deadline=math.inf)]
+            )
+            if not self._busy and not self._drain_pending:
+                # Busy via a fused execution that has no completion callback:
+                # arrange a drain at its end.
+                self._drain_pending = True
+                self.sim.schedule(self._busy_until - now_local, self._drain_fused)
             return
-        deadline = ev.header.source_arrival + beta
+        if self.drops_enabled:
+            beta = self.budget.min_budget()
+            if drop_before_queuing(
+                header.source_arrival,
+                now_local,
+                self.xi(1),
+                beta,
+                avoid_drop=header.avoid_drop or header.is_probe,
+            ):
+                self.stats.dropped_dp1 += 1
+                u = now_local - header.source_arrival
+                self._on_drop(ev, epsilon=u + self.xi(1) - beta)
+                return
+            deadline = header.source_arrival + beta
+        else:
+            beta = math.inf
+            deadline = math.inf
         pe = PendingEvent(event=ev, arrival=now_local, deadline=deadline)
         # Bootstrap (§4.5): until a budget is assigned the deadline is
         # unbounded; the paper fixes the batch size at b=1 in that regime so
         # dynamic batches cannot grow without an auto-submit deadline.
-        if math.isinf(beta) and isinstance(self.batcher, DynamicBatcher):
+        if beta == math.inf and self._batcher_is_dynamic:
             open_batch = self.batcher.take() if self.batcher.current_size else []
             if open_batch:
                 self._enqueue_batch(open_batch)
             self._enqueue_batch([pe])
             return
+        if self._batcher_is_static:
+            # Inline StaticBatcher.offer: append, submit when full.
+            batcher = self.batcher
+            cur = batcher._current
+            cur.append(pe)
+            if len(cur) >= batcher.batch_size:
+                batcher._current = []
+                self._enqueue_batch(cur)
+            return
         submitted = self.batcher.offer(pe, now_local)
         if submitted:
             self._enqueue_batch(submitted)
-        self._arm_timer()
+        if self._batcher_is_dynamic:
+            self._arm_timer()
 
     def _arm_timer(self) -> None:
         """Auto-submit the open batch at ``Delta_p - xi(m)`` (§4.4)."""
+        if self._timer_pending:
+            return
         due = self.batcher.next_due_time()
-        if math.isinf(due) or self._timer_pending:
+        if math.isinf(due):
             return
         self._timer_pending = True
         delay = max(due - self.clock.now(self.sim.time), 0.0)
+        self.sim.schedule(delay, self._timer_fire)
 
-        def fire() -> None:
-            self._timer_pending = False
-            batch = self.batcher.flush_if_due(self.clock.now(self.sim.time))
-            if batch:
-                self._enqueue_batch(batch)
-            self._arm_timer()
-
-        self.sim.schedule(delay, fire)
+    def _timer_fire(self) -> None:
+        self._timer_pending = False
+        batch = self.batcher.flush_if_due(self.clock.now(self.sim.time))
+        if batch:
+            self._enqueue_batch(batch)
+        self._arm_timer()
 
     # ------------------------------------------------------------------ #
     # Execution: drop point 2, run, drop point 3                         #
@@ -216,116 +299,330 @@ class Task:
         self._maybe_run()
 
     def _maybe_run(self) -> None:
-        if self._busy or not self._run_queue:
+        # Iterative (not mutually recursive with the finish callback): a long
+        # run-queue of fully-dropped batches must not hit the recursion limit.
+        if self._busy:
             return
-        batch = self._run_queue.pop(0)
-        self._busy = True
-        now_local = self.clock.now(self.sim.time)
-        b = len(batch)
-        xi_b = self.xi(b)
-        beta = self.budget.min_budget() if self.drops_enabled else math.inf
-        tuples = [
-            (pe.event.header.source_arrival, pe.arrival, now_local - pe.arrival, pe.event)
-            for pe in batch
-        ]
-        if self.drops_enabled:
-            retained_evs, dropped_evs = drop_before_exec(tuples, xi_b, beta)
+        rq = self._run_queue
+        while rq:
+            batch = rq.popleft()
+            now_local = self.sim.time + self.clock.skew
+            if self.drops_enabled:
+                b = len(batch)
+                xi_b = self.xi(b)
+                beta = self.budget.min_budget()
+                tuples = [
+                    (pe.event.header.source_arrival, pe.arrival, now_local - pe.arrival, pe.event)
+                    for pe in batch
+                ]
+                retained_evs, dropped_evs = drop_before_exec(tuples, xi_b, beta)
+                if dropped_evs:
+                    pe_by_id = {pe.event.header.event_id: pe for pe in batch}
+                    for ev in dropped_evs:
+                        self.stats.dropped_dp2 += 1
+                        pe = pe_by_id[ev.header.event_id]
+                        u = pe.arrival - ev.header.source_arrival
+                        q = now_local - pe.arrival
+                        self._on_drop(ev, epsilon=u + q + xi_b - beta)
+                    if not retained_evs:
+                        continue
+                    retained_pes = [pe_by_id[ev.header.event_id] for ev in retained_evs]
+                else:
+                    retained_pes = batch
+            else:
+                retained_pes = batch
+            exec_dur = self.xi(len(retained_pes))
+            self._busy = True
+            self.sim.schedule(exec_dur, self._finish_and_continue, retained_pes, now_local, exec_dur)
+            return
+
+    def _finish_and_continue(
+        self, batch: List[PendingEvent], exec_start: float, exec_dur: float
+    ) -> None:
+        self._finish_batch(batch, exec_start=exec_start, exec_dur=exec_dur)
+        self._busy = False
+        self._maybe_run()
+
+    def _finish_streaming_event(self, ev: Event, arrival: float, exec_dur: float) -> None:
+        self._finish_streaming(ev, arrival, exec_dur)
+        self._busy = False
+        self._maybe_run()
+
+    def _drain_fused(self) -> None:
+        self._drain_pending = False
+        self._maybe_run()
+
+    def _deliver_many(self, evs: List[Event]) -> None:
+        """Arrival of a grouped same-destination transit (drops-off path)."""
+        if self._batcher_is_static and not self.drops_enabled and not self._streaming:
+            # Bulk arrival: replicate per-event on_arrival + StaticBatcher
+            # offer without the per-event call overhead.
+            now_local = self.sim.time + self.clock.skew
+            self.stats.arrived += len(evs)
+            batcher = self.batcher
+            cur = batcher._current
+            size = batcher.batch_size
+            inf = math.inf
+            for ev in evs:
+                cur.append(PendingEvent(event=ev, arrival=now_local, deadline=inf))
+                if len(cur) >= size:
+                    batcher._current = []
+                    self._enqueue_batch(cur)
+                    cur = batcher._current
+            return
+        arrive = self.on_arrival
+        for ev in evs:
+            arrive(ev)
+
+    def _finish_streaming(
+        self, ev: Event, arrival: float, exec_dur: float, depart_at: Optional[float] = None
+    ) -> None:
+        """Completion for the streaming (b=1, started-immediately) fast path:
+        ``exec_start == arrival`` so ``q == 0`` exactly, and the single event
+        is trivially its batch's slowest.
+
+        Precondition: only reachable with ``drops_enabled`` False (both call
+        sites gate on it), so budget records and path propagation — which
+        exist solely for the drop/budget signal machinery — are skipped.
+        """
+        stats = self.stats
+        stats.batches += 1
+        stats.batch_sizes.append(1)
+        h = ev.header
+        outputs = self.logic([ev], self.state)
+        u = arrival - h.source_arrival
+        pi = 0.0 + exec_dur
+        stats.executed += 1
+        if len(outputs) == 1 and outputs[0].header is h:
+            out = outputs[0]
+            h.xi_bar += exec_dur
+            out.batch_slowest = True
+            self._route(out, u=u, pi=pi, depart_at=depart_at)
         else:
-            retained_evs, dropped_evs = [t[3] for t in tuples], []
-        pe_by_id = {pe.event.event_id: pe for pe in batch}
-        for ev in dropped_evs:
-            self.stats.dropped_dp2 += 1
-            pe = pe_by_id[ev.event_id]
-            u = pe.arrival - ev.header.source_arrival
-            q = now_local - pe.arrival
-            self._on_drop(ev, epsilon=u + q + xi_b - beta)
-        if not retained_evs:
-            self._busy = False
-            self._maybe_run()
-            return
-        m = len(retained_evs)
-        exec_dur = self.xi(m)
-        retained_pes = [pe_by_id[ev.event_id] for ev in retained_evs]
-
-        def finish() -> None:
-            self._finish_batch(retained_pes, exec_start=now_local, exec_dur=exec_dur)
-            self._busy = False
-            self._maybe_run()
-
-        self.sim.schedule(exec_dur, finish)
+            outs = [o for o in outputs if o.header.event_id == h.event_id]
+            sole = len(outs) == 1
+            for out in outs:
+                if sole and out.header is h:
+                    out.header = h.advance_in_place(xi=exec_dur, q=0.0, task="")
+                else:
+                    out.header = h.advanced(xi=exec_dur, q=0.0, task="")
+                out.batch_slowest = True
+                self._route(out, u=u, pi=pi, depart_at=depart_at)
 
     def _finish_batch(
         self, batch: List[PendingEvent], exec_start: float, exec_dur: float
     ) -> None:
-        self.stats.batches += 1
-        self.stats.batch_sizes.append(len(batch))
+        stats = self.stats
+        stats.batches += 1
         m = len(batch)
-        probes = [pe.event for pe in batch if pe.event.header.is_probe]
-        work = [pe.event for pe in batch if not pe.event.header.is_probe]
-        outputs = self.logic(work, self.state) + probes
-        out_by_id: Dict[int, List[Event]] = {}
-        for out in outputs:
-            out_by_id.setdefault(out.event_id, []).append(out)
-        end_local = exec_start + exec_dur
+        stats.batch_sizes.append(m)
+        if m == 1 and not batch[0].event.header.is_probe:
+            # Single-event batch (streaming FCs, b=1 configs): it is trivially
+            # the slowest of its batch; skip the generic passes.
+            pe = batch[0]
+            ev = pe.event
+            h = ev.header
+            outputs = self.logic([ev], self.state)
+            u = pe.arrival - h.source_arrival
+            q = exec_start - pe.arrival
+            pi = q + exec_dur
+            stats.executed += 1
+            if self.drops_enabled:
+                self.budget.record(
+                    h.event_id,
+                    EventRecord(departure=u + pi, queuing=q, batch_size=1, xi=exec_dur),
+                )
+            task = self.name if self.drops_enabled else ""
+            if len(outputs) == 1 and outputs[0].header is h:
+                out = outputs[0]
+                h.xi_bar += exec_dur
+                h.q_bar += q
+                if task:
+                    h.path = h.path + (task,)
+                out.batch_slowest = True
+                self._route(out, u=u, pi=pi)
+            else:
+                # Same contract as the general path: only outputs causally
+                # tied to the input event (same id) are routed.
+                outs = [o for o in outputs if o.header.event_id == h.event_id]
+                sole = len(outs) == 1
+                for out in outs:
+                    if sole and out.header is h:
+                        out.header = h.advance_in_place(xi=exec_dur, q=q, task=task)
+                    else:
+                        out.header = h.advanced(xi=exec_dur, q=q, task=task)
+                    out.batch_slowest = True
+                    self._route(out, u=u, pi=pi)
+            return
+        probes: List[Event] = []
+        work: List[Event] = []
+        for pe in batch:
+            (probes if pe.event.header.is_probe else work).append(pe.event)
+        outputs = self.logic(work, self.state)
+        if probes:
+            outputs = list(outputs) + probes
         # Track the slowest event of the batch for the sink's accept logic.
         slowest_id, slowest_d = None, -math.inf
         for pe in batch:
-            u = pe.arrival - pe.event.header.source_arrival
+            h = pe.event.header
+            u = pe.arrival - h.source_arrival
             q = exec_start - pe.arrival
             pi = q + exec_dur
             d = u + pi
             if d > slowest_d:
-                slowest_d, slowest_id = d, pe.event.event_id
+                slowest_d, slowest_id = d, h.event_id
+        # Fast path: 1:1 selectivity with pass-through headers (the common
+        # case — identity logics and per-event transforms that reuse the
+        # incoming header object).  Headers advance in place: no allocation.
+        paired = not probes and len(outputs) == m
+        if paired:
+            for out, pe in zip(outputs, batch):
+                if out.header is not pe.event.header:
+                    paired = False
+                    break
+        keep_records = self.drops_enabled
+        budget_record = self.budget.record
+        if paired and not keep_records and self.downstream:
+            # Drops-off fast path: no DP3, no records, and every output to
+            # the same destination shares one transit — deliver each
+            # destination's events with a single scheduled callback instead
+            # of one heap event per event.
+            partition = self.partitioner
+            groups: Dict[str, List[Event]] = {}
+            for out, pe in zip(outputs, batch):
+                h = out.header
+                q = exec_start - pe.arrival
+                stats.executed += 1
+                h.xi_bar += exec_dur
+                h.q_bar += q
+                if h.event_id == slowest_id:
+                    out.batch_slowest = True
+                dst_name = partition(out)
+                g = groups.get(dst_name)
+                if g is None:
+                    groups[dst_name] = [out]
+                else:
+                    g.append(out)
+            memo = self._transit_memo
+            sim = self.sim
+            static = getattr(sim, "transit_is_static", False)
+            if memo and not static:
+                memo.clear()  # network turned dynamic: cached delays are stale
+            for dst_name, evs in groups.items():
+                dst = self.downstream[dst_name]
+                delay = memo.get(dst_name) if static else None
+                if delay is None:
+                    delay = sim.transit_delay(self.node, dst.node, self.output_event_bytes)
+                    if static:
+                        memo[dst_name] = delay
+                sim.schedule(delay, dst._deliver_many, evs)
+            return
+        if paired:
+            name = self.name if keep_records else ""
+            route = self._route
+            for out, pe in zip(outputs, batch):
+                h = out.header
+                u = pe.arrival - h.source_arrival
+                q = exec_start - pe.arrival
+                pi = q + exec_dur
+                stats.executed += 1
+                eid = h.event_id
+                if keep_records:
+                    budget_record(
+                        eid, EventRecord(departure=u + pi, queuing=q, batch_size=m, xi=exec_dur)
+                    )
+                h.xi_bar += exec_dur
+                h.q_bar += q
+                if name:
+                    h.path = h.path + (name,)
+                if eid == slowest_id:
+                    out.batch_slowest = True
+                route(out, u=u, pi=pi)
+            return
+        out_by_id: Dict[int, List[Event]] = {}
+        for out in outputs:
+            out_by_id.setdefault(out.header.event_id, []).append(out)
         for pe in batch:
             ev = pe.event
-            u = pe.arrival - ev.header.source_arrival
+            h = ev.header
+            u = pe.arrival - h.source_arrival
             q = exec_start - pe.arrival
             pi = q + exec_dur
-            self.stats.executed += 1
-            self.budget.record(
-                ev.event_id,
-                EventRecord(departure=u + pi, queuing=q, batch_size=m, xi=exec_dur),
-            )
-            for out in out_by_id.get(ev.event_id, []):
-                out.header = ev.header.advanced(xi=exec_dur, q=q, task=self.name)
-                if out.event_id == slowest_id:
-                    setattr(out, "batch_slowest", True)
+            stats.executed += 1
+            if keep_records:
+                budget_record(
+                    h.event_id,
+                    EventRecord(departure=u + pi, queuing=q, batch_size=m, xi=exec_dur),
+                )
+            outs = out_by_id.get(h.event_id, ())
+            sole = len(outs) == 1
+            task = self.name if keep_records else ""
+            for out in outs:
+                if sole and out.header is h:
+                    out.header = h.advance_in_place(xi=exec_dur, q=q, task=task)
+                else:
+                    out.header = h.advanced(xi=exec_dur, q=q, task=task)
+                if h.event_id == slowest_id:
+                    out.batch_slowest = True
                 self._route(out, u=u, pi=pi)
 
-    def _route(self, ev: Event, u: float, pi: float) -> None:
+    def _route(
+        self, ev: Event, u: float, pi: float, depart_at: Optional[float] = None
+    ) -> None:
         if not self.downstream:
             return
         dst_name = self.partitioner(ev)
         dst = self.downstream[dst_name]
-        self._event_downstream[ev.event_id] = dst_name
-        beta = self.budget.budget(dst_name) if self.drops_enabled else math.inf
-        # DP3 test is u + pi > beta (§4.3.3); express via drop_before_transmit
-        # with arrival reconstructed so that arrival - source_arrival == u.
-        if self.drops_enabled and drop_before_transmit(
-            0.0,
-            u,
-            pi,
-            beta,
-            avoid_drop=ev.header.avoid_drop or ev.header.is_probe,
-        ):
-            self.stats.dropped_dp3 += 1
-            self._on_drop(ev, epsilon=u + pi - beta, downstream=dst_name)
-            return
-        delay = self.sim.transit_delay(self.node, dst.node, self.output_event_bytes)
-        self.sim.schedule(delay, lambda e=ev, d=dst: d.on_arrival(e))
+        if self.drops_enabled:
+            # Remember where the event went so a late signal updates the
+            # right per-downstream budget (only consulted when drops are on).
+            eds = self._event_downstream
+            eds[ev.header.event_id] = dst_name
+            if len(eds) > self.EVENT_DOWNSTREAM_CAPACITY:
+                eds.popitem(last=False)
+            beta = self.budget.budget(dst_name)
+            # DP3 test is u + pi > beta (§4.3.3); express via
+            # drop_before_transmit with arrival reconstructed so that
+            # arrival - source_arrival == u.
+            if drop_before_transmit(
+                0.0,
+                u,
+                pi,
+                beta,
+                avoid_drop=ev.header.avoid_drop or ev.header.is_probe,
+            ):
+                self.stats.dropped_dp3 += 1
+                self._on_drop(ev, epsilon=u + pi - beta, downstream=dst_name)
+                return
+        static = getattr(self.sim, "transit_is_static", False)
+        delay = self._transit_memo.get(dst_name) if static else None
+        if delay is None:
+            if not static and self._transit_memo:
+                self._transit_memo.clear()  # network turned dynamic mid-run
+            delay = self.sim.transit_delay(self.node, dst.node, self.output_event_bytes)
+            if static:
+                self._transit_memo[dst_name] = delay
+        if depart_at is None:
+            self.sim.schedule(delay, dst.on_arrival, ev)
+        else:
+            # Fused streaming: the event departs at exec-end; the arrival
+            # time (depart_at + delay) matches the unfused two-hop float
+            # arithmetic exactly.
+            self.sim.schedule_at(depart_at + delay, dst.on_arrival, ev)
 
     # ------------------------------------------------------------------ #
     # Signals (§4.5)                                                     #
     # ------------------------------------------------------------------ #
     def _on_drop(self, ev: Event, epsilon: float, downstream: str = "") -> None:
         self._drop_count += 1
+        header = ev.header
         sig = RejectSignal(
-            event_id=ev.event_id,
+            event_id=header.event_id,
             epsilon=max(epsilon, 0.0),
-            q_bar=ev.header.q_bar,
+            q_bar=header.q_bar,
             from_task=self.name,
         )
-        for up in self._path_tasks(ev.header.path):
+        for up in self._path_tasks(header.path):
             up.receive_reject(sig)
         # Probe every k-th dropped event: re-inject it as un-droppable so it
         # traverses the NORMAL path (including this task's own executor) —
@@ -335,17 +632,20 @@ class Task:
         if self.probe_every > 0 and self._drop_count % self.probe_every == 0:
             probe = Event(
                 header=EventHeader(
-                    event_id=ev.header.event_id,
-                    source_arrival=ev.header.source_arrival,
-                    xi_bar=ev.header.xi_bar,
-                    q_bar=ev.header.q_bar,
+                    event_id=header.event_id,
+                    source_arrival=header.source_arrival,
+                    xi_bar=header.xi_bar,
+                    q_bar=header.q_bar,
                     is_probe=True,
-                    path=ev.header.path,
+                    path=header.path,
                 ),
                 key=ev.key,
                 value=ev.value,
             )
-            self.sim.schedule(0.0, lambda: self.on_arrival(probe))
+            self.sim.schedule(0.0, self.on_arrival, probe)
+        # The event dies here; its header can be recycled (see events.py).
+        ev.header = None  # type: ignore[assignment]
+        release_header(header)
 
     def receive_reject(self, sig: RejectSignal) -> None:
         downstream = self._event_downstream.get(sig.event_id, "")
@@ -370,6 +670,8 @@ class SinkTask(Task):
         on_event: Optional[Callable[[Event, float], None]] = None,
         clock: Optional[Clock] = None,
         node: str = "",
+        learn_budgets: bool = True,
+        recycle_headers: bool = False,
     ) -> None:
         super().__init__(
             name,
@@ -383,17 +685,26 @@ class SinkTask(Task):
         self.gamma = float(gamma)
         self.epsilon_max = float(epsilon_max)
         self.on_event = on_event
+        # Accept signals exist to raise upstream completion budgets; when the
+        # whole pipeline runs with drops disabled the budgets are never
+        # consulted, so the scenario can turn signal generation off.
+        self.learn_budgets = bool(learn_budgets)
+        # Header recycling is an opt-in for owners whose ``on_event`` callback
+        # provably does not retain the event (or its header): a retained
+        # header would be overwritten when the pool reuses it.
+        self.recycle_headers = bool(recycle_headers)
         self.latencies: List[Tuple[float, float]] = []  # (t_now, latency)
         self.delayed: int = 0
         self.on_time: int = 0
         self.budget.set_budget(self.gamma)
 
     def on_arrival(self, ev: Event) -> None:  # overrides Task
-        now_local = self.clock.now(self.sim.time)
+        now_local = self.sim.time + self.clock.skew
         self.stats.arrived += 1
-        u = now_local - ev.header.source_arrival  # kappa_1 == kappa_n (§4.6.2)
-        if ev.header.is_probe:
-            if u <= self.gamma:
+        header = ev.header
+        u = now_local - header.source_arrival  # kappa_1 == kappa_n (§4.6.2)
+        if header.is_probe:
+            if u <= self.gamma and self.learn_budgets:
                 self._send_accept(ev, epsilon=self.gamma - u)
             return
         self.latencies.append((now_local, u))
@@ -402,16 +713,22 @@ class SinkTask(Task):
         else:
             self.delayed += 1
         # Accept only on the slowest event of an upstream batch (§4.5.2).
-        if getattr(ev, "batch_slowest", False):
+        if ev.batch_slowest and self.learn_budgets:
             epsilon = self.gamma - u
             if epsilon > self.epsilon_max:
                 self._send_accept(ev, epsilon=epsilon)
         if self.on_event is not None:
             self.on_event(ev, now_local)
+        # Flow ends here.  Recycling is only safe when the sink owner opted
+        # in (``recycle_headers``): a user callback may have retained the
+        # event, and we cannot detect that here.
+        if self.recycle_headers and ev.header is header:
+            ev.header = None  # type: ignore[assignment]
+            release_header(header)
 
     def _send_accept(self, ev: Event, epsilon: float) -> None:
         sig = AcceptSignal(
-            event_id=ev.event_id,
+            event_id=ev.header.event_id,
             epsilon=epsilon,
             xi_bar=ev.header.xi_bar,
             from_task=self.name,

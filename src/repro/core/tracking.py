@@ -10,19 +10,28 @@ to the detecting camera.  Strategies:
 * :class:`TLWBFS`  — Dijkstra-ball spotlight using true road lengths (Alg. 1).
 * :class:`TLProbabilistic` — App 4: a naive-Bayes-style likelihood over paths;
   activates the smallest camera set covering ``coverage`` probability mass.
+  Also exposes a *multi-entity* path (:meth:`TLProbabilistic.track` /
+  :meth:`TLProbabilistic.spotlight_multi`) that searches all tracked
+  entities' balls at once — optionally through the batched
+  ``repro.kernels.spotlight_ball`` CSR relaxation kernel.
 
 All spotlight strategies are configured with the entity's expected peak speed
 ``es`` (m/s): the spotlight radius grows as ``es * (now - last_seen_time)``
 while the entity is in a blind-spot (Rate of Expansion, §5.2.1).
+
+The weighted-ball strategies are *incremental*: the radius only grows during
+a blind spot, so each TL tick resumes the previous Dijkstra frontier
+(:class:`repro.core.roadnet.ResumableDijkstra`) instead of recomputing the
+ball from scratch — O(newly reached road) per tick instead of O(ball).
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
-from .roadnet import RoadNetwork
+from .roadnet import ResumableDijkstra, RoadNetwork
 
 __all__ = [
     "Detection",
@@ -34,7 +43,7 @@ __all__ = [
 ]
 
 
-@dataclass
+@dataclass(slots=True)
 class Detection:
     """A CR verdict for one frame: which camera, was the entity present."""
 
@@ -67,8 +76,11 @@ class TrackingLogic:
     # ------------------------------------------------------------------ #
     def cameras_in_vertices(self, vertices: Iterable[int]) -> Set[int]:
         out: Set[int] = set()
+        vc = self._vertex_cameras
         for v in vertices:
-            out.update(self._vertex_cameras.get(v, ()))
+            cams = vc.get(v)
+            if cams:
+                out.update(cams)
         return out
 
     def spotlight(self, now: float) -> Set[int]:
@@ -110,6 +122,15 @@ class TLBase(TrackingLogic):
 
 
 class _SpotlightTL(TrackingLogic):
+    def __init__(self, *args, **kwargs) -> None:
+        super().__init__(*args, **kwargs)
+        # Incremental-ball state: valid while the source stays fixed and the
+        # radius keeps growing (one blind-spot episode).
+        self._search: Optional[ResumableDijkstra] = None
+        self._search_radius: float = -math.inf
+        self._ball_cams: Set[int] = set()
+        self._consumed: int = 0
+
     def _radius_m(self, now: float) -> float:
         if self.last_seen_time is None:
             return math.inf  # never seen: search everywhere
@@ -120,6 +141,33 @@ class _SpotlightTL(TrackingLogic):
         if self.last_seen_camera is None:
             return None
         return self.camera_vertices.get(self.last_seen_camera)
+
+    def _incremental_ball(self, src: int, radius: float) -> Dict[int, float]:
+        """Resume (or restart) the Dijkstra ball; returns the live settled
+        map, identical to ``weighted_ball(src, radius)``."""
+        search = self._search
+        if search is None or search.source != src or radius < self._search_radius:
+            search = self._search = ResumableDijkstra(self.network, src)
+            self._ball_cams = set()
+            self._consumed = 0
+        self._search_radius = radius
+        return search.ball(radius)
+
+    def _incremental_ball_cams(self, src: int, radius: float) -> Set[int]:
+        """Cameras inside the incremental ball; folds only *newly settled*
+        vertices into the cached camera set."""
+        self._incremental_ball(src, radius)
+        search = self._search
+        order = search.order
+        if self._consumed < len(order):
+            vc = self._vertex_cameras
+            cams = self._ball_cams
+            for v in order[self._consumed :]:
+                found = vc.get(v)
+                if found:
+                    cams.update(found)
+            self._consumed = len(order)
+        return self._ball_cams
 
 
 class TLBFS(_SpotlightTL):
@@ -143,15 +191,15 @@ class TLWBFS(_SpotlightTL):
     """Spotlight via weighted BFS (Dijkstra) over true road lengths (Alg. 1).
 
     Aware of exact segment lengths, its spotlight grows in finer steps and
-    stays smaller than TL-BFS for the same blind-spot duration (§5.2.2)."""
+    stays smaller than TL-BFS for the same blind-spot duration (§5.2.2).
+    The ball is expanded incrementally across ticks."""
 
     def spotlight(self, now: float) -> Set[int]:
         src = self._source_vertex()
         radius = self._radius_m(now)
         if src is None or math.isinf(radius):
             return set(self.camera_vertices)
-        ball = self.network.weighted_ball(src, radius)
-        return self.cameras_in_vertices(ball)
+        return set(self._incremental_ball_cams(src, radius))
 
 
 class TLProbabilistic(_SpotlightTL):
@@ -162,37 +210,123 @@ class TLProbabilistic(_SpotlightTL):
     seen location and (b) a learned/uniform prior over turns (vertex degree).
     Activates the smallest set covering ``coverage`` of the probability mass,
     so it can keep the active set tighter than pure reachability.
+
+    Multi-entity mode: :meth:`track` registers additional entity queries
+    (each with its own last-seen state); :meth:`spotlight_multi` unions the
+    per-entity coverage sets, evaluating all Dijkstra balls either
+    incrementally in Python or as one batched CSR relaxation via the
+    ``spotlight_ball`` kernel (``use_kernel=True``).
     """
 
     def __init__(self, *args, coverage: float = 0.9, **kwargs) -> None:
         super().__init__(*args, **kwargs)
         self.coverage = float(coverage)
+        # entity id -> (last seen vertex, last seen time)
+        self.entities: Dict[Any, Tuple[int, float]] = {}
+        self._entity_searches: Dict[Any, ResumableDijkstra] = {}
 
+    # -- single-entity (paper App 4) ----------------------------------- #
     def spotlight(self, now: float) -> Set[int]:
         src = self._source_vertex()
         radius = self._radius_m(now)
         if src is None or math.isinf(radius):
             return set(self.camera_vertices)
-        ball = self.network.weighted_ball(src, radius)
-        cams = self.cameras_in_vertices(ball)
+        ball = self._incremental_ball(src, radius)
+        cams = self._incremental_ball_cams(src, radius)
         if not cams:
-            return cams
+            return set()
+        return self._coverage_set(ball, cams, radius)
+
+    def _coverage_set(
+        self, ball: Dict[int, float], cams: Iterable[int], radius: float
+    ) -> Set[int]:
         # Likelihood: exponential decay with distance, normalized.
         scores: List[Tuple[float, int]] = []
         scale = max(radius, 1.0)
+        adjacency = self.network.adjacency
+        camera_vertices = self.camera_vertices
         for cam in cams:
-            v = self.camera_vertices[cam]
+            v = camera_vertices[cam]
             d = ball.get(v, radius)
-            deg = max(len(self.network.adjacency[v]), 1)
+            deg = max(len(adjacency[v]), 1)
             # Random-walk heuristic: mass dilutes with distance and branching.
             scores.append((math.exp(-2.0 * d / scale) / deg, cam))
         total = sum(s for s, _ in scores)
         scores.sort(reverse=True)
         chosen: Set[int] = set()
         acc = 0.0
+        threshold = self.coverage * total
         for s, cam in scores:
             chosen.add(cam)
             acc += s
-            if acc >= self.coverage * total:
+            if acc >= threshold:
                 break
+        return chosen
+
+    # -- multi-entity -------------------------------------------------- #
+    def track(self, entity: Any, camera_id: int, timestamp: float) -> None:
+        """Register (or refresh) an entity query's last positive sighting."""
+        vertex = self.camera_vertices[camera_id]
+        self.entities[entity] = (vertex, timestamp)
+        self._entity_searches.pop(entity, None)  # contraction: restart ball
+
+    def untrack(self, entity: Any) -> None:
+        self.entities.pop(entity, None)
+        self._entity_searches.pop(entity, None)
+
+    def _entity_radius(self, last_time: float, now: float) -> float:
+        return self.min_radius_m + self.entity_speed * max(now - last_time, 0.0)
+
+    def spotlight_multi(self, now: float, use_kernel: bool = False) -> Set[int]:
+        """Union of per-entity coverage sets for all tracked entities."""
+        if not self.entities:
+            return set()
+        if use_kernel:
+            return self._spotlight_multi_kernel(now)
+        chosen: Set[int] = set()
+        for entity, (vertex, last_time) in self.entities.items():
+            radius = self._entity_radius(last_time, now)
+            search = self._entity_searches.get(entity)
+            if search is None or search.source != vertex:
+                search = ResumableDijkstra(self.network, vertex)
+                self._entity_searches[entity] = search
+            ball = search.ball(radius)
+            cams = self.cameras_in_vertices(ball)
+            if cams:
+                chosen |= self._coverage_set(ball, cams, radius)
+        return chosen
+
+    def _spotlight_multi_kernel(self, now: float) -> Set[int]:
+        """Batched path: one ``spotlight_ball`` relaxation for all entities'
+        balls over the CSR graph, then vectorized coverage selection."""
+        import numpy as np
+
+        from repro.kernels.spotlight_ball.ops import spotlight_ball
+
+        indptr, indices, weights = self.network.csr()
+        items = list(self.entities.items())
+        sources = np.asarray([v for _, (v, _) in items], dtype=np.int32)
+        radii = np.asarray(
+            [self._entity_radius(t, now) for _, (_, t) in items], dtype=np.float32
+        )
+        dists = np.asarray(
+            spotlight_ball(indptr, indices, weights.astype(np.float32), sources, radii)
+        )  # (Q, V); inf outside each ball
+        cam_ids = np.fromiter(self.camera_vertices.keys(), dtype=np.int64)
+        cam_verts = np.fromiter(self.camera_vertices.values(), dtype=np.int64)
+        degrees = np.diff(indptr).astype(np.float64)
+        chosen: Set[int] = set()
+        for qi in range(len(items)):
+            d = dists[qi, cam_verts]
+            inside = np.isfinite(d)
+            if not inside.any():
+                continue
+            radius = float(radii[qi])
+            scale = max(radius, 1.0)
+            deg = np.maximum(degrees[cam_verts[inside]], 1.0)
+            mass = np.exp(-2.0 * d[inside].astype(np.float64) / scale) / deg
+            order = np.argsort(-mass, kind="stable")
+            csum = np.cumsum(mass[order])
+            cut = int(np.searchsorted(csum, self.coverage * csum[-1])) + 1
+            chosen.update(int(c) for c in cam_ids[inside][order[:cut]])
         return chosen

@@ -5,6 +5,11 @@ candidate embeddings into VMEM, L2-normalizes it, matmuls against the
 (Q, D) query tile (kept resident — Q is small: one entity plus QF-fused
 variants), and emits per-candidate best score / best query / match flag.
 
+The queries are invariant across gallery tiles, so their L2-normalization
+is hoisted out of the grid: ``ops.py`` normalizes once and the kernel
+consumes pre-normalized queries (one rsqrt+mul per query total instead of
+one per tile).
+
 One MXU pass per tile; the gallery streams through VMEM once, so the
 kernel is bandwidth-bound at ~D bytes per candidate — the right regime for
 CR, which must score every active camera's detections each frame.
@@ -24,7 +29,7 @@ __all__ = ["reid_match_pallas"]
 
 def _kernel(
     g_ref,  # (block_n, D)
-    q_ref,  # (Q, D)
+    q_ref,  # (Q, D) — pre-normalized by the caller (invariant across tiles)
     score_ref,  # (block_n,)
     best_ref,  # (block_n,)
     match_ref,  # (block_n,)
@@ -35,9 +40,6 @@ def _kernel(
     q = q_ref[...].astype(jnp.float32)
     g = g / jnp.maximum(
         jnp.sqrt(jnp.sum(g * g, axis=1, keepdims=True)), 1e-6
-    )
-    q = q / jnp.maximum(
-        jnp.sqrt(jnp.sum(q * q, axis=1, keepdims=True)), 1e-6
     )
     sim = jax.lax.dot_general(
         g, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -64,6 +66,13 @@ def reid_match_pallas(
     if pad:
         gallery = jnp.pad(gallery, ((0, pad), (0, 0)))
     Np = gallery.shape[0]
+
+    # Hoisted out of the grid: the query tile is identical for every gallery
+    # block, so normalize once here instead of once per grid step.
+    queries = queries.astype(jnp.float32)
+    queries = queries / jnp.maximum(
+        jnp.sqrt(jnp.sum(queries * queries, axis=1, keepdims=True)), 1e-6
+    )
 
     kernel = functools.partial(_kernel, threshold=threshold)
     scores, best, is_match = pl.pallas_call(

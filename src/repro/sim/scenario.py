@@ -24,7 +24,7 @@ import numpy as np
 from repro.core.batching import DynamicBatcher, NOBBatcher, StaticBatcher
 from repro.core.budget import TaskBudget
 from repro.core.clock import Clock
-from repro.core.events import Event, EventHeader, new_event_id
+from repro.core.events import Event, EventHeader, new_event_id, source_header
 from repro.core.pipeline import SinkTask, Task
 from repro.core.roadnet import RoadNetwork, make_road_network
 from repro.core.tracking import (
@@ -39,6 +39,20 @@ from .cameras import CameraNetwork, EntityWalk, Frame
 from .simulator import DiscreteEventSimulator, NetworkModel
 
 __all__ = ["ScenarioConfig", "ScenarioResult", "TrackingScenario", "linear_xi"]
+
+
+def _constant_partitioner(name: str) -> Callable:
+    def partition(ev) -> str:
+        return name
+
+    return partition
+
+
+def _table_partitioner(table: Dict) -> Callable:
+    def partition(ev) -> str:
+        return table[ev.key]
+
+    return partition
 
 
 def linear_xi(c0: float, c1: float) -> Callable[[int], float]:
@@ -60,6 +74,11 @@ class ScenarioConfig:
     entity_speed_mps: float = 1.0
     fov_radius_m: float = 6.0
     seed: int = 0
+    # Road-network size.  None keeps the paper's 1000-vertex/2817-edge OSM
+    # statistics (and grows the graph proportionally once ``num_cameras``
+    # exceeds the vertex count, so 5k/10k-camera sweeps have a vertex per
+    # camera).
+    road_vertices: Optional[int] = None
     # QoS
     gamma: float = 15.0
     epsilon_max: float = 1.0
@@ -155,7 +174,16 @@ class TrackingScenario:
 
     def __init__(self, config: ScenarioConfig) -> None:
         self.cfg = config
-        self.road = make_road_network(seed=config.seed)
+        num_vertices = config.road_vertices or max(1000, config.num_cameras)
+        if num_vertices == 1000:
+            self.road = make_road_network(seed=config.seed)
+        else:
+            # Keep the paper's edge density (2817/1000) and mean road length.
+            self.road = make_road_network(
+                num_vertices=num_vertices,
+                target_edges=int(round(num_vertices * 2.817)),
+                seed=config.seed,
+            )
         self.walk = EntityWalk(
             self.road,
             start_vertex=0,
@@ -183,6 +211,13 @@ class TrackingScenario:
         self._detections_on_time = 0
         self._pending_detections: List[Detection] = []
         self._source_events = 0
+        # Active-set mirrors so the per-tick loops are O(active cameras),
+        # not O(all cameras): `_fc_active` tracks the FC states that are
+        # *currently* active (control latency applied); `_ctrl_target` is the
+        # last activation set TL asked for (so ticks only schedule control
+        # events for the delta).
+        self._fc_active: Set[int] = set(self.tl.active)
+        self._ctrl_target: Set[int] = set(self.tl.active)
 
     # ------------------------------------------------------------------ #
     def _build_tl(self) -> None:
@@ -204,14 +239,10 @@ class TrackingScenario:
             raise ValueError(f"unknown tl strategy {cfg.tl!r}")
         # The query names a last-seen location (Fig. 1: start with only the
         # camera covering it active).
-        start_cam = min(
-            cams,
-            key=lambda c: float(
-                np.linalg.norm(
-                    self.road.positions[cams[c]] - self.road.positions[self.walk.vertices[0]]
-                )
-            ),
-        )
+        cam_ids = list(cams)
+        cam_pos = self.road.positions[np.fromiter(cams.values(), dtype=np.int64)]
+        d = np.linalg.norm(cam_pos - self.road.positions[self.walk.vertices[0]], axis=1)
+        start_cam = cam_ids[int(np.argmin(d))]
         self.tl.last_seen_camera = start_cam
         self.tl.last_seen_time = 0.0
         self.tl.active = self.tl.spotlight(0.0) if self.cfg.tl != "base" else set(cams)
@@ -241,6 +272,12 @@ class TrackingScenario:
             on_event=self._on_sink_event,
             clock=Clock(0.0),  # kappa_n == kappa_1 (§4.6.2)
             node="head",
+            # Budgets are only consulted by the drop points; skip the accept
+            # machinery entirely in no-drop runs.
+            learn_budgets=cfg.drops_enabled,
+            # _on_sink_event only reads ev.value/ev.header inline and never
+            # retains the event, so recycling headers at the sink is safe.
+            recycle_headers=True,
         )
         sim.host_of["UV"] = "head"
 
@@ -264,7 +301,12 @@ class TrackingScenario:
             )
             t.output_event_bytes = 256.0  # metadata only (§2.2.3)
             t.connect(self.sink)
-            t.partitioner = lambda ev: "UV"
+            t.partitioner = _constant_partitioner("UV")
+            # CR logic has no completion-time state reads: safe to fuse its
+            # streaming (b=1) executions with the outbound transit.
+            t.fuse_streaming = not cfg.drops_enabled and getattr(
+                sim, "transit_is_static", False
+            )
             self.cr_tasks.append(t)
             sim.host_of[t.name] = node
 
@@ -284,44 +326,95 @@ class TrackingScenario:
             )
             for cr in self.cr_tasks:
                 t.connect(cr)
-            t.partitioner = lambda ev: f"CR-{hash(ev.key) % cfg.num_cr}"
+            # Keys are camera ids, a small fixed universe: precompute the
+            # routing table instead of formatting a string per event.
+            if not hasattr(self, "_cr_route"):
+                self._cr_route = {
+                    cam: f"CR-{hash(cam) % cfg.num_cr}"
+                    for cam in self.cameras.camera_vertices
+                }
+            t.partitioner = _table_partitioner(self._cr_route)
+            t.fuse_streaming = not cfg.drops_enabled and getattr(
+                sim, "transit_is_static", False
+            )
             self.va_tasks.append(t)
             sim.host_of[t.name] = node
 
+        # FC tasks are created lazily: a 10k-camera scenario with a spotlight
+        # TL only ever activates a small moving subset, so building a Task
+        # (+ its budget, batcher, wiring) per camera upfront dominated
+        # construction time.  `_make_fc` is called on first activation or
+        # first sourced frame.
+        self._fc_xi = fc_xi
         self.fc_tasks: Dict[int, Task] = {}
-        for cam in self.cameras.camera_vertices:
-            # FC co-located with the camera on an edge host; round-robin the
-            # *downstream* VA by camera id (paper: FCs scheduled round-robin).
-            t = Task(
-                f"FC-{cam}",
-                sim,
-                fc_xi,
-                StaticBatcher(fc_xi, batch_size=1),  # FC logic is simple/edge
-                logic=self._fc_logic,
-                clock=Clock(0.0),  # source clock kappa_1
-                budget=TaskBudget(f"FC-{cam}", fc_xi, m_max=1),
-                drops_enabled=cfg.drops_enabled,
-                node=f"edge{cam}",
+        # Full FC fusion: with drops off, a static network and a frame period
+        # longer than xi_fc(1), the FC stage reduces exactly to "arrive at
+        # the VA at t + xi_fc(1) + transit with xi_bar advanced" — the
+        # per-camera Task machinery is bypassed wholesale (it still runs for
+        # drops-enabled or dynamic-bandwidth configs).
+        self._fc_xi1 = fc_xi(1)
+        self._fuse_fc = (
+            not cfg.drops_enabled
+            and getattr(sim, "transit_is_static", False)
+            and 1.0 / cfg.fps > self._fc_xi1
+        )
+        if self._fuse_fc:
+            # All FC->VA transits are edge-host -> compute-node MAN hops with
+            # the same payload size: one delay for every camera.
+            self._fc_transit = sim.network.transit_delay(
+                "edge*", "node*", 2900.0, 0.0
             )
-            for va in self.va_tasks:
-                t.connect(va)
-            t.partitioner = lambda ev: f"VA-{hash(ev.key) % cfg.num_va}"
-            t.state["isActive"] = cam in self.tl.active
-            self.fc_tasks[cam] = t
-            sim.host_of[t.name] = f"edge{cam}"
+            self._va_of = {
+                cam: self.va_tasks[hash(cam) % cfg.num_va]
+                for cam in self.cameras.camera_vertices
+            }
+
+    def _make_fc(self, cam: int) -> Task:
+        cfg = self.cfg
+        sim = self.sim
+        # FC co-located with the camera on an edge host; round-robin the
+        # *downstream* VA by camera id (paper: FCs scheduled round-robin).
+        fc_xi = self._fc_xi
+        t = Task(
+            f"FC-{cam}",
+            sim,
+            fc_xi,
+            StaticBatcher(fc_xi, batch_size=1),  # FC logic is simple/edge
+            logic=self._fc_logic,
+            clock=Clock(0.0),  # source clock kappa_1
+            budget=TaskBudget(f"FC-{cam}", fc_xi, m_max=1),
+            drops_enabled=cfg.drops_enabled,
+            node=f"edge{cam}",
+        )
+        for va in self.va_tasks:
+            t.connect(va)
+        # Each FC has a fixed key (its camera), so its destination VA is
+        # a constant.
+        t.partitioner = _constant_partitioner(f"VA-{hash(cam) % cfg.num_va}")
+        t.state["isActive"] = cam in self._fc_active
+        # FC control updates land >= man_latency after a tick while xi(1) is
+        # sub-millisecond, so arrival-time state reads match finish-time
+        # reads: safe to fuse the execute+transmit hops (see pipeline.py).
+        t.fuse_streaming = not cfg.drops_enabled and getattr(
+            sim, "transit_is_static", False
+        )
+        self.fc_tasks[cam] = t
+        sim.host_of[t.name] = f"edge{cam}"
+        return t
 
     # ------------------------------------------------------------------ #
     # Module logics                                                       #
     # ------------------------------------------------------------------ #
     def _fc_logic(self, events: List[Event], state: Dict) -> List[Event]:
-        out = [ev for ev in events if state.get("isActive", True)]
+        if not state.get("isActive", True):
+            return []
         # FC may inspect frame content (§2.2.1); a cheap edge-side candidate
         # filter flags likely positives so no drop point sheds them (§4.3.3).
         if self.cfg.avoid_drop_positives:
-            for ev in out:
+            for ev in events:
                 if getattr(ev.value, "has_entity", False):
                     ev.header.avoid_drop = True
-        return out
+        return events
 
     def _va_logic(self, events: List[Event], state: Dict) -> List[Event]:
         # Object detection: every frame yields candidate boxes (1:1).  A
@@ -331,23 +424,29 @@ class TrackingScenario:
             for ev in events:
                 if getattr(ev.value, "has_entity", False):
                     ev.header.avoid_drop = True
-        return list(events)
+        return events
 
     def _cr_logic(self, events: List[Event], state: Dict) -> List[Event]:
-        rng = state.setdefault("rng", np.random.default_rng(self.cfg.seed + 101))
-        out: List[Event] = []
+        rng = state.get("rng")
+        if rng is None:
+            rng = state["rng"] = np.random.default_rng(self.cfg.seed + 101)
+        p_tp = self.cfg.p_true_positive
+        avoid = self.cfg.avoid_drop_positives
         for ev in events:
             frame: Frame = ev.value
-            positive = bool(frame.has_entity) and (
-                float(rng.uniform()) <= self.cfg.p_true_positive
-            )
-            det = Detection(
+            # NB: the rng is consumed only on entity frames (short-circuit),
+            # keeping the random stream identical across refactors.
+            positive = bool(frame.has_entity) and (float(rng.uniform()) <= p_tp)
+            if positive and avoid:
+                ev.header.avoid_drop = True
+            # 1:1 transform: reuse the event object, swap the frame payload
+            # for the CR verdict.  Clear the slowest-of-batch mark from the
+            # upstream stage — the runtime re-marks this stage's slowest.
+            ev.batch_slowest = False
+            ev.value = Detection(
                 camera_id=frame.camera_id, positive=positive, timestamp=frame.timestamp
             )
-            if positive and self.cfg.avoid_drop_positives:
-                ev.header.avoid_drop = True
-            out.append(Event(header=ev.header, key=ev.key, value=det))
-        return out
+        return events
 
     # ------------------------------------------------------------------ #
     # Sink + TL feedback                                                  #
@@ -360,19 +459,45 @@ class TrackingScenario:
                 self._detections_on_time += 1
         self._pending_detections.append(det)
 
+    def _apply_fc_active(self, cam: int, want: bool) -> None:
+        """Control-event delivery (runs ``man_latency_s`` after the TL tick)."""
+        if self._fuse_fc:
+            # Fused FC mode keeps no per-camera tasks; the mirror set is the
+            # entire FC state.
+            if want:
+                self._fc_active.add(cam)
+            else:
+                self._fc_active.discard(cam)
+            return
+        if want:
+            fc = self.fc_tasks.get(cam)
+            if fc is None:
+                self._fc_active.add(cam)  # _make_fc reads the mirror
+                self._make_fc(cam)
+            else:
+                fc.state["isActive"] = True
+                self._fc_active.add(cam)
+        else:
+            fc = self.fc_tasks.get(cam)
+            if fc is not None:
+                fc.state["isActive"] = False
+            self._fc_active.discard(cam)
+
     def _tl_tick(self) -> None:
         now = self.sim.time
         dets, self._pending_detections = self._pending_detections, []
         new_active = self.tl.update(dets, now)
         self._stats_active.append((now, len(new_active)))
         # Control events to FCs (TL -> FC, §2.2.1) after a control latency.
-        for cam, fc in self.fc_tasks.items():
-            want = cam in new_active
-            if fc.state.get("isActive") != want:
-                self.sim.schedule(
-                    self.sim.network.man_latency_s,
-                    lambda f=fc, w=want: f.state.__setitem__("isActive", w),
-                )
+        # Only the delta against the previously requested set is scheduled,
+        # so a tick costs O(|changed|), not O(num_cameras).
+        latency = self.sim.network.man_latency_s
+        prev = self._ctrl_target
+        for cam in new_active - prev:
+            self.sim.schedule(latency, self._apply_fc_active, cam, True)
+        for cam in prev - new_active:
+            self.sim.schedule(latency, self._apply_fc_active, cam, False)
+        self._ctrl_target = new_active
         if now + self.cfg.tl_update_period <= self.cfg.duration_s:
             self.sim.schedule(self.cfg.tl_update_period, self._tl_tick)
 
@@ -381,15 +506,55 @@ class TrackingScenario:
     # ------------------------------------------------------------------ #
     def _frame_tick(self) -> None:
         t = self.sim.time
-        for cam, fc in self.fc_tasks.items():
-            if not fc.state.get("isActive", False):
-                continue
-            frame = self.cameras.frame(cam, t)
-            if frame.has_entity:
-                self._positives_generated += 1
-            header = EventHeader(event_id=new_event_id(), source_arrival=t)
-            self._source_events += 1
-            fc.on_arrival(Event(header=header, key=cam, value=frame))
+        if self._fc_active:
+            # Batched sourcing: one position interpolation + one vectorized
+            # FOV test for the whole active set (ascending camera order, same
+            # as the old per-camera loop).
+            ids = np.fromiter(self._fc_active, dtype=np.int64, count=len(self._fc_active))
+            ids.sort()
+            frames = self.cameras.frames_at(t, ids)
+            n_pos = 0
+            if self._fuse_fc:
+                # FC stage fused into the source: identical arrival times and
+                # headers, no per-camera Task hops (see _build_pipeline).
+                xi1 = self._fc_xi1
+                avoid = self.cfg.avoid_drop_positives
+                va_of = self._va_of
+                groups: Dict[Task, List[Event]] = {}
+                for frame in frames:
+                    has = frame.has_entity
+                    if has:
+                        n_pos += 1
+                    cam = frame.camera_id
+                    header = source_header(new_event_id(), t)
+                    header.xi_bar = xi1
+                    if has and avoid:
+                        header.avoid_drop = True
+                    ev = Event(header=header, key=cam, value=frame)
+                    ev.batch_slowest = True  # a b=1 batch's sole event
+                    va = va_of[cam]
+                    g = groups.get(va)
+                    if g is None:
+                        groups[va] = [ev]
+                    else:
+                        g.append(ev)
+                depart = t + xi1
+                for va, evs in groups.items():
+                    self.sim.schedule_at(depart + self._fc_transit, va._deliver_many, evs)
+            else:
+                fc_tasks = self.fc_tasks
+                make_fc = self._make_fc
+                for frame in frames:
+                    if frame.has_entity:
+                        n_pos += 1
+                    cam = frame.camera_id
+                    fc = fc_tasks.get(cam)
+                    if fc is None:
+                        fc = make_fc(cam)
+                    header = source_header(new_event_id(), t)
+                    fc.on_arrival(Event(header=header, key=cam, value=frame))
+            self._positives_generated += n_pos
+            self._source_events += len(frames)
         if t + 1.0 / self.cfg.fps <= self.cfg.duration_s:
             self.sim.schedule(1.0 / self.cfg.fps, self._frame_tick)
 

@@ -1,23 +1,29 @@
 """Discrete-event engine + WAN/MAN network model (paper §5.1 system setup).
 
 The engine drives the :mod:`repro.core.pipeline` tasks: a heap of
-``(time, seq, fn)`` callbacks.  The network model charges
-``latency + size/bandwidth`` per transit between nodes; the bandwidth is a
-function of time so the paper's Fig. 9 experiment (1 Gbps -> 30 Mbps midway)
-is expressible.
+``(time, seq, fn, args)`` callbacks.  ``schedule`` takes ``(delay, fn,
+*args)`` so hot-path callers never need to allocate a closure per event.
+The network model charges ``latency + size/bandwidth`` per transit between
+nodes; the bandwidth is a function of time so the paper's Fig. 9 experiment
+(1 Gbps -> 30 Mbps midway) is expressible.  The per-(src, dst) latency
+classification (IPC / LAN / MAN) is cached — topology is static while the
+bandwidth multiplier is not.
 """
 
 from __future__ import annotations
 
 import heapq
-import itertools
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.pipeline import Scheduler
 
 __all__ = ["NetworkModel", "DiscreteEventSimulator"]
+
+
+def _default_bandwidth_schedule(t: float) -> float:
+    return 1.0
 
 
 @dataclass
@@ -34,7 +40,7 @@ class NetworkModel:
     lan_latency_s: float = 0.0005
     ipc_latency_s: float = 0.00005
     # time -> bandwidth multiplier (Fig. 9 drops this to 0.03 at t=300).
-    bandwidth_schedule: Callable[[float], float] = lambda t: 1.0
+    bandwidth_schedule: Callable[[float], float] = _default_bandwidth_schedule
 
     def transit_delay(self, src_host: str, dst_host: str, size_bytes: float, t: float) -> float:
         if src_host == dst_host:
@@ -52,39 +58,78 @@ class DiscreteEventSimulator(Scheduler):
     """Minimal deterministic discrete-event scheduler."""
 
     def __init__(self, network: Optional[NetworkModel] = None) -> None:
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
-        self._seq = itertools.count()
+        self._heap: List[Tuple[float, int, Callable[..., None], tuple]] = []
+        self._seq = 0
         self._time = 0.0
         self.network = network or NetworkModel()
         self.host_of: Dict[str, str] = {}
+        # (src, dst) -> (fixed latency, charged over the network?).  Host
+        # assignment is static once the pipeline is built, so the
+        # classification (IPC vs LAN vs MAN) never changes.
+        self._transit_cache: Dict[Tuple[str, str], Tuple[float, bool]] = {}
 
     # -- Scheduler protocol -------------------------------------------- #
     @property
     def time(self) -> float:
         return self._time
 
-    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (self._time + max(delay, 0.0), next(self._seq), fn))
+    def schedule(self, delay: float, fn: Callable[..., None], *args: Any) -> None:
+        t = self._time + delay if delay > 0.0 else self._time
+        self._seq = seq = self._seq + 1
+        heapq.heappush(self._heap, (t, seq, fn, args))
 
-    def schedule_at(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (max(t, self._time), next(self._seq), fn))
+    def schedule_at(self, t: float, fn: Callable[..., None], *args: Any) -> None:
+        if t < self._time:
+            t = self._time
+        self._seq = seq = self._seq + 1
+        heapq.heappush(self._heap, (t, seq, fn, args))
+
+    @property
+    def transit_is_static(self) -> bool:
+        """True when node-to-node delays cannot vary over time, letting tasks
+        memoize their per-destination transit delay."""
+        return self.network.bandwidth_schedule is _default_bandwidth_schedule
 
     def transit_delay(self, src: str, dst: str, size_bytes: float) -> float:
-        src_host = self.host_of.get(src, src)
-        dst_host = self.host_of.get(dst, dst)
-        return self.network.transit_delay(src_host, dst_host, size_bytes, self._time)
+        ent = self._transit_cache.get((src, dst))
+        if ent is None:
+            src_host = self.host_of.get(src, src)
+            dst_host = self.host_of.get(dst, dst)
+            net = self.network
+            if src_host == dst_host:
+                ent = (net.ipc_latency_s, False)
+            else:
+                latency = (
+                    net.man_latency_s
+                    if src_host.startswith("edge") != dst_host.startswith("edge")
+                    else net.lan_latency_s
+                )
+                ent = (latency, True)
+            self._transit_cache[(src, dst)] = ent
+        latency, over_network = ent
+        if not over_network:
+            return latency
+        net = self.network
+        schedule = net.bandwidth_schedule
+        if schedule is _default_bandwidth_schedule:
+            bw = net.lan_bandwidth_bps
+        else:
+            bw = net.lan_bandwidth_bps * max(schedule(self._time), 1e-9)
+        return latency + size_bytes * 8.0 / bw
 
     # -- Run loop -------------------------------------------------------- #
     def run(self, until: float = math.inf, max_events: int = 50_000_000) -> int:
         """Process events until the horizon; returns number processed."""
         n = 0
-        while self._heap and n < max_events:
-            t, _, fn = self._heap[0]
-            if t > until:
+        heap = self._heap
+        pop = heapq.heappop
+        while heap and n < max_events:
+            item = heap[0]
+            if item[0] > until:
                 break
-            heapq.heappop(self._heap)
-            self._time = t
-            fn()
+            pop(heap)
+            self._time = item[0]
+            item[2](*item[3])
             n += 1
-        self._time = max(self._time, min(until, self._time if not self._heap else until))
+        self._time = max(self._time, min(until, self._time if not heap else until))
         return n

@@ -1,0 +1,65 @@
+"""Clock-skew resilience properties for the batchers (§4.6.2).
+
+Requires the optional ``hypothesis`` test dependency (declared in
+pyproject.toml under ``[project.optional-dependencies] test``); the module
+is skipped cleanly when it is not installed.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batching import DynamicBatcher, PendingEvent
+from repro.core.events import Event, EventHeader
+
+
+def xi(b):
+    return 0.05 + 0.01 * b
+
+
+def pe(eid, arrival, deadline):
+    ev = Event(header=EventHeader(event_id=eid, source_arrival=arrival), key=eid)
+    return PendingEvent(event=ev, arrival=arrival, deadline=deadline)
+
+
+# ----------------------------------------------------------------------- #
+# Clock-skew resilience (§4.6.2): adding a constant skew sigma to the     #
+# local clock shifts arrivals, now, and (learned) deadlines equally, so    #
+# the admit decision is unchanged.                                         #
+# ----------------------------------------------------------------------- #
+@settings(max_examples=200, deadline=None)
+@given(
+    sigma=st.floats(-50, 50, allow_nan=False),
+    arrivals=st.lists(st.floats(0, 10), min_size=2, max_size=8),
+    beta=st.floats(0.1, 5.0),
+)
+def test_dynamic_batcher_skew_invariance(sigma, arrivals, beta):
+    arrivals = sorted(arrivals)
+
+    def run(skew: float):
+        b = DynamicBatcher(xi, m_max=25)
+        decisions = []
+        for i, a in enumerate(arrivals):
+            # deadline = a_1 + beta measured on the skewed clock: both the
+            # event deadline and 'now' carry the same +skew.
+            out = b.offer(pe(i, a + skew, a + skew + beta), a + skew)
+            decisions.append(0 if out is None else len(out))
+        return decisions
+
+    assert run(0.0) == run(sigma)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    deadlines=st.lists(st.floats(1.0, 20.0), min_size=1, max_size=10),
+)
+def test_batch_deadline_is_min_of_event_deadlines(deadlines):
+    b = DynamicBatcher(xi, m_max=100)
+    for i, d in enumerate(deadlines):
+        b.offer(pe(i, 0.0, d), 0.0)
+    if b.current_size == len(deadlines):  # no intermediate flush happened
+        assert b.next_due_time() == pytest.approx(
+            min(deadlines) - xi(len(deadlines))
+        )

@@ -1,0 +1,50 @@
+"""Skew-invariance and stability properties for drops/bounds (§4.6).
+
+Requires the optional ``hypothesis`` test dependency (declared in
+pyproject.toml under ``[project.optional-dependencies] test``); the module
+is skipped cleanly when it is not installed.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bounds import stable_batch_size
+from repro.core.dropping import drop_before_queuing
+
+
+def xi(b):
+    return 0.05 + 0.01 * b
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    sigma=st.floats(-100, 100, allow_nan=False),
+    a1=st.floats(0, 10),
+    delay=st.floats(0, 10),
+    beta=st.floats(0.01, 5),
+)
+def test_dp1_skew_invariance(sigma, a1, delay, beta):
+    """A device skew shifts both the arrival timestamp and the (locally
+    learned) budget's frame; decisions are invariant (§4.6.2)."""
+    base = drop_before_queuing(a1, a1 + delay, xi(1), beta)
+    # skewed clock: arrival measured as +sigma; the budget beta is learned
+    # from departures measured on the same skewed clock, so beta_tilde =
+    # beta + sigma relative to the source timestamp... the comparison uses
+    # u~ = (a + sigma) - a1 and beta~ = beta + sigma: identical decision.
+    skewed = drop_before_queuing(a1, a1 + delay + sigma, xi(1), beta + sigma)
+    assert base == skewed
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    omega=st.floats(1.0, 200.0),
+    headroom=st.floats(0.2, 5.0),
+)
+def test_stable_batch_satisfies_constraints(omega, headroom):
+    m = stable_batch_size(xi, omega=omega, budget_headroom=headroom)
+    if m is not None:
+        assert (m - 1) / omega + xi(m) <= headroom + 1e-9
+        assert xi(m) <= headroom / 2 + 1e-9

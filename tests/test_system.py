@@ -92,8 +92,14 @@ def test_avoid_drop_event_survives_collapsed_budget():
 
 
 def test_road_network_deterministic():
+    from repro.core import roadnet
+
     a = make_road_network(num_vertices=200, target_edges=560, seed=5)
+    # Identical parameters return a shared cached instance; clear the cache
+    # so the second call genuinely reconstructs the graph.
+    roadnet._NETWORK_CACHE.clear()
     b = make_road_network(num_vertices=200, target_edges=560, seed=5)
+    assert a is not b
     np.testing.assert_array_equal(a.positions, b.positions)
     assert a.adjacency == b.adjacency
 
