@@ -1,14 +1,30 @@
-"""Benchmark harness: one function per paper table/figure + kernel timings
-+ the roofline table.  Prints ``name,us_per_call,derived`` CSV rows.
+"""Benchmark harness: every paper figure grid runs as ONE sweep through the
+shared-world :class:`repro.sim.SweepRunner` (worlds built once per key,
+configs executed concurrently via a fork pool where available), plus kernel
+timings and the roofline table.  Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run                    # everything
     PYTHONPATH=src python -m benchmarks.run --only fig567
+    PYTHONPATH=src python -m benchmarks.run --only fig567 --mode serial
     PYTHONPATH=src python -m benchmarks.run --only pipeline --json BENCH_pipeline.json
+    PYTHONPATH=src python -m benchmarks.run --only pipeline --smoke          # CI-fast
+    PYTHONPATH=src python -m benchmarks.run --only pipeline --smoke \\
+        --compare BENCH_pipeline.json                          # regression gate
 
-``--json PATH`` writes the machine-readable records
-``{bench, case, us_per_event, derived}`` accumulated by the selected
-benchmarks, so future PRs can track the perf trajectory (the checked-in
-``BENCH_pipeline.json`` is the output of the ``pipeline`` bench).
+``--json PATH`` writes the machine-readable records ``{bench, case,
+us_per_event, derived, run_s, build_s, mode}`` accumulated by the selected
+benchmarks (the checked-in ``BENCH_pipeline.json`` holds the ``pipeline``
+records in both full and smoke modes).  ``us_per_event`` is computed from
+``run()`` wall-time only; construction is reported separately as ``build_s``.
+
+``--compare PATH`` re-times the pipeline cases recorded in PATH (matching
+the current ``--smoke`` mode) and exits non-zero when any ``us_per_event``
+regressed by more than ``--compare-tolerance`` (default 35%).
+
+``--mode`` selects the sweep execution: ``auto`` (fork pool when available),
+``fork``, ``serial`` (shared worlds, one case at a time), or ``cold``
+(serial AND world/road caches cleared before every case — the faithful
+"rebuild everything per config" sequential baseline).
 """
 
 from __future__ import annotations
@@ -16,77 +32,300 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import os
 import time
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .scenarios import RECORDS, record, row, run_scenario
+from repro.sim import ScenarioConfig, SweepResult, SweepRunner
+
+from .scenarios import RECORDS, record, record_case
 
 SEP = "-" * 78
 
-
 # --------------------------------------------------------------------- #
-# Pipeline hot-path benchmark (PERF.md): wall-clock per source event on   #
-# the two reference scenarios, against the frozen seed-commit baseline.   #
+# Frozen baselines                                                       #
 # --------------------------------------------------------------------- #
 
-# Measured at the seed commit (9931f3f, pure-Python per-event runtime)
-# on the same container this harness runs in; see PERF.md for methodology.
+# Per-event cost measured at the seed commit (9931f3f, pure-Python per-event
+# runtime) on the same container; see PERF.md for methodology.
 SEED_US_PER_EVENT = {
     "Base_SB-20_200c": 107.5,
     "BFS_DB-25_1000c": 284.1,
 }
 
-PIPELINE_CASES = [
-    ("Base_SB-20_200c", dict(tl="base", num_cameras=200, batching="static", static_batch=20)),
-    ("BFS_DB-25_1000c", dict(tl="bfs", batching="dynamic", m_max=25)),
-]
+# Whole-grid sequential wall-clock measured at commit 26d2c35 (the PR-1
+# harness: one scenario at a time, construction+run timed together) on the
+# same container.  The sweep records report their speedup against these.
+SEED_SEQ_WALL_S = {
+    "fig567": 2.6,
+    "fig9": 1.1,
+    "fig10": 3.1,
+    "fig11": 4.2,
+    "fig12": 2.5,
+    "fig13": 11.3,
+}
+
+# --------------------------------------------------------------------- #
+# Paper-figure grids (each runs as one sweep)                            #
+# --------------------------------------------------------------------- #
+
+_CR2 = (0.067 * 1.63, 0.053 * 1.63)  # App 2: CR ~63% slower per frame
 
 
-def bench_pipeline(reps: int = 3) -> None:
+def _fig9_bandwidth(t: float) -> float:
+    """Fig. 9: 1 Gbps -> 30 Mbps at t = 300 s."""
+    return 1.0 if t < 300.0 else 0.03
+
+
+GRIDS: Dict[str, Dict] = {
+    "pipeline": dict(
+        title="Pipeline hot path — reference scenarios",
+        base=dict(tl_peak_speed=4.0),
+        cases=[
+            ("Base_SB-20_200c", dict(tl="base", num_cameras=200, batching="static", static_batch=20)),
+            ("BFS_DB-25_1000c", dict(tl="bfs", batching="dynamic", m_max=25)),
+        ],
+    ),
+    "fig567": dict(
+        title="Fig 5/6/7 — batching strategies, TL-BFS, 1000 cameras",
+        base=dict(tl="bfs"),
+        cases=[
+            ("SB-1_es4", dict(batching="static", static_batch=1, tl_peak_speed=4.0)),
+            ("SB-20_es4", dict(batching="static", static_batch=20, tl_peak_speed=4.0)),
+            ("DB-25_es4", dict(batching="dynamic", m_max=25, tl_peak_speed=4.0)),
+            ("NOB-25_es4", dict(batching="nob", m_max=25, tl_peak_speed=4.0)),
+            ("SB-1_es6", dict(batching="static", static_batch=1, tl_peak_speed=6.0)),
+            ("SB-20_es6", dict(batching="static", static_batch=20, tl_peak_speed=6.0)),
+            ("DB-25_es6", dict(batching="dynamic", m_max=25, tl_peak_speed=6.0)),
+        ],
+    ),
+    "fig10": dict(
+        title="Fig 10 — tracking logic: active-set scalability",
+        base=dict(tl_peak_speed=4.0),
+        cases=[
+            ("Base_SB-20_100c", dict(tl="base", num_cameras=100, batching="static", static_batch=20)),
+            ("Base_SB-20_200c", dict(tl="base", num_cameras=200, batching="static", static_batch=20)),
+            ("BFS_SB-1_1000c", dict(tl="bfs", batching="static", static_batch=1)),
+            ("WBFS_SB-1_1000c", dict(tl="wbfs", batching="static", static_batch=1)),
+            ("BFS_DB-25_1000c", dict(tl="bfs", batching="dynamic", m_max=25)),
+            ("WBFS_DB-25_1000c", dict(tl="wbfs", batching="dynamic", m_max=25)),
+            ("Prob_DB-25_1000c", dict(tl="prob", batching="dynamic", m_max=25)),
+        ],
+    ),
+    "fig11": dict(
+        title="Fig 11 — drops under overload (es=7, constrained 5 VA + 5 CR)",
+        base=dict(tl="bfs", tl_peak_speed=7.0, batching="dynamic", m_max=25, num_va=5, num_cr=5),
+        cases=[
+            ("es7_nodrop", dict(drops_enabled=False)),
+            ("es7_drops", dict(drops_enabled=True, avoid_drop_positives=True)),
+        ],
+    ),
+    "fig9": dict(
+        title="Fig 9 — adapting to a 1Gbps->30Mbps bandwidth drop at t=300s",
+        base=dict(tl="bfs", tl_peak_speed=4.0, bandwidth_schedule=_fig9_bandwidth),
+        cases=[
+            ("DB-25_bwdrop", dict(batching="dynamic", m_max=25)),
+            ("NOB-25_bwdrop", dict(batching="nob", m_max=25)),
+        ],
+    ),
+    "fig12": dict(
+        title="Fig 12 — App 2 (CR ~63% slower per frame)",
+        base=dict(tl="bfs", cr_cost=_CR2),
+        cases=[
+            ("app2_SB-20_es4", dict(batching="static", static_batch=20, tl_peak_speed=4.0)),
+            ("app2_DB-25_es4", dict(batching="dynamic", m_max=25, tl_peak_speed=4.0)),
+            ("app2_DB-25_es6", dict(batching="dynamic", m_max=25, tl_peak_speed=6.0)),
+            (
+                "app2_DB-25_es6_drops",
+                dict(batching="dynamic", m_max=25, tl_peak_speed=6.0,
+                     drops_enabled=True, avoid_drop_positives=True),
+            ),
+            ("app2_WBFS_SB-20_es4", dict(tl="wbfs", batching="static", static_batch=20,
+                                         tl_peak_speed=4.0)),
+        ],
+    ),
+    "fig13": dict(
+        title="Fig 13 — scale sweep (spotlight TL, dynamic batching)",
+        base=dict(tl="bfs", tl_peak_speed=4.0, batching="dynamic", m_max=25, duration_s=60.0),
+        cases=[
+            (f"scale_{n}c_{fps:g}fps", dict(num_cameras=n, fps=fps))
+            for n in (1000, 5000, 10000)
+            for fps in (1.0, 5.0)
+        ],
+    ),
+}
+
+
+# The pipeline cases double as the --compare gate's case universe.
+PIPELINE_CASES = GRIDS["pipeline"]["cases"]
+
+
+def _make_grid(bench: str, smoke: bool) -> List[Tuple[str, ScenarioConfig]]:
+    info = GRIDS[bench]
+    grid = []
+    for name, kw in info["cases"]:
+        cfg = dict(num_cameras=1000, duration_s=600.0, seed=0)
+        cfg.update(info.get("base", {}))
+        cfg.update(kw)
+        if smoke:
+            cfg["duration_s"] = min(cfg["duration_s"], 60.0)
+        grid.append((name, ScenarioConfig(**cfg)))
+    return grid
+
+
+def _runner(ctx) -> SweepRunner:
+    if ctx.mode == "cold":
+        return SweepRunner(mode="serial", share_worlds=False)
+    return SweepRunner(mode=ctx.mode, max_workers=ctx.workers)
+
+
+def _mode_label(ctx) -> str:
+    return "smoke" if ctx.smoke else "full"
+
+
+def _sweep_record(bench: str, res: SweepResult, ctx) -> None:
+    total_events = sum(r.summary["source_events"] for r in res.records)
+    seed_wall = SEED_SEQ_WALL_S.get(bench)
+    speedup = f"{seed_wall / res.wall_s:.2f}" if (seed_wall and not ctx.smoke) else "n/a"
+    derived = (
+        f"wall_s={res.wall_s:.3f};mode={res.mode};workers={res.workers};"
+        f"configs={len(res.records)};worlds_built={res.worlds_built};"
+        f"world_build_s={res.world_build_s:.3f};"
+        f"seed_seq_wall_s={seed_wall};speedup_vs_seed_seq={speedup}"
+    )
+    record(
+        bench, "sweep", res.wall_s * 1e6 / max(total_events, 1), derived,
+        run_s=round(res.wall_s, 4), build_s=round(res.world_build_s, 4),
+        mode=_mode_label(ctx),
+    )
+    print(f"{bench}_sweep,{res.wall_s * 1e6 / max(total_events, 1):.1f},{derived}")
+
+
+def _run_grid(bench: str, ctx) -> SweepResult:
+    print(f"{SEP}\n# {GRIDS[bench]['title']}")
+    res = _runner(ctx).run(_make_grid(bench, ctx.smoke))
+    for rec in res.records:
+        print(record_case(bench, rec, mode=_mode_label(ctx)))
+    _sweep_record(bench, res, ctx)
+    return res
+
+
+# --------------------------------------------------------------------- #
+# Pipeline hot-path benchmark (PERF.md): per-event wall-clock on the two  #
+# reference scenarios vs the frozen seed-commit baseline (best of reps).  #
+# --------------------------------------------------------------------- #
+def _time_pipeline_cases(ctx, reps: int) -> Dict[str, "object"]:
+    # Per-event timing is always taken serially (worlds still shared):
+    # concurrent execution would measure CPU contention, and the --compare
+    # gate must see numbers produced the same way as the recorded baseline
+    # regardless of the --mode used for the throughput sweeps.
+    grid = _make_grid("pipeline", ctx.smoke)
+    runner = SweepRunner(mode="serial")
+    best: Dict[str, object] = {}
+    for _ in range(reps):
+        res = runner.run(grid)
+        for rec in res.records:
+            prev = best.get(rec.name)
+            if prev is None or rec.run_s < prev.run_s:
+                best[rec.name] = rec
+    return best
+
+
+def bench_pipeline(ctx) -> None:
+    reps = 2 if ctx.smoke else 3
     print(f"{SEP}\n# Pipeline hot path — us per source event vs seed baseline (best of {reps})")
-    for name, kw in PIPELINE_CASES:
-        wall = float("inf")
-        for _ in range(reps):
-            t0 = time.time()
-            res = run_scenario(tl_peak_speed=4.0, **kw)
-            wall = min(wall, time.time() - t0)
-        us = wall * 1e6 / max(res.source_events, 1)
+    best = _time_pipeline_cases(ctx, reps)
+    for name, _ in PIPELINE_CASES:
+        rec = best[name]
+        us = rec.us_per_event
         seed_us = SEED_US_PER_EVENT.get(name)
-        speedup = f"{seed_us / us:.2f}" if seed_us else "n/a"
-        s = res.summary()
+        speedup = f"{seed_us / us:.2f}" if (seed_us and not ctx.smoke) else "n/a"
+        s = rec.summary
         record(
             "pipeline",
             name,
             us,
             f"seed_us_per_event={seed_us};speedup_x={speedup};"
             f"events={s['source_events']};median_lat_s={s['median_latency_s']};"
-            f"delayed={s['delayed']};dropped={s['dropped']};peak_active={s['peak_active']}",
+            f"delayed={s['delayed']};dropped={s['dropped']};peak_active={s['peak_active']};"
+            f"build_s={rec.build_s:.3f}",
+            run_s=round(rec.run_s, 4),
+            build_s=round(rec.build_s, 4),
+            mode=_mode_label(ctx),
         )
         print(f"pipeline_{name},{us:.1f},seed={seed_us};speedup={speedup}x")
 
 
 # --------------------------------------------------------------------- #
-# Fig. 13 (new): scale sweep — 1k/5k/10k cameras x 1/5 fps               #
+# Regression gate: --compare BENCH_pipeline.json                          #
 # --------------------------------------------------------------------- #
-def bench_scale_fig13() -> None:
-    print(f"{SEP}\n# Fig 13 — scale sweep (spotlight TL, dynamic batching)")
-    for num_cameras in (1000, 5000, 10000):
-        for fps in (1.0, 5.0):
-            name = f"scale_{num_cameras}c_{fps:g}fps"
-            t0 = time.time()
-            res = run_scenario(
-                tl="bfs",
-                tl_peak_speed=4.0,
-                batching="dynamic",
-                m_max=25,
-                num_cameras=num_cameras,
-                fps=fps,
-                duration_s=60.0,
-            )
-            print(row(name, res, time.time() - t0, bench="fig13"))
-    # Multi-entity probabilistic spotlight: batched CSR relaxation kernel
-    # vs the incremental python path.
+def compare_against(path: str, ctx) -> int:
+    """Re-time the pipeline cases recorded in ``path`` (same mode) and
+    return non-zero when any us_per_event regressed past the tolerance."""
+    with open(path) as f:
+        data = json.load(f)
+    mode = _mode_label(ctx)
+    known = {name for name, _ in PIPELINE_CASES}
+    baselines = {
+        r["case"]: float(r["us_per_event"])
+        for r in data.get("records", [])
+        if r.get("bench") == "pipeline"
+        and r.get("case") in known
+        and r.get("mode", "full") == mode
+    }
+    if not baselines:
+        print(f"compare: no pipeline records for mode={mode!r} in {path}")
+        return 2
+    reps = 2 if ctx.smoke else 3
+    best = _time_pipeline_cases(ctx, reps)
+    failed = False
+    print(f"{SEP}\n# Regression gate vs {path} (mode={mode}, tol={ctx.compare_tolerance:.0%})")
+    for name, base_us in sorted(baselines.items()):
+        rec = best.get(name)
+        if rec is None:
+            print(f"compare_{name},n/a,missing from current run")
+            failed = True
+            continue
+        us = rec.us_per_event
+        ratio = us / base_us
+        verdict = "OK" if ratio <= 1.0 + ctx.compare_tolerance else "REGRESSED"
+        failed |= verdict != "OK"
+        derived = f"baseline={base_us:.1f};ratio={ratio:.2f};{verdict}"
+        record("pipeline_compare", name, us, derived,
+               run_s=round(rec.run_s, 4), build_s=round(rec.build_s, 4), mode=mode)
+        print(f"compare_{name},{us:.1f},{derived}")
+    return 1 if failed else 0
+
+
+# --------------------------------------------------------------------- #
+# Figure sweeps                                                          #
+# --------------------------------------------------------------------- #
+def bench_batching_fig567(ctx) -> None:
+    _run_grid("fig567", ctx)
+
+
+def bench_tracking_fig10(ctx) -> None:
+    _run_grid("fig10", ctx)
+
+
+def bench_dropping_fig11(ctx) -> None:
+    _run_grid("fig11", ctx)
+
+
+def bench_network_fig9(ctx) -> None:
+    _run_grid("fig9", ctx)
+
+
+def bench_app2_fig12(ctx) -> None:
+    _run_grid("fig12", ctx)
+
+
+def bench_scale_fig13(ctx) -> None:
+    _run_grid("fig13", ctx)
+    # Multi-entity probabilistic spotlight: bucket-batched CSR relaxation
+    # kernel (via repro.kernels.dispatch) vs the incremental python path.
     from repro.core.roadnet import make_road_network
     from repro.core.tracking import TLProbabilistic
 
@@ -100,110 +339,15 @@ def bench_scale_fig13() -> None:
         t0 = time.perf_counter()
         active = tl.spotlight_multi(60.0, use_kernel=use_kernel)
         us = (time.perf_counter() - t0) * 1e6
-        record("fig13", f"multi_entity_{label}", us / 8.0, f"entities=8;active={len(active)}")
+        record("fig13", f"multi_entity_{label}", us / 8.0,
+               f"entities=8;active={len(active)}", mode=_mode_label(ctx))
         print(f"multi_entity_{label},{us/8.0:.1f},entities=8;active={len(active)}")
-
-
-# --------------------------------------------------------------------- #
-# Fig. 5/6/7: batching strategies (streaming / static / dynamic / NOB)   #
-# --------------------------------------------------------------------- #
-def bench_batching_fig567() -> None:
-    print(f"{SEP}\n# Fig 5/6/7 — batching strategies, TL-BFS, 1000 cameras")
-    cases = [
-        ("SB-1_es4", dict(batching="static", static_batch=1, tl_peak_speed=4.0)),
-        ("SB-20_es4", dict(batching="static", static_batch=20, tl_peak_speed=4.0)),
-        ("DB-25_es4", dict(batching="dynamic", m_max=25, tl_peak_speed=4.0)),
-        ("NOB-25_es4", dict(batching="nob", m_max=25, tl_peak_speed=4.0)),
-        ("SB-1_es6", dict(batching="static", static_batch=1, tl_peak_speed=6.0)),
-        ("SB-20_es6", dict(batching="static", static_batch=20, tl_peak_speed=6.0)),
-        ("DB-25_es6", dict(batching="dynamic", m_max=25, tl_peak_speed=6.0)),
-    ]
-    for name, kw in cases:
-        t0 = time.time()
-        res = run_scenario(tl="bfs", **kw)
-        print(row(name, res, time.time() - t0, bench="fig567"))
-
-
-# --------------------------------------------------------------------- #
-# Fig. 10: tracking-logic knob (Base / BFS / WBFS)                       #
-# --------------------------------------------------------------------- #
-def bench_tracking_fig10() -> None:
-    print(f"{SEP}\n# Fig 10 — tracking logic: active-set scalability")
-    cases = [
-        ("Base_SB-20_100c", dict(tl="base", num_cameras=100, batching="static", static_batch=20)),
-        ("Base_SB-20_200c", dict(tl="base", num_cameras=200, batching="static", static_batch=20)),
-        ("BFS_SB-1_1000c", dict(tl="bfs", batching="static", static_batch=1)),
-        ("WBFS_SB-1_1000c", dict(tl="wbfs", batching="static", static_batch=1)),
-        ("BFS_DB-25_1000c", dict(tl="bfs", batching="dynamic", m_max=25)),
-        ("WBFS_DB-25_1000c", dict(tl="wbfs", batching="dynamic", m_max=25)),
-        ("Prob_DB-25_1000c", dict(tl="prob", batching="dynamic", m_max=25)),
-    ]
-    for name, kw in cases:
-        t0 = time.time()
-        res = run_scenario(tl_peak_speed=4.0, **kw)
-        print(row(name, res, time.time() - t0, bench="fig10"))
-
-
-# --------------------------------------------------------------------- #
-# Fig. 11: dropping under overload (es = 7 m/s)                          #
-# --------------------------------------------------------------------- #
-def bench_dropping_fig11() -> None:
-    print(f"{SEP}\n# Fig 11 — drops under overload (es=7, constrained 5 VA + 5 CR)")
-    overload = dict(
-        tl="bfs", tl_peak_speed=7.0, batching="dynamic", m_max=25, num_va=5, num_cr=5
-    )
-    for name, kw in [
-        ("es7_nodrop", dict(drops_enabled=False)),
-        ("es7_drops", dict(drops_enabled=True, avoid_drop_positives=True)),
-    ]:
-        t0 = time.time()
-        res = run_scenario(**overload, **kw)
-        print(row(name, res, time.time() - t0, bench="fig11"))
-
-
-# --------------------------------------------------------------------- #
-# Fig. 9: bandwidth drop 1 Gbps -> 30 Mbps at t = 300 s                  #
-# --------------------------------------------------------------------- #
-def bench_network_fig9() -> None:
-    print(f"{SEP}\n# Fig 9 — adapting to a 1Gbps->30Mbps bandwidth drop at t=300s")
-    schedule = lambda t: 1.0 if t < 300.0 else 0.03
-    for name, kw in [
-        ("DB-25_bwdrop", dict(batching="dynamic", m_max=25)),
-        ("NOB-25_bwdrop", dict(batching="nob", m_max=25)),
-    ]:
-        t0 = time.time()
-        res = run_scenario(tl="bfs", tl_peak_speed=4.0, bandwidth_schedule=schedule, **kw)
-        print(row(name, res, time.time() - t0, bench="fig9"))
-
-
-# --------------------------------------------------------------------- #
-# Fig. 12: App 2 (63% costlier CR DNN)                                   #
-# --------------------------------------------------------------------- #
-def bench_app2_fig12() -> None:
-    print(f"{SEP}\n# Fig 12 — App 2 (CR ~63% slower per frame)")
-    cr2 = (0.067 * 1.63, 0.053 * 1.63)
-    cases = [
-        ("app2_SB-20_es4", dict(batching="static", static_batch=20, tl_peak_speed=4.0)),
-        ("app2_DB-25_es4", dict(batching="dynamic", m_max=25, tl_peak_speed=4.0)),
-        ("app2_DB-25_es6", dict(batching="dynamic", m_max=25, tl_peak_speed=6.0)),
-        (
-            "app2_DB-25_es6_drops",
-            dict(batching="dynamic", m_max=25, tl_peak_speed=6.0,
-                 drops_enabled=True, avoid_drop_positives=True),
-        ),
-        ("app2_WBFS_SB-20_es4", dict(tl="wbfs", batching="static", static_batch=20,
-                                     tl_peak_speed=4.0)),
-    ]
-    for name, kw in cases:
-        t0 = time.time()
-        res = run_scenario(tl=kw.pop("tl", "bfs"), cr_cost=cr2, **kw)
-        print(row(name, res, time.time() - t0, bench="fig12"))
 
 
 # --------------------------------------------------------------------- #
 # Kernel micro-benchmarks (CPU: oracle path; TPU would hit Pallas)       #
 # --------------------------------------------------------------------- #
-def bench_kernels() -> None:
+def bench_kernels(ctx=None) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -270,7 +414,7 @@ def bench_kernels() -> None:
 # --------------------------------------------------------------------- #
 # Roofline table from the dry-run records (§Roofline source of truth)    #
 # --------------------------------------------------------------------- #
-def bench_roofline(out_dir: str = "experiments/dryrun") -> None:
+def bench_roofline(ctx=None, out_dir: str = "experiments/dryrun") -> None:
     print(f"{SEP}\n# Roofline table (from {out_dir}/*.json; see EXPERIMENTS.md)")
     recs = []
     for path in sorted(glob.glob(f"{out_dir}/*.json")):
@@ -297,7 +441,7 @@ def bench_roofline(out_dir: str = "experiments/dryrun") -> None:
 # --------------------------------------------------------------------- #
 # Anveshak-scheduled LM serving stage                                    #
 # --------------------------------------------------------------------- #
-def bench_serving() -> None:
+def bench_serving(ctx=None) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -347,28 +491,60 @@ BENCHES = {
 }
 
 
-def main() -> None:
+def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
     ap.add_argument(
         "--json",
         default=None,
         metavar="PATH",
-        help="write machine-readable {bench, case, us_per_event, derived} records",
+        help="write machine-readable {bench, case, us_per_event, derived, "
+        "run_s, build_s, mode} records",
     )
-    args = ap.parse_args()
-    t0 = time.time()
-    for name, fn in BENCHES.items():
-        if args.only and name != args.only:
-            continue
-        fn()
-    print(f"{SEP}\nTotal benchmark wall time: {time.time()-t0:.1f}s")
+    ap.add_argument(
+        "--mode",
+        default="auto",
+        choices=("auto", "fork", "serial", "cold"),
+        help="sweep execution: auto/fork/serial share worlds; cold rebuilds "
+        "every config's world (sequential baseline)",
+    )
+    ap.add_argument("--workers", type=int, default=None, help="sweep pool size")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="short scenario durations (<=60s) so CI machines finish in seconds",
+    )
+    ap.add_argument(
+        "--compare",
+        default=None,
+        metavar="PATH",
+        help="regression gate: re-time the pipeline cases recorded in PATH "
+        "and exit non-zero on regression",
+    )
+    ap.add_argument("--compare-tolerance", type=float, default=0.35)
+    args = ap.parse_args(argv)
+    # Benchmarks default to the on-disk world cache so repeated invocations
+    # skip the one-off builds; opt out with REPRO_WORLD_CACHE=0.
+    os.environ.setdefault("REPRO_WORLD_CACHE", "1")
+
+    status = 0
+    compare_only = args.compare is not None and args.only is None
+    if args.compare is not None:
+        status = compare_against(args.compare, args)
+    if not compare_only:
+        t0 = time.time()
+        for name, fn in BENCHES.items():
+            if args.only and name != args.only:
+                continue
+            fn(args)
+        print(f"{SEP}\nTotal benchmark wall time: {time.time()-t0:.1f}s")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"harness": "benchmarks.run", "records": RECORDS}, f, indent=2)
             f.write("\n")
         print(f"wrote {len(RECORDS)} records to {args.json}")
+    return status
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,45 +1,76 @@
-"""Shared scenario runners for the paper-figure benchmarks."""
+"""Shared scenario runners + record helpers for the paper-figure benchmarks."""
 
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-from repro.sim import ScenarioConfig, ScenarioResult, TrackingScenario
+from repro.sim import CaseRecord, ScenarioConfig, ScenarioResult, TrackingScenario
 
-__all__ = ["run_scenario", "row", "record", "RECORDS"]
+__all__ = ["run_scenario", "row", "record", "record_case", "RECORDS"]
 
 # Machine-readable benchmark records accumulated across a run; written out by
 # `python -m benchmarks.run --json PATH` so perf trajectories can be tracked
-# across PRs.
+# across PRs (and replayed by `--compare`).
 RECORDS: List[Dict] = []
 
 
-def record(bench: str, case: str, us_per_event: float, derived: str = "") -> Dict:
+def record(
+    bench: str, case: str, us_per_event: float, derived: str = "", **extra
+) -> Dict:
     rec = {
         "bench": bench,
         "case": case,
         "us_per_event": round(float(us_per_event), 2),
         "derived": derived,
     }
+    rec.update(extra)
     RECORDS.append(rec)
     return rec
 
 
 def run_scenario(**kw) -> ScenarioResult:
+    """Single-config entry point (used by one-off benchmarks and docs)."""
     base = dict(num_cameras=1000, duration_s=600.0, seed=0)
     base.update(kw)
     return TrackingScenario(ScenarioConfig(**base)).run()
 
 
-def row(name: str, res: ScenarioResult, wall_s: float, bench: str = "") -> str:
-    s = res.summary()
-    us_per_event = wall_s * 1e6 / max(s["source_events"], 1)
-    derived = (
-        f"median_lat_s={s['median_latency_s']};p99_s={s['p99_latency_s']};"
-        f"delayed={s['delayed']};delayed_frac={s['delayed_frac']};"
-        f"dropped={s['dropped']};dropped_frac={s['dropped_frac']};"
-        f"peak_active={s['peak_active']};events={s['source_events']}"
+def _derived(summary: Dict, build_s: float) -> str:
+    return (
+        f"median_lat_s={summary['median_latency_s']};p99_s={summary['p99_latency_s']};"
+        f"delayed={summary['delayed']};delayed_frac={summary['delayed_frac']};"
+        f"dropped={summary['dropped']};dropped_frac={summary['dropped_frac']};"
+        f"peak_active={summary['peak_active']};events={summary['source_events']};"
+        f"build_s={build_s:.3f}"
     )
-    record(bench or "scenario", name, us_per_event, derived)
+
+
+def row(
+    name: str,
+    res: ScenarioResult,
+    run_s: float,
+    bench: str = "",
+    build_s: float = 0.0,
+    mode: str = "full",
+) -> str:
+    """Record + CSV row for one scenario result.  ``run_s`` must be the
+    ``run()`` wall-time only — construction is recorded separately via
+    ``build_s`` so one-off world builds don't pollute the per-event rate."""
+    s = res.summary()
+    us_per_event = run_s * 1e6 / max(s["source_events"], 1)
+    derived = _derived(s, build_s)
+    record(
+        bench or "scenario", name, us_per_event, derived,
+        run_s=round(run_s, 4), build_s=round(build_s, 4), mode=mode,
+    )
     return f"{name},{us_per_event:.1f},{derived}"
+
+
+def record_case(bench: str, rec: CaseRecord, mode: str = "full") -> str:
+    """Record + CSV row for one sweep :class:`CaseRecord`."""
+    derived = _derived(rec.summary, rec.build_s)
+    record(
+        bench, rec.name, rec.us_per_event, derived,
+        run_s=round(rec.run_s, 4), build_s=round(rec.build_s, 4), mode=mode,
+    )
+    return f"{rec.name},{rec.us_per_event:.1f},{derived}"

@@ -24,6 +24,7 @@
 
 from __future__ import annotations
 
+import bisect
 import math
 from collections import deque
 from dataclasses import dataclass, field
@@ -165,6 +166,14 @@ class NOBBatcher(_BatcherBase):
         super().__init__(xi, m_max)
         self.table = table if table is not None else build_nob_table(xi, m_max)
         self._arrivals: Deque[float] = deque(maxlen=rate_window)
+        # The lookup runs once per arrival; for the (usual) strictly
+        # increasing rate grid a bisect replaces the O(|table|) scan.  Tie
+        # handling matches ``min()``'s first-minimum semantics exactly.
+        self._rates: List[float] = [kv[0] for kv in self.table]
+        self._batches: List[int] = [kv[1] for kv in self.table]
+        self._rates_increasing = all(
+            a < b for a, b in zip(self._rates, self._rates[1:])
+        )
 
     def observed_rate(self) -> float:
         if len(self._arrivals) < 2:
@@ -176,8 +185,20 @@ class NOBBatcher(_BatcherBase):
 
     def target_batch(self) -> int:
         rate = self.observed_rate()
-        best = min(self.table, key=lambda kv: abs(kv[0] - rate))
-        return best[1]
+        if not self._rates_increasing:
+            best = min(self.table, key=lambda kv: abs(kv[0] - rate))
+            return best[1]
+        rates = self._rates
+        i = bisect.bisect_left(rates, rate)
+        if i == 0:
+            return self._batches[0]
+        if i == len(rates):
+            return self._batches[-1]
+        # rates[i-1] < rate <= rates[i]; on an exact tie min() keeps the
+        # earlier (lower-rate) entry, hence <=.
+        if rate - rates[i - 1] <= rates[i] - rate:
+            return self._batches[i - 1]
+        return self._batches[i]
 
     def offer(self, pe: PendingEvent, t_now: float) -> Optional[List[PendingEvent]]:
         self._arrivals.append(pe.arrival)

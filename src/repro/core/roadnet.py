@@ -34,7 +34,12 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-__all__ = ["RoadNetwork", "ResumableDijkstra", "make_road_network"]
+__all__ = [
+    "RoadNetwork",
+    "ResumableDijkstra",
+    "clear_network_cache",
+    "make_road_network",
+]
 
 
 @dataclass
@@ -185,6 +190,11 @@ class ResumableDijkstra:
 # benchmark sweep at seed 0) share one instance.
 _NETWORK_CACHE: Dict[Tuple[int, int, float, int], "RoadNetwork"] = {}
 _NETWORK_CACHE_MAX = 8
+
+
+def clear_network_cache() -> None:
+    """Drop memoized road networks (cold-baseline measurement support)."""
+    _NETWORK_CACHE.clear()
 
 
 def make_road_network(

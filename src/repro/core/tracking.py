@@ -297,11 +297,14 @@ class TLProbabilistic(_SpotlightTL):
         return chosen
 
     def _spotlight_multi_kernel(self, now: float) -> Set[int]:
-        """Batched path: one ``spotlight_ball`` relaxation for all entities'
-        balls over the CSR graph, then vectorized coverage selection."""
+        """Batched path: one bucket-padded ``spotlight_ball`` relaxation for
+        all entities' balls over the CSR graph (dispatched through
+        ``repro.kernels.dispatch`` so the dense adjacency stays
+        device-resident and jit caches are shared across scenarios), then
+        vectorized coverage selection."""
         import numpy as np
 
-        from repro.kernels.spotlight_ball.ops import spotlight_ball
+        from repro.kernels import dispatch
 
         indptr, indices, weights = self.network.csr()
         items = list(self.entities.items())
@@ -310,7 +313,7 @@ class TLProbabilistic(_SpotlightTL):
             [self._entity_radius(t, now) for _, (_, t) in items], dtype=np.float32
         )
         dists = np.asarray(
-            spotlight_ball(indptr, indices, weights.astype(np.float32), sources, radii)
+            dispatch.spotlight_ball(indptr, indices, weights, sources, radii)
         )  # (Q, V); inf outside each ball
         cam_ids = np.fromiter(self.camera_vertices.keys(), dtype=np.int64)
         cam_verts = np.fromiter(self.camera_vertices.values(), dtype=np.int64)

@@ -1,0 +1,337 @@
+"""Bucket-batched kernel dispatch (the sweep engine's analytics plane).
+
+``reid_match`` and ``spotlight_ball`` are called with whatever batch size
+the simulation happens to produce — a fresh jit specialization per (Q, N)
+pair means a sweep of scenarios recompiles the same kernels over and over.
+This layer makes kernel launches sweep-friendly:
+
+* **bucketing** — batch dimensions are padded up to power-of-two buckets
+  (minimum :data:`BUCKET_MIN`), so an entire sweep compiles each kernel at
+  most once per bucket shape.  Padding is masked out: spotlight pad rows
+  get radius ``-1`` -> all-``inf`` and the min-plus relaxation is
+  row-independent, so spotlight results are **bitwise** equal to the
+  unpadded call; re-id pad queries are masked to ``-inf`` similarity, but
+  padding the gallery changes the GEMM blocking, so re-id scores agree
+  with the unpadded call only up to last-ulp reassociation (still fully
+  deterministic for a given shape).
+* **device-resident operands** — the dense min-plus adjacency of a road
+  network and re-id query blocks are uploaded once and cached by operand
+  identity (weakly referenced, so a dropped world frees its buffers).
+  Per-call padded scratch operands are donated to the kernel.
+* **cache-miss accounting** — :func:`stats` counts calls and distinct
+  bucket shapes, and :func:`jit_cache_sizes` exposes the underlying jit
+  caches so tests can assert "at most one compile per bucket shape".
+
+Backend selection mirrors the kernel packages: Pallas on TPU (or when
+``REPRO_FORCE_PALLAS=1``, interpreted off-TPU), pure-jnp reference
+otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import weakref
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "BUCKET_MIN",
+    "bucket",
+    "spotlight_ball",
+    "reid_match",
+    "stats",
+    "reset_stats",
+    "jit_cache_sizes",
+]
+
+BUCKET_MIN = 8
+
+_STATS = {
+    "reid_calls": 0,
+    "ball_calls": 0,
+    "device_cache_hits": 0,
+    "device_cache_misses": 0,
+    "bucket_shapes": 0,
+}
+_SHAPES: set = set()
+
+
+def bucket(n: int, minimum: int = BUCKET_MIN) -> int:
+    """Smallest power-of-two >= ``n`` (and >= ``minimum``)."""
+    if n < 1:
+        raise ValueError(f"bucket size needs n >= 1, got {n}")
+    return max(1 << (int(n) - 1).bit_length(), minimum)
+
+
+def stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+    _SHAPES.clear()
+
+
+def _note_shape(key: Tuple) -> None:
+    if key not in _SHAPES:
+        _SHAPES.add(key)
+        _STATS["bucket_shapes"] += 1
+
+
+def _use_pallas() -> bool:
+    import jax
+
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "1":
+        return True
+    if force == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------- #
+# Device-resident operand cache (weak, keyed by host-array identity)      #
+# --------------------------------------------------------------------- #
+# id(array) -> (weakref to the host array, device buffer).  The weakref
+# callback evicts the entry when the host array dies, which also guards
+# against id() reuse.
+_DEVICE_CACHE: Dict[int, Tuple[weakref.ref, object]] = {}
+
+
+def _device_resident(arr: np.ndarray, transform=None):
+    """``jax.device_put(transform(arr))`` memoized on the identity of
+    ``arr`` (``transform``, e.g. bucket padding, runs only on a miss)."""
+    import jax
+
+    key = id(arr)
+    entry = _DEVICE_CACHE.get(key)
+    if entry is not None and entry[0]() is arr:
+        _STATS["device_cache_hits"] += 1
+        return entry[1]
+    _STATS["device_cache_misses"] += 1
+    dev = jax.device_put(transform(arr) if transform is not None else arr)
+
+    def _evict(_ref, key=key):
+        _DEVICE_CACHE.pop(key, None)
+
+    _DEVICE_CACHE[key] = (weakref.ref(arr, _evict), dev)
+    return dev
+
+
+# One dense adjacency per (graph identity, dtype): id(weights) is stable
+# because RoadNetwork.csr() caches its arrays.
+_DENSE_CACHE: Dict[Tuple[int, str], Tuple[weakref.ref, object]] = {}
+
+
+def _dense_w(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray, dtype):
+    from .spotlight_ball.ref import dense_adjacency
+
+    key = (id(weights), np.dtype(dtype).str)
+    entry = _DENSE_CACHE.get(key)
+    if entry is not None and entry[0]() is weights:
+        _STATS["device_cache_hits"] += 1
+        return entry[1]
+    # (the _device_resident call below accounts for the cache miss)
+    W_host = dense_adjacency(
+        np.asarray(indptr), np.asarray(indices), np.asarray(weights, dtype=dtype)
+    )
+    dev = _device_resident(W_host)
+
+    def _evict(_ref, key=key):
+        _DENSE_CACHE.pop(key, None)
+
+    _DENSE_CACHE[key] = (weakref.ref(weights, _evict), dev)
+    return dev
+
+
+# --------------------------------------------------------------------- #
+# Batched spotlight balls                                                #
+# --------------------------------------------------------------------- #
+def _make_ball_padded():
+    import jax
+    import jax.numpy as jnp
+
+    from .spotlight_ball.ref import relax_step_ref
+
+    # Donating the per-call scratch operands lets the backend alias their
+    # buffers; CPU does not implement donation and would warn on every
+    # compile, so only donate where it is real.
+    donate = (1, 2) if jax.default_backend() == "tpu" else ()
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("use_pallas", "interpret"),
+        donate_argnums=donate,
+    )
+    def ball_padded(W, sources, radii, *, use_pallas: bool, interpret: bool):
+        V = W.shape[0]
+        Q = sources.shape[0]
+        inf = jnp.array(jnp.inf, dtype=W.dtype)
+        D0 = jnp.full((Q, V), inf, dtype=W.dtype)
+        D0 = D0.at[jnp.arange(Q), sources].set(jnp.zeros((), dtype=W.dtype))
+
+        if use_pallas:
+            from .spotlight_ball.kernel import relax_step_pallas
+
+            step = lambda D: relax_step_pallas(D, W, interpret=interpret)
+        else:
+            step = lambda D: relax_step_ref(D, W)
+
+        def cond(state):
+            D, changed, it = state
+            return jnp.logical_and(changed, it < V)
+
+        def body(state):
+            D, _, it = state
+            Dn = step(D)
+            return Dn, jnp.any(Dn < D), it + 1
+
+        D, _, _ = jax.lax.while_loop(cond, body, (D0, jnp.bool_(True), jnp.int32(0)))
+        return jnp.where(D <= radii[:, None], D, inf)
+
+    return ball_padded
+
+
+_BALL_PADDED = None
+
+
+def spotlight_ball(indptr, indices, weights, sources, radii, *, dtype=np.float32):
+    """Bucket-padded batched Dijkstra balls over a CSR graph.
+
+    Same contract as ``repro.kernels.spotlight_ball.ops.spotlight_ball``
+    (returns (Q, V) distances, ``inf`` outside each radius) but the dense
+    adjacency is device-resident per graph, and Q is padded to a
+    power-of-two bucket (pad queries get radius ``-1`` and therefore
+    all-``inf`` rows, which are sliced off).  Rows are independent under
+    min-plus relaxation, so real rows are bitwise identical to an
+    unpadded call.
+    """
+    global _BALL_PADDED
+    import jax
+    import jax.numpy as jnp
+
+    _STATS["ball_calls"] += 1
+    sources = np.asarray(sources, dtype=np.int32)
+    Q = sources.shape[0]
+    qb = bucket(Q)
+    src_pad = np.zeros(qb, dtype=np.int32)
+    src_pad[:Q] = sources
+    rad_pad = np.full(qb, -1.0, dtype=dtype)
+    rad_pad[:Q] = np.asarray(radii, dtype=dtype)
+
+    W = _dense_w(indptr, indices, weights, dtype)
+    use_pallas = _use_pallas()
+    interpret = jax.default_backend() != "tpu"
+    if _BALL_PADDED is None:
+        _BALL_PADDED = _make_ball_padded()
+    _note_shape(("ball", int(W.shape[0]), qb, np.dtype(dtype).str, use_pallas))
+    out = _BALL_PADDED(
+        W,
+        jnp.asarray(src_pad),
+        jnp.asarray(rad_pad),
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    return out[:Q]
+
+
+# --------------------------------------------------------------------- #
+# Batched re-id matching                                                 #
+# --------------------------------------------------------------------- #
+def _make_reid_padded():
+    import jax
+    import jax.numpy as jnp
+
+    donate = (0,) if jax.default_backend() == "tpu" else ()
+
+    # threshold is traced (not static): sweeps vary it per config, and a
+    # static arg would recompile per distinct value — violating the
+    # one-compile-per-bucket-shape contract without showing up in stats.
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def reid_padded(gallery, queries, nq, threshold):
+        # Same arithmetic as reid_match_ref, with pad queries masked to
+        # -inf similarity so they can never win the per-candidate max.
+        g = gallery.astype(jnp.float32)
+        q = queries.astype(jnp.float32)
+        g = g / jnp.maximum(jnp.linalg.norm(g, axis=-1, keepdims=True), 1e-6)
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-6)
+        sim = g @ q.T  # (N, Qb)
+        valid = jnp.arange(q.shape[0])[None, :] < nq
+        sim = jnp.where(valid, sim, -jnp.inf)
+        scores = jnp.max(sim, axis=-1)
+        best = jnp.argmax(sim, axis=-1).astype(jnp.int32)
+        return scores, best, scores >= threshold
+
+    return reid_padded
+
+
+_REID_PADDED = None
+
+
+def reid_match(gallery, queries, *, threshold: float = 0.5):
+    """Bucket-padded re-id matcher: ``(scores, best_query, is_match)`` for
+    the first ``N`` gallery rows, matching the unpadded
+    ``repro.kernels.reid_match`` call up to last-ulp GEMM reassociation
+    (padding changes the matmul blocking; results are deterministic per
+    shape).
+
+    The gallery (per-call candidate embeddings) is padded to a
+    power-of-two row bucket and donated; the query block (often a
+    long-lived entity embedding) is padded once and kept device-resident
+    keyed on its identity.
+    """
+    global _REID_PADDED
+    import jax.numpy as jnp
+
+    _STATS["reid_calls"] += 1
+    gallery = np.asarray(gallery, dtype=np.float32)
+    if gallery.ndim != 2:
+        raise ValueError(f"gallery must be (N, D), got {gallery.shape}")
+    N, D = gallery.shape
+    nb = bucket(N)
+    g_pad = np.zeros((nb, D), dtype=np.float32)
+    g_pad[:N] = gallery
+
+    queries_np = np.asarray(queries, dtype=np.float32)
+    if queries_np.ndim != 2 or queries_np.shape[1] != D:
+        raise ValueError(f"queries must be (Q, {D}), got {queries_np.shape}")
+    Q = queries_np.shape[0]
+    qb = bucket(Q)
+
+    def _pad_queries(_q):
+        q_pad = np.zeros((qb, D), dtype=np.float32)
+        q_pad[:Q] = queries_np
+        return q_pad
+
+    if isinstance(queries, np.ndarray):
+        # Long-lived query blocks (the tracked entity's embedding) stay
+        # device-resident, padded once, keyed on the host array identity.
+        q_dev = _device_resident(queries, transform=_pad_queries)
+    else:
+        q_dev = jnp.asarray(_pad_queries(queries_np))
+
+    if _REID_PADDED is None:
+        _REID_PADDED = _make_reid_padded()
+    _note_shape(("reid", nb, qb, D))
+    scores, best, matched = _REID_PADDED(
+        jnp.asarray(g_pad), q_dev, jnp.int32(Q), jnp.float32(threshold)
+    )
+    return scores[:N], best[:N], matched[:N]
+
+
+def jit_cache_sizes() -> Dict[str, int]:
+    """Number of distinct compilations held by each padded kernel (0 when
+    the kernel has not been dispatched yet)."""
+    sizes = {}
+    for name, fn in (("ball", _BALL_PADDED), ("reid", _REID_PADDED)):
+        if fn is None:
+            sizes[name] = 0
+            continue
+        try:
+            sizes[name] = fn._cache_size()
+        except AttributeError:  # older jax: fall back to tracked shapes
+            sizes[name] = sum(1 for s in _SHAPES if s[0] == name)
+    return sizes

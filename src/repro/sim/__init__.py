@@ -3,9 +3,13 @@
 from .cameras import CameraNetwork, EntityWalk, Frame
 from .scenario import ScenarioConfig, ScenarioResult, TrackingScenario, linear_xi
 from .simulator import DiscreteEventSimulator, NetworkModel
+from .sweep import CaseRecord, SweepResult, SweepRunner
+from .world import WorldBundle, WorldKey, clear_world_cache, get_world, world_cache_stats
 
 __all__ = [
-    "CameraNetwork", "DiscreteEventSimulator", "EntityWalk", "Frame",
-    "NetworkModel", "ScenarioConfig", "ScenarioResult", "TrackingScenario",
-    "linear_xi",
+    "CameraNetwork", "CaseRecord", "DiscreteEventSimulator", "EntityWalk",
+    "Frame", "NetworkModel", "ScenarioConfig", "ScenarioResult",
+    "SweepResult", "SweepRunner", "TrackingScenario", "WorldBundle",
+    "WorldKey", "clear_world_cache", "get_world", "linear_xi",
+    "world_cache_stats",
 ]

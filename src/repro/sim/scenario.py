@@ -16,6 +16,7 @@ entity peak speed ``es``, bandwidth schedule, clock skews.
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -26,7 +27,6 @@ from repro.core.budget import TaskBudget
 from repro.core.clock import Clock
 from repro.core.events import Event, EventHeader, new_event_id, source_header
 from repro.core.pipeline import SinkTask, Task
-from repro.core.roadnet import RoadNetwork, make_road_network
 from repro.core.tracking import (
     Detection,
     TLBFS,
@@ -35,8 +35,9 @@ from repro.core.tracking import (
     TLWBFS,
     TrackingLogic,
 )
-from .cameras import CameraNetwork, EntityWalk, Frame
+from .cameras import CameraNetwork, Frame
 from .simulator import DiscreteEventSimulator, NetworkModel
+from .world import WorldBundle, WorldKey, get_world
 
 __all__ = ["ScenarioConfig", "ScenarioResult", "TrackingScenario", "linear_xi"]
 
@@ -110,6 +111,15 @@ class ScenarioConfig:
     bandwidth_schedule: Optional[Callable[[float], float]] = None
     # Clock skew per compute node (§4.6.2); source/sink stay at skew 0.
     node_clock_skews: Optional[Sequence[float]] = None
+    # Shared immutable world (road + walk + cameras + transit tables).  When
+    # None the scenario fetches it from the process-wide world cache; sweep
+    # runners attach a prebuilt bundle so concurrent configs share one build.
+    world: Optional[WorldBundle] = field(default=None, repr=False, compare=False)
+    # Frame embeddings: 0 keeps the synthetic boolean frames; > 0 attaches a
+    # per-frame embedding so VA runs the batched re-ID matcher on real
+    # tensors (bucket-padded through repro.kernels.dispatch).
+    embed_dim: int = 0
+    reid_threshold: float = 0.5
 
 
 @dataclass
@@ -127,6 +137,7 @@ class ScenarioResult:
     positives_completed: int
     positives_dropped: int
     detections_on_time: int
+    reid_matched: int = 0
 
     @property
     def peak_active(self) -> int:
@@ -174,40 +185,63 @@ class TrackingScenario:
 
     def __init__(self, config: ScenarioConfig) -> None:
         self.cfg = config
-        num_vertices = config.road_vertices or max(1000, config.num_cameras)
-        if num_vertices == 1000:
-            self.road = make_road_network(seed=config.seed)
+        t_init = time.perf_counter()
+        # The scenario no longer owns world geometry: the road network, walk
+        # and camera placement live in a shared immutable WorldBundle, built
+        # once per key and reused by every config of a sweep.
+        key = WorldKey.from_config(config)
+        world = config.world
+        if world is None:
+            t0 = time.perf_counter()
+            world = get_world(key)
+            self.world_build_seconds = time.perf_counter() - t0
         else:
-            # Keep the paper's edge density (2817/1000) and mean road length.
-            self.road = make_road_network(
-                num_vertices=num_vertices,
-                target_edges=int(round(num_vertices * 2.817)),
-                seed=config.seed,
+            if world.key != key:
+                raise ValueError(
+                    f"config.world was built for {world.key}, but this config "
+                    f"needs {key}"
+                )
+            self.world_build_seconds = 0.0
+        self.world = world
+        self.road = world.road
+        self.walk = world.walk
+        if config.embed_dim:
+            # Embedding draws consume the camera RNG, so an embedding-enabled
+            # camera network is stateful and cannot be shared across
+            # scenarios; rebuild it (road + walk still come from the bundle).
+            self.cameras = CameraNetwork(
+                self.road,
+                self.walk,
+                num_cameras=config.num_cameras,
+                fov_radius_m=config.fov_radius_m,
+                fps=config.fps,
+                embed_dim=config.embed_dim,
+                seed=config.seed + 13,
             )
-        self.walk = EntityWalk(
-            self.road,
-            start_vertex=0,
-            speed_mps=config.entity_speed_mps,
-            duration_s=config.duration_s + 60.0,
-            seed=config.seed + 7,
-        )
-        self.cameras = CameraNetwork(
-            self.road,
-            self.walk,
-            num_cameras=config.num_cameras,
-            fov_radius_m=config.fov_radius_m,
-            fps=config.fps,
-            seed=config.seed + 13,
-        )
+        else:
+            self.cameras = world.cameras
         network = NetworkModel()
         if config.bandwidth_schedule is not None:
             network.bandwidth_schedule = config.bandwidth_schedule
-        self.sim = DiscreteEventSimulator(network)
+        # The static (src, dst) -> (latency, over-network) classification
+        # depends only on the deployment shape, so scenarios sharing a world
+        # share the memoized table too.
+        self.sim = DiscreteEventSimulator(
+            network,
+            transit_cache=world.transit_table(
+                config.num_va, config.num_cr, config.num_nodes
+            ),
+        )
+        self._reid_enabled = config.embed_dim > 0
+        self._reid_query = (
+            self.cameras.entity_embedding[None, :] if self._reid_enabled else None
+        )
         self._build_tl()
         self._build_pipeline()
         self._stats_active: List[Tuple[float, int]] = []
         self._positives_generated = 0
         self._positives_completed = 0
+        self._reid_matched = 0
         self._detections_on_time = 0
         self._pending_detections: List[Detection] = []
         self._source_events = 0
@@ -218,6 +252,10 @@ class TrackingScenario:
         # events for the delta).
         self._fc_active: Set[int] = set(self.tl.active)
         self._ctrl_target: Set[int] = set(self.tl.active)
+        #: Construction wall-time (world fetch + pipeline build), split from
+        #: run() wall-time so per-event rates aren't polluted by one-off
+        #: builds (benchmarks record both).
+        self.build_seconds = time.perf_counter() - t_init
 
     # ------------------------------------------------------------------ #
     def _build_tl(self) -> None:
@@ -420,11 +458,37 @@ class TrackingScenario:
         # Object detection: every frame yields candidate boxes (1:1).  A
         # high-confidence candidate match flags the event avoid-drop (§4.3.3)
         # so the downstream drop points cannot shed it.
+        if self._reid_enabled:
+            self._va_reid(events)
         if self.cfg.avoid_drop_positives:
             for ev in events:
                 if getattr(ev.value, "has_entity", False):
                     ev.header.avoid_drop = True
         return events
+
+    def _va_reid(self, events: List[Event]) -> None:
+        """Batched re-ID over the batch's frame embeddings: one bucket-padded
+        ``reid_match`` call per VA batch (gallery = the frames' embeddings,
+        query = the tracked entity's embedding).  Matches count toward
+        ``ScenarioResult.reid_matched`` and — like the ground-truth candidate
+        filter — flag avoid-drop when the config asks for it (§4.3.3)."""
+        from repro.kernels import dispatch
+
+        embs = [getattr(ev.value, "embedding", None) for ev in events]
+        idx = [i for i, e in enumerate(embs) if e is not None]
+        if not idx:
+            return
+        gallery = np.stack([embs[i] for i in idx])
+        _, _, matched = dispatch.reid_match(
+            gallery, self._reid_query, threshold=self.cfg.reid_threshold
+        )
+        matched = np.asarray(matched)
+        avoid = self.cfg.avoid_drop_positives
+        for j, i in enumerate(idx):
+            if matched[j]:
+                self._reid_matched += 1
+                if avoid:
+                    events[i].header.avoid_drop = True
 
     def _cr_logic(self, events: List[Event], state: Dict) -> List[Event]:
         rng = state.get("rng")
@@ -592,4 +656,5 @@ class TrackingScenario:
             positives_completed=self._positives_completed,
             positives_dropped=self._positives_generated - self._positives_completed,
             detections_on_time=self._detections_on_time,
+            reid_matched=self._reid_matched,
         )

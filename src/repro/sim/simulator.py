@@ -57,7 +57,11 @@ class NetworkModel:
 class DiscreteEventSimulator(Scheduler):
     """Minimal deterministic discrete-event scheduler."""
 
-    def __init__(self, network: Optional[NetworkModel] = None) -> None:
+    def __init__(
+        self,
+        network: Optional[NetworkModel] = None,
+        transit_cache: Optional[Dict[Tuple[str, str], Tuple[float, bool]]] = None,
+    ) -> None:
         self._heap: List[Tuple[float, int, Callable[..., None], tuple]] = []
         self._seq = 0
         self._time = 0.0
@@ -65,8 +69,12 @@ class DiscreteEventSimulator(Scheduler):
         self.host_of: Dict[str, str] = {}
         # (src, dst) -> (fixed latency, charged over the network?).  Host
         # assignment is static once the pipeline is built, so the
-        # classification (IPC vs LAN vs MAN) never changes.
-        self._transit_cache: Dict[Tuple[str, str], Tuple[float, bool]] = {}
+        # classification (IPC vs LAN vs MAN) never changes.  A caller may
+        # pass a shared table: entries depend only on task naming and the
+        # (constant) latency tiers, so scenarios with the same deployment
+        # shape can reuse one memoized table (the time-varying bandwidth
+        # term is applied outside the cached entry).
+        self._transit_cache = transit_cache if transit_cache is not None else {}
 
     # -- Scheduler protocol -------------------------------------------- #
     @property

@@ -1,0 +1,257 @@
+"""Sweep engine: run a whole grid of scenario configs in one pass.
+
+A benchmark sweep (the paper's Figs. 5-13) is a list of ``(name,
+ScenarioConfig)`` pairs.  :class:`SweepRunner` executes the grid with the
+shared-world machinery:
+
+* distinct :class:`~repro.sim.world.WorldKey`\\ s are prebuilt **once** in
+  the parent and attached to the configs, so no grid point rebuilds
+  geometry it shares with another;
+* on platforms with ``fork`` the configs run concurrently in a process
+  pool — the prebuilt worlds are inherited copy-on-write, and configs are
+  indexed through a module-level list so grids carrying unpicklable
+  members (e.g. a ``bandwidth_schedule`` lambda) still work;
+* everywhere else (or with ``mode="serial"``) the grid runs serially in
+  process, producing the **same records**.
+
+Every scenario is self-contained — its RNG streams derive only from its
+own config seed and its world is deterministic in its key — so each
+per-config ``summary()`` is bit-identical between serial and concurrent
+execution, and to a plain sequential ``TrackingScenario(cfg).run()``.
+
+Workers disable the cyclic GC around ``run()`` (the event runtime is
+allocation-lean and acyclic; collection pauses only add wall-clock noise);
+results carry construction and run wall-times separately.
+"""
+
+from __future__ import annotations
+
+import gc
+import multiprocessing
+import os
+import time
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .scenario import ScenarioConfig, TrackingScenario
+from .world import WorldKey, clear_world_cache, get_world, world_cache_stats
+
+__all__ = ["CaseRecord", "SweepResult", "SweepRunner"]
+
+
+@dataclass
+class CaseRecord:
+    """Per-config result: the summary plus split wall-times (picklable)."""
+
+    name: str
+    summary: Dict
+    build_s: float  # scenario construction (world fetch + pipeline build)
+    run_s: float  # TrackingScenario.run() only
+    world_build_s: float  # non-zero only when this case built its world
+    seed: int
+
+    @property
+    def us_per_event(self) -> float:
+        return self.run_s * 1e6 / max(self.summary.get("source_events", 0), 1)
+
+
+@dataclass
+class SweepResult:
+    records: List[CaseRecord]
+    wall_s: float  # whole-sweep wall-clock (world prebuild + all cases)
+    mode: str  # "fork" | "serial"
+    workers: int
+    worlds_built: int
+    world_build_s: float
+
+
+def _run_case(name: str, cfg: ScenarioConfig) -> CaseRecord:
+    t0 = time.perf_counter()
+    scenario = TrackingScenario(cfg)
+    build_s = time.perf_counter() - t0
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        result = scenario.run()
+        run_s = time.perf_counter() - t0
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    return CaseRecord(
+        name=name,
+        summary=result.summary(),
+        build_s=build_s,
+        run_s=run_s,
+        world_build_s=scenario.world_build_seconds,
+        seed=cfg.seed,
+    )
+
+
+# Fork-inherited grid: worker processes index into this instead of having
+# configs pickled to them (configs may carry lambdas, and the attached
+# WorldBundles travel copy-on-write through fork for free).
+_ACTIVE_GRID: List[Tuple[str, ScenarioConfig]] = []
+
+
+def _run_case_at(idx: int) -> CaseRecord:
+    name, cfg = _ACTIVE_GRID[idx]
+    return _run_case(name, cfg)
+
+
+def _cost_hint(cfg: ScenarioConfig) -> float:
+    """Rough relative cost of a config, used only to order pool submission
+    (longest first minimizes makespan).  Source events dominate: a base TL
+    sources every camera each tick; spotlight TLs source an active set that
+    grows with the entity peak speed."""
+    ticks = cfg.duration_s * cfg.fps
+    if cfg.tl == "base":
+        per_tick = float(cfg.num_cameras)
+    else:
+        per_tick = 3.0 * cfg.tl_peak_speed**2
+    overload = 2.0 if cfg.drops_enabled else 1.0
+    return ticks * per_tick * overload
+
+
+class SweepRunner:
+    """Executes a grid of scenario configs with shared worlds.
+
+    ``mode``: ``"auto"`` picks a fork pool when the platform supports it
+    and the grid has more than one case, else serial; ``"fork"`` forces
+    the pool; ``"serial"`` runs in process.  ``share_worlds=False``
+    disables world prebuilding *and* clears the world/road caches before
+    every case — the faithful "rebuild everything per config" sequential
+    baseline the sweep engine is measured against.
+    """
+
+    def __init__(
+        self,
+        mode: str = "auto",
+        max_workers: Optional[int] = None,
+        share_worlds: bool = True,
+    ) -> None:
+        if mode not in ("auto", "fork", "serial"):
+            raise ValueError(f"unknown sweep mode {mode!r}")
+        if mode == "fork" and not share_worlds:
+            raise ValueError(
+                "share_worlds=False is the sequential cold baseline; "
+                "it cannot run in a fork pool"
+            )
+        self.mode = mode
+        self.max_workers = max_workers
+        self.share_worlds = share_worlds
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def fork_available() -> bool:
+        return "fork" in multiprocessing.get_all_start_methods()
+
+    def _resolve_mode(self, n_cases: int, needs_jax: bool = False) -> Tuple[str, int]:
+        workers = self.max_workers or os.cpu_count() or 1
+        workers = max(1, min(workers, n_cases))
+        if self.mode == "fork":
+            # Forced pool: never degrade silently (a 1-worker pool is still
+            # a fork pool — results must be identical either way).
+            if not self.fork_available():
+                raise RuntimeError("fork start method unavailable on this platform")
+            return "fork", workers
+        if self.mode == "serial" or workers == 1 or not self.fork_available():
+            return "serial", 1
+        if needs_jax:
+            # JAX (multithreaded XLA) in a forked child of a JAX-initialized
+            # parent can deadlock; grids whose scenarios dispatch kernels
+            # (embed_dim re-id) run serially unless fork is forced.
+            return "serial", 1
+        return "fork", workers
+
+    # ------------------------------------------------------------------ #
+    def run(self, grid: Sequence[Tuple[str, ScenarioConfig]]) -> SweepResult:
+        grid = list(grid)
+        t_sweep = time.perf_counter()
+        builds_before = world_cache_stats()["builds"]
+        world_build_s = 0.0
+        if self.share_worlds and grid:
+            # Prebuild each distinct world once (deduplicated by key) and
+            # attach the bundle so no case rebuilds shared geometry.
+            bundles: Dict[WorldKey, object] = {}
+            attached = []
+            for name, cfg in grid:
+                if cfg.world is not None:
+                    attached.append((name, cfg))
+                    continue
+                key = WorldKey.from_config(cfg)
+                bundle = bundles.get(key)
+                if bundle is None:
+                    t0 = time.perf_counter()
+                    bundle = get_world(key)
+                    world_build_s += time.perf_counter() - t0
+                    bundles[key] = bundle
+                attached.append((name, replace(cfg, world=bundle)))
+            grid = attached
+        # True builds only: LRU/disk hits during the prebuild don't count.
+        worlds_built = world_cache_stats()["builds"] - builds_before
+        world_build_total = world_build_s
+        needs_jax = any(cfg.embed_dim > 0 for _, cfg in grid)
+        if not self.share_worlds:
+            # The cold baseline is by definition sequential (per-case cache
+            # clearing cannot be meaningful across concurrent workers).
+            mode, workers = "serial", 1
+        else:
+            mode, workers = self._resolve_mode(len(grid), needs_jax=needs_jax)
+        if mode == "fork":
+            records = self._run_fork(grid, workers)
+        elif self.share_worlds:
+            records = [_run_case(name, cfg) for name, cfg in grid]
+        else:
+            # Cold baseline: every config rebuilds its world from scratch —
+            # in-memory caches cleared per case AND the on-disk cache masked
+            # (benchmarks default it on; a disk hit would warm the baseline).
+            from repro.core.roadnet import clear_network_cache
+
+            disk_env = os.environ.get("REPRO_WORLD_CACHE")
+            os.environ["REPRO_WORLD_CACHE"] = "0"
+            try:
+                records = []
+                for name, cfg in grid:
+                    clear_world_cache()
+                    clear_network_cache()
+                    records.append(_run_case(name, cfg))
+            finally:
+                if disk_env is None:
+                    del os.environ["REPRO_WORLD_CACHE"]
+                else:
+                    os.environ["REPRO_WORLD_CACHE"] = disk_env
+            # Cold mode: every case built its own world; the per-case
+            # clearing also reset the global stats, so report from records.
+            worlds_built = len(records)
+            world_build_total = sum(r.world_build_s for r in records)
+        return SweepResult(
+            records=records,
+            wall_s=time.perf_counter() - t_sweep,
+            mode=mode,
+            workers=workers,
+            worlds_built=worlds_built,
+            world_build_s=world_build_total,
+        )
+
+    def _run_fork(
+        self, grid: List[Tuple[str, ScenarioConfig]], workers: int
+    ) -> List[CaseRecord]:
+        global _ACTIVE_GRID
+        ctx = multiprocessing.get_context("fork")
+        prev, _ACTIVE_GRID = _ACTIVE_GRID, grid
+        # Longest-expected-first submission (with chunksize=1) minimizes the
+        # makespan when the grid mixes heavy and light cases; the records
+        # are restored to grid order below, so output is order-stable.
+        order = sorted(
+            range(len(grid)), key=lambda i: -_cost_hint(grid[i][1])
+        )
+        try:
+            with ctx.Pool(processes=workers) as pool:
+                out = pool.map(_run_case_at, order, chunksize=1)
+        finally:
+            _ACTIVE_GRID = prev
+        records: List[Optional[CaseRecord]] = [None] * len(grid)
+        for pos, idx in enumerate(order):
+            records[idx] = out[pos]
+        return records  # type: ignore[return-value]

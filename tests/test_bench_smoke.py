@@ -1,0 +1,123 @@
+"""Benchmark-harness smoke + perf-regression gate (satellite of the sweep
+engine PR).
+
+* ``--only pipeline --smoke`` must finish in seconds, emit per-case and
+  sweep records, and round-trip through ``--json``.
+* ``--compare`` must pass against freshly generated same-machine records
+  and fail when the baseline is made impossibly fast.
+* The checked-in ``BENCH_pipeline.json`` smoke records gate drift at a
+  loose tolerance by default (CI containers are noisy); the strict 35%
+  gate — the PR's regression contract — runs when ``REPRO_RUN_SLOW=1``
+  (slow-aware: it re-times the full-duration cases).
+"""
+
+import json
+import os
+
+import pytest
+
+import benchmarks.run as benchrun
+from benchmarks.scenarios import RECORDS
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_records(monkeypatch):
+    # Keep harness runs hermetic: no on-disk world cache, fresh record list.
+    monkeypatch.setenv("REPRO_WORLD_CACHE", "0")
+    RECORDS.clear()
+    yield
+    RECORDS.clear()
+
+
+def _run(argv):
+    return benchrun.main(argv)
+
+
+def test_pipeline_smoke_writes_records(tmp_path):
+    out = tmp_path / "pipeline.json"
+    status = _run(["--only", "pipeline", "--smoke", "--mode", "serial",
+                   "--json", str(out)])
+    assert status == 0
+    data = json.loads(out.read_text())
+    cases = {r["case"]: r for r in data["records"] if r["bench"] == "pipeline"}
+    for name, _ in benchrun.PIPELINE_CASES:
+        rec = cases[name]
+        assert rec["mode"] == "smoke"
+        assert rec["us_per_event"] > 0
+        assert rec["run_s"] > 0 and rec["build_s"] >= 0
+
+
+def test_compare_gate_passes_against_fresh_records(tmp_path):
+    out = tmp_path / "base.json"
+    assert _run(["--only", "pipeline", "--smoke", "--mode", "serial",
+                 "--json", str(out)]) == 0
+    RECORDS.clear()
+    # Same machine, moments later, generous tolerance: must pass.
+    assert _run(["--compare", str(out), "--smoke", "--mode", "serial",
+                 "--compare-tolerance", "3.0"]) == 0
+
+
+def test_compare_gate_fails_on_regression(tmp_path):
+    out = tmp_path / "base.json"
+    assert _run(["--only", "pipeline", "--smoke", "--mode", "serial",
+                 "--json", str(out)]) == 0
+    data = json.loads(out.read_text())
+    for rec in data["records"]:
+        if rec["bench"] == "pipeline" and rec["case"] in dict(benchrun.PIPELINE_CASES):
+            rec["us_per_event"] = rec["us_per_event"] / 1000.0  # impossible baseline
+    out.write_text(json.dumps(data))
+    RECORDS.clear()
+    assert _run(["--compare", str(out), "--smoke", "--mode", "serial"]) == 1
+
+
+def test_compare_gate_reports_missing_mode(tmp_path):
+    out = tmp_path / "empty.json"
+    out.write_text(json.dumps({"harness": "benchmarks.run", "records": []}))
+    assert _run(["--compare", str(out), "--smoke", "--mode", "serial"]) == 2
+
+
+def test_checked_in_baseline_has_drift_gate_records():
+    """BENCH_pipeline.json must carry smoke-mode records so the drift gate
+    below (and CI smoke runs) have a same-workload baseline."""
+    with open(BENCH_JSON) as f:
+        data = json.load(f)
+    modes = {
+        (r["case"], r.get("mode", "full"))
+        for r in data["records"]
+        if r["bench"] == "pipeline"
+    }
+    for name, _ in benchrun.PIPELINE_CASES:
+        assert (name, "full") in modes
+        assert (name, "smoke") in modes
+
+
+@pytest.mark.skipif(
+    os.environ.get("REPRO_SKIP_PERF_GATE", "") == "1",
+    reason="perf drift gate disabled (slow/emulated machine)",
+)
+def test_drift_gate_against_checked_in_baseline():
+    """Order-of-magnitude drift gate vs the checked-in records: the loose
+    tolerance (ratio <= 4) absorbs CI noise while still catching a
+    seed-era (~10x) per-event regression.  The baselines are absolute
+    timings from the reference container — on machines more than ~4x
+    slower, opt out with REPRO_SKIP_PERF_GATE=1."""
+    status = _run(["--compare", BENCH_JSON, "--smoke", "--mode", "serial",
+                   "--compare-tolerance", "3.0"])
+    assert status == 0, (
+        "pipeline us_per_event drifted >4x from BENCH_pipeline.json — a real "
+        "regression, or a machine much slower than the reference container "
+        "(set REPRO_SKIP_PERF_GATE=1 to opt out on slow/emulated machines)"
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(
+    os.environ.get("REPRO_RUN_SLOW", "") != "1",
+    reason="strict full-duration gate; set REPRO_RUN_SLOW=1",
+)
+def test_strict_full_duration_regression_gate():
+    """The PR's contract: full-duration pipeline cases within 35% of the
+    checked-in baseline."""
+    assert _run(["--compare", BENCH_JSON, "--mode", "serial"]) == 0

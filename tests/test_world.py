@@ -1,0 +1,138 @@
+"""WorldBundle sharing: key derivation, in-process + on-disk caches, and
+the 10k-camera "second construction is nearly free" acceptance check."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.sim import (
+    ScenarioConfig,
+    TrackingScenario,
+    WorldKey,
+    clear_world_cache,
+    get_world,
+    world_cache_stats,
+)
+from repro.sim.world import build_world
+
+
+def test_world_key_matches_legacy_parameter_derivation():
+    # Default: paper's 1000-vertex / 2817-edge network.
+    key = WorldKey.from_config(ScenarioConfig(num_cameras=1000, seed=3))
+    assert (key.road_vertices, key.road_edges, key.seed) == (1000, 2817, 3)
+    # Camera count above the vertex count grows the graph proportionally.
+    key = WorldKey.from_config(ScenarioConfig(num_cameras=5000))
+    assert (key.road_vertices, key.road_edges) == (5000, int(round(5000 * 2.817)))
+    # Explicit road_vertices wins.
+    key = WorldKey.from_config(ScenarioConfig(num_cameras=100, road_vertices=400))
+    assert (key.road_vertices, key.road_edges) == (400, int(round(400 * 2.817)))
+    # The walk horizon follows duration (+60s drain), so it is part of the key.
+    a = WorldKey.from_config(ScenarioConfig(duration_s=60.0))
+    b = WorldKey.from_config(ScenarioConfig(duration_s=600.0))
+    assert a != b and a.walk_horizon_s == 120.0
+
+
+def test_world_bundle_matches_inline_build():
+    """A bundle world is bit-identical to what the scenario constructor
+    used to build inline (same RNG seeds, same derived parameters)."""
+    cfg = ScenarioConfig(num_cameras=150, road_vertices=200, duration_s=30.0, seed=11)
+    bundle = build_world(WorldKey.from_config(cfg))
+    assert bundle.road.num_vertices == 200
+    assert bundle.cameras.num_cameras == 150
+    sc = TrackingScenario(cfg)
+    np.testing.assert_array_equal(sc.road.positions, bundle.road.positions)
+    assert sc.road.adjacency == bundle.road.adjacency
+    assert sc.walk.vertices == bundle.walk.vertices
+    assert sc.cameras.camera_vertices == bundle.cameras.camera_vertices
+
+
+def test_get_world_memoizes_in_process():
+    cfg = ScenarioConfig(num_cameras=50, road_vertices=120, duration_s=20.0, seed=21)
+    key = WorldKey.from_config(cfg)
+    before = world_cache_stats()
+    w1 = get_world(key)
+    w2 = get_world(key)
+    assert w1 is w2
+    after = world_cache_stats()
+    assert after["memory_hits"] >= before["memory_hits"] + 1
+    # Scenario constructions share the same bundle objects.
+    s1 = TrackingScenario(cfg)
+    s2 = TrackingScenario(cfg)
+    assert s1.road is s2.road and s1.walk is s2.walk and s1.cameras is s2.cameras
+    assert s1.world is s2.world
+
+
+def test_config_world_handle_and_mismatch_rejection():
+    cfg = ScenarioConfig(num_cameras=40, road_vertices=100, duration_s=20.0, seed=5)
+    bundle = get_world(WorldKey.from_config(cfg))
+    sc = TrackingScenario(ScenarioConfig(
+        num_cameras=40, road_vertices=100, duration_s=20.0, seed=5, world=bundle
+    ))
+    assert sc.world is bundle and sc.world_build_seconds == 0.0
+    with pytest.raises(ValueError):
+        TrackingScenario(ScenarioConfig(
+            num_cameras=41, road_vertices=100, duration_s=20.0, seed=5, world=bundle
+        ))
+
+
+def test_disk_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_WORLD_CACHE", str(tmp_path))
+    cfg = ScenarioConfig(num_cameras=60, road_vertices=150, duration_s=20.0, seed=31)
+    key = WorldKey.from_config(cfg)
+    fresh = get_world(key)
+    summary_fresh = TrackingScenario(cfg).run().summary()
+    assert any(p.name.startswith("world_") for p in tmp_path.iterdir())
+    # Drop the in-process entry; the next fetch must come from disk and be
+    # bit-identical (pickle roundtrips floats exactly).
+    clear_world_cache()
+    loaded = get_world(key)
+    assert loaded is not fresh
+    assert world_cache_stats()["disk_hits"] == 1
+    np.testing.assert_array_equal(loaded.road.positions, fresh.road.positions)
+    assert loaded.road.adjacency == fresh.road.adjacency
+    assert loaded.walk.vertices == fresh.walk.vertices
+    assert loaded.cameras.camera_vertices == fresh.cameras.camera_vertices
+    assert TrackingScenario(cfg).run().summary() == summary_fresh
+
+
+def test_disk_cache_disabled_by_default(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_WORLD_CACHE", raising=False)
+    clear_world_cache()
+    cfg = ScenarioConfig(num_cameras=30, road_vertices=90, duration_s=20.0, seed=41)
+    get_world(WorldKey.from_config(cfg))
+    assert world_cache_stats()["disk_writes"] == 0
+
+
+def test_embed_dim_scenarios_do_not_share_camera_rng():
+    """Embedding-enabled camera networks are stateful: each scenario must
+    own a fresh one (sharing road + walk), so two runs are identical."""
+    cfg = ScenarioConfig(
+        num_cameras=50, road_vertices=120, duration_s=20.0, seed=51, embed_dim=8,
+        tl="base", batching="static", static_batch=5,
+    )
+    s1 = TrackingScenario(cfg)
+    s2 = TrackingScenario(cfg)
+    assert s1.cameras is not s2.cameras
+    assert s1.road is s2.road
+    assert s1.run().summary() == s2.run().summary()
+
+
+def test_second_10k_construction_under_ten_percent_of_first():
+    """Acceptance: a WorldBundle cache hit makes the second 10k-camera
+    scenario construct in <10% of the first's build time."""
+    cfg = ScenarioConfig(
+        num_cameras=10_000, duration_s=10.0, tl="bfs", batching="dynamic",
+        m_max=25, seed=9,
+    )
+    t0 = time.perf_counter()
+    first = TrackingScenario(cfg)
+    t_first = time.perf_counter() - t0
+    assert first.world_build_seconds > 0.0  # cold: this call built the world
+    t0 = time.perf_counter()
+    second = TrackingScenario(cfg)
+    t_second = time.perf_counter() - t0
+    assert second.world is first.world
+    assert t_second < 0.1 * t_first, (
+        f"warm construction {t_second:.3f}s vs cold {t_first:.3f}s"
+    )
