@@ -322,6 +322,28 @@ def bench_app2_fig12(ctx) -> None:
     _run_grid("fig12", ctx)
 
 
+def bench_apps(ctx) -> None:
+    """Table-1 apps through the app compiler: all four apps x {dynamic, nob}
+    batching as one (app, deployment) sweep.  Smoke-sized by construction
+    (the examples' 300-camera / 60 s workload) so app-level perf is tracked
+    on every run; App 4 keeps the grid off auto-fork (JAX in workers)."""
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from examples.apps import table1_grid
+
+    print(f"{SEP}\n# Table-1 apps via compile_app — four apps x dynamic/nob batching")
+    grid = []
+    for batching in ("dynamic", "nob"):
+        grid.extend(
+            (f"{name}_{batching}", case) for name, case in table1_grid(batching)
+        )
+    res = _runner(ctx).run(grid)
+    for rec in res.records:
+        print(record_case("apps", rec, mode=_mode_label(ctx)))
+    _sweep_record("apps", res, ctx)
+
+
 def bench_scale_fig13(ctx) -> None:
     _run_grid("fig13", ctx)
     # Multi-entity probabilistic spotlight: bucket-batched CSR relaxation
@@ -479,6 +501,7 @@ def bench_serving(ctx=None) -> None:
 
 BENCHES = {
     "pipeline": bench_pipeline,
+    "apps": bench_apps,
     "fig567": bench_batching_fig567,
     "fig10": bench_tracking_fig10,
     "fig11": bench_dropping_fig11,

@@ -1,21 +1,24 @@
-"""Quickstart: compose App 1 (paper Table 1) and run a tracking scenario.
+"""Quickstart: compose App 1 (paper Table 1) and execute it via the app
+compiler.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Composes the domain-specific dataflow — FC (isActive) -> VA (detector) ->
-CR (re-id) -> TL (WBFS spotlight) — and runs the 1000-camera simulation with
-Anveshak's dynamic batching.  The tuning-triangle claim to check: with the
-batching knob on 'dynamic', zero events miss the gamma deadline.
+CR (re-id) -> TL (WBFS spotlight) — and runs the composed ``TrackingApp``
+itself on the 1000-camera discrete-event platform:
+``repro.core.compile.compile_app`` lowers the app + world + deployment onto
+the Task DAG and ``TrackingScenario`` drives it.  The tuning-triangle claim
+to check: with dynamic batching, zero events miss the gamma deadline.
 """
 
 import sys
 
 sys.path.insert(0, "src")
 
+from repro.core.compile import DeploymentSpec, linear_xi
 from repro.core.dataflow import ModuleSpec, TrackingApp, fc_is_active, make_cr, make_va
-from repro.core.roadnet import make_road_network
 from repro.core.tracking import TLWBFS
-from repro.sim import ScenarioConfig, TrackingScenario
+from repro.sim import ScenarioConfig, TrackingScenario, WorldKey, get_world
 
 
 def hog_detector(frames, query):
@@ -24,35 +27,42 @@ def hog_detector(frames, query):
 
 
 def openreid_matcher(crops, query):
-    """Stand-in for the OpenReid DNN verdicts."""
-    return [bool(getattr(c, "has_entity", False)) for c in crops]
+    """Stand-in for the OpenReid DNN verdicts (crops arrive as
+    ``(frame, boxes)`` pairs from the VA stage)."""
+    return [bool(getattr(c[0], "has_entity", False)) for c in crops]
 
 
 def main() -> None:
-    # --- compose App 1 (pure DSL view; Table 1 row 1) ------------------- #
-    road = make_road_network(seed=0)
-    cameras = {i: i for i in range(1000)}
+    # --- the workload: 1000 cameras, 300 s, the paper's entity walk ------ #
+    cfg = ScenarioConfig(num_cameras=1000, duration_s=300.0)
+    world = get_world(WorldKey.from_config(cfg))
+
+    # --- compose App 1 (pure DSL; Table 1 row 1) ------------------------- #
     app = TrackingApp(
         name="app1-missing-person",
         fc=fc_is_active,
         va=make_va(hog_detector),
         cr=make_cr(openreid_matcher),
-        tl=TLWBFS(road, cameras, entity_speed=4.0),
+        tl=TLWBFS(world.road, world.cameras.camera_vertices, entity_speed=4.0),
         specs={
-            "VA": ModuleSpec(instances=10, resource_tier="fog", batching="dynamic", m_max=25),
-            "CR": ModuleSpec(instances=10, resource_tier="cloud", batching="dynamic", m_max=25),
+            "FC": ModuleSpec(xi=linear_xi(0.0002, 0.0008), resource_tier="edge"),
+            "VA": ModuleSpec(instances=10, resource_tier="fog",
+                             batching="dynamic", m_max=25,
+                             xi=linear_xi(0.020, 0.010)),
+            "CR": ModuleSpec(instances=10, resource_tier="cloud",
+                             batching="dynamic", m_max=25,
+                             xi=linear_xi(0.067, 0.053)),
         },
         gamma=15.0,
     )
     print(f"Composed {app.name}: gamma={app.gamma}s, "
           f"VA x{app.spec('VA').instances}, CR x{app.spec('CR').instances}")
 
-    # --- run it on the discrete-event platform --------------------------- #
-    cfg = ScenarioConfig(
-        num_cameras=1000, duration_s=300.0, tl="wbfs", tl_peak_speed=4.0,
-        batching="dynamic", m_max=25, gamma=app.gamma,
-    )
-    res = TrackingScenario(cfg).run()
+    # --- compile + run it on the discrete-event platform ----------------- #
+    # TrackingScenario lowers the app through compile_app and drives the
+    # compiled pipeline; the DeploymentSpec holds the platform-side knobs.
+    scenario = TrackingScenario(cfg, app=app, deployment=DeploymentSpec(num_nodes=10))
+    res = scenario.run()
     s = res.summary()
     print("\nScenario summary:")
     for k, v in s.items():

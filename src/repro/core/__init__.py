@@ -20,6 +20,14 @@ from .bounds import (
 )
 from .budget import BudgetState, TaskBudget
 from .clock import Clock
+from .compile import (
+    CompiledApp,
+    DeploymentSpec,
+    ResolvedModule,
+    compile_app,
+    linear_xi,
+    resolve_module,
+)
 from .dataflow import ModuleSpec, TrackingApp, fc_frame_rate, fc_is_active, make_cr, make_va
 from .dropping import drop_before_exec, drop_before_queuing, drop_before_transmit
 from .events import (
@@ -36,14 +44,16 @@ from .roadnet import RoadNetwork, make_road_network
 from .tracking import Detection, TLBFS, TLBase, TLProbabilistic, TLWBFS, TrackingLogic
 
 __all__ = [
-    "AcceptSignal", "BudgetState", "Clock", "Detection", "DynamicBatcher",
-    "Event", "EventHeader", "EventRecord", "ModuleSpec", "NOBBatcher",
-    "PendingEvent", "PipelineStats", "ProbeSignal", "RejectSignal",
-    "RoadNetwork", "Scheduler", "SinkTask", "StaticBatcher", "TLBFS",
-    "TLBase", "TLProbabilistic", "TLWBFS", "Task", "TaskBudget",
-    "TrackingApp", "TrackingLogic", "batching_latency_overhead",
-    "build_nob_table", "drop_before_exec", "drop_before_queuing",
+    "AcceptSignal", "BudgetState", "Clock", "CompiledApp", "DeploymentSpec",
+    "Detection", "DynamicBatcher", "Event", "EventHeader", "EventRecord",
+    "ModuleSpec", "NOBBatcher", "PendingEvent", "PipelineStats",
+    "ProbeSignal", "RejectSignal", "ResolvedModule", "RoadNetwork",
+    "Scheduler", "SinkTask", "StaticBatcher", "TLBFS", "TLBase",
+    "TLProbabilistic", "TLWBFS", "Task", "TaskBudget", "TrackingApp",
+    "TrackingLogic", "batching_latency_overhead", "build_nob_table",
+    "compile_app", "drop_before_exec", "drop_before_queuing",
     "drop_before_transmit", "drop_rate", "fc_frame_rate", "fc_is_active",
-    "make_cr", "make_road_network", "make_va", "max_sustainable_rate",
-    "new_event_id", "stable_batch_size",
+    "linear_xi", "make_cr", "make_road_network", "make_va",
+    "max_sustainable_rate", "new_event_id", "resolve_module",
+    "stable_batch_size",
 ]

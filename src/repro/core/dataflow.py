@@ -21,10 +21,23 @@ tunes them:
   query and pushes the new query to VA/CR.
 * **UV** (User Visualization): sink; receives annotated detections.
 
-This module defines the *interfaces* and the :class:`TrackingApp` composition
-used by both the discrete-event simulator (``repro.sim``) and the JAX serving
-engine (``repro.serving.scheduler``), which plugs jit-compiled model steps in
-as VA/CR logic.
+This module defines the *interfaces* and the :class:`TrackingApp`
+composition.  A composed app is the platform's **executable unit**: the app
+compiler (:func:`repro.core.compile.compile_app`) lowers a ``TrackingApp`` +
+a world + a :class:`repro.core.compile.DeploymentSpec` onto the
+:mod:`repro.core.pipeline` Task DAG (FC fan-in, VA/CR replicas, UV sink, the
+TL control loop and the QF query-fusion feedback edge), and
+:func:`repro.serving.scheduler.lower_app_stages` lowers the same spec onto
+jit-compiled :class:`~repro.serving.scheduler.ServedStage` instances.  The
+discrete-event simulator's :class:`~repro.sim.scenario.TrackingScenario` is a
+thin driver over the compiled app; ``ScenarioConfig.to_app()`` exposes the
+simulator's historical knob presets as app factories.
+
+Per-module deployment is declared with :class:`ModuleSpec`.  Every field is
+optional: ``None`` means "inherit the platform default" from the
+``DeploymentSpec`` the app is compiled against, so an app only pins what it
+cares about (paper §2.3: the platform does the wiring, tuning and
+placement).
 """
 
 from __future__ import annotations
@@ -36,6 +49,8 @@ from .events import Event
 from .tracking import Detection, TrackingLogic
 
 __all__ = [
+    "BATCHING_STRATEGIES",
+    "RESOURCE_TIERS",
     "FCLogic",
     "VALogic",
     "CRLogic",
@@ -56,6 +71,12 @@ class VALogic(Protocol):
 
     Receives a batch of frames grouped by camera; emits key-value pairs
     (e.g. bounding boxes with scores).  May read ``state['entity_query']``.
+
+    Lowering contract (``repro.core.compile``): output attribution is
+    *positional* — pair ``i`` rides frame ``i``'s event.  Emit one pair per
+    frame; to filter a frame out, put ``None`` in its position (do NOT
+    return a compacted shorter list — the survivors would be matched to the
+    wrong frames' events).
     """
 
     def __call__(
@@ -66,7 +87,9 @@ class VALogic(Protocol):
 class CRLogic(Protocol):
     """``cr(camera_id, values, state) -> [(camera_id, detection)]``.
 
-    Cross-camera contention resolution / re-id on VA outputs.
+    Cross-camera contention resolution / re-id on VA outputs.  Same
+    positional lowering contract as :class:`VALogic`: one pair (or ``None``
+    to filter) per input value, in input order.
     """
 
     def __call__(
@@ -82,17 +105,49 @@ class QFLogic(Protocol):
     ) -> Optional[Any]: ...
 
 
+#: Valid values for :attr:`ModuleSpec.batching` / :attr:`ModuleSpec.resource_tier`.
+BATCHING_STRATEGIES = ("dynamic", "static", "nob")
+RESOURCE_TIERS = ("edge", "fog", "cloud")
+
+
 @dataclass
 class ModuleSpec:
-    """Deployment spec for one module type (paper §3: Master/Scheduler)."""
+    """Per-module deployment overrides (paper §3: Master/Scheduler).
 
-    instances: int = 1
-    resource_tier: str = "fog"  # edge | fog | cloud
-    m_max: int = 25
-    batching: str = "dynamic"  # dynamic | static | nob
-    static_batch: int = 1
+    Every field defaults to ``None`` — "inherit the platform default" — so a
+    :class:`TrackingApp` only pins the knobs it cares about and the compiler
+    (:func:`repro.core.compile.resolve_module`) fills in the rest from the
+    :class:`~repro.core.compile.DeploymentSpec`.  ``batching`` and
+    ``resource_tier`` are validated at construction; ``xi`` (the expected
+    execution duration, seconds, for a batch of ``b`` events) is a plain
+    optional callable — the old shared default-``lambda`` sentinel made
+    "no cost model" indistinguishable from "explicitly free" and was a
+    mutable-default footgun shared across every spec instance.
+    """
+
+    instances: Optional[int] = None
+    resource_tier: Optional[str] = None  # edge | fog | cloud
+    m_max: Optional[int] = None
+    batching: Optional[str] = None  # dynamic | static | nob
+    static_batch: Optional[int] = None
     # xi(b): expected execution duration (seconds) for a batch of b events.
-    xi: Callable[[int], float] = lambda b: 0.0
+    xi: Optional[Callable[[int], float]] = None
+
+    def __post_init__(self) -> None:
+        if self.batching is not None and self.batching not in BATCHING_STRATEGIES:
+            raise ValueError(
+                f"unknown batching {self.batching!r}; expected one of {BATCHING_STRATEGIES}"
+            )
+        if self.resource_tier is not None and self.resource_tier not in RESOURCE_TIERS:
+            raise ValueError(
+                f"unknown resource_tier {self.resource_tier!r}; expected one of {RESOURCE_TIERS}"
+            )
+        for name in ("instances", "m_max", "static_batch"):
+            value = getattr(self, name)
+            if value is not None and int(value) < 1:
+                raise ValueError(f"{name} must be >= 1, got {value!r}")
+        if self.xi is not None and not callable(self.xi):
+            raise ValueError("xi must be callable (b -> seconds) or None")
 
 
 @dataclass
@@ -101,9 +156,12 @@ class TrackingApp:
 
     ``fc``/``va``/``cr``/``qf`` are the user logics; ``tl`` is a
     :class:`TrackingLogic` strategy instance.  ``specs`` gives per-module
-    deployment/tuning parameters.  The app is executed either by the
-    discrete-event simulator (`repro.sim.scenario.run_app`) or, for the VA/CR
-    compute, by the JAX serving engine.
+    deployment/tuning overrides (merged over the ``DeploymentSpec`` by the
+    compiler).  The app is executed by lowering it:
+    ``repro.core.compile.compile_app`` builds the discrete-event Task DAG
+    (driven by ``repro.sim.scenario.TrackingScenario``), and
+    ``repro.serving.scheduler.lower_app_stages`` builds the jit'd serving
+    stages for the VA/CR compute.
     """
 
     name: str
@@ -127,6 +185,14 @@ class TrackingApp:
 def fc_is_active(frame: Any, state: Dict[str, Any]) -> bool:
     """App 1/2/4 FC: forward iff the camera is active."""
     return bool(state.get("isActive", True))
+
+
+# Lowering override (see ``repro.core.compile``): the activation gate needs
+# one state read per *batch*, not one call per event — and the compiler
+# additionally recognizes this exact logic as fusable into the frame source.
+fc_is_active.task_logic = (
+    lambda events, state: events if state.get("isActive", True) else []
+)
 
 
 def fc_frame_rate(frame: Any, state: Dict[str, Any]) -> bool:

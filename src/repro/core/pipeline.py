@@ -3,7 +3,9 @@
 A pipeline is a DAG of :class:`Task` instances.  Each task owns a FIFO input
 queue, a batcher (dynamic/static/NOB), a :class:`TaskBudget`, a cost model
 ``xi(b)``, a user logic callable and a partitioner that routes each output
-event to a downstream task instance.  Execution is single-server per task
+event to a downstream task instance.  Pipelines are normally not wired by
+hand: the app compiler (:mod:`repro.core.compile`) lowers a
+:class:`~repro.core.dataflow.TrackingApp` onto this runtime.  Execution is single-server per task
 (one batch at a time), matching one Executor process per module instance in
 Anveshak.
 
@@ -124,6 +126,9 @@ class Task:
         self.drops_enabled = drops_enabled
         self.probe_every = int(probe_every)
         self.node = node or name
+        # Which dataflow module type this task lowers (FC/VA/CR/UV, set by
+        # the app compiler); empty for hand-wired tasks.
+        self.module: str = ""
         self.state: Dict[str, Any] = {}
         self.downstream: Dict[str, "Task"] = {}
         self.upstream: List["Task"] = []

@@ -3,10 +3,18 @@
 from .engine import Generator, bucket_for, make_prefill_step, make_serve_step
 from .reid import embed_frames, init_reid_tower, match
 from .sampling import sample_tokens
-from .scheduler import ServedStage, StageRequest, StageResult, calibrate_xi
+from .scheduler import (
+    ServedStage,
+    StageRequest,
+    StageResult,
+    calibrate_xi,
+    lower_app_stages,
+    lower_stage,
+)
 
 __all__ = [
     "Generator", "ServedStage", "StageRequest", "StageResult", "bucket_for",
-    "calibrate_xi", "embed_frames", "init_reid_tower", "make_prefill_step",
-    "make_serve_step", "match", "sample_tokens",
+    "calibrate_xi", "embed_frames", "init_reid_tower", "lower_app_stages",
+    "lower_stage", "make_prefill_step", "make_serve_step", "match",
+    "sample_tokens",
 ]

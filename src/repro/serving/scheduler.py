@@ -14,6 +14,14 @@ embedding, CR re-id, LM decode...) with
 
 Batches are padded to the bucket sizes so XLA recompilation never happens on
 the serving path (TPU adaptation of the paper's arbitrary batch sizes).
+
+Stages are the **serving lowering target of the app compiler**: a composed
+:class:`~repro.core.dataflow.TrackingApp` + a
+:class:`~repro.core.compile.DeploymentSpec` lower onto ServedStages via
+:func:`lower_app_stages`, resolving the same per-module specs
+(``m_max``, cost model, drops, ``gamma``) that
+``repro.core.compile.compile_app`` resolves for the discrete-event plane —
+one application spec, two execution planes.
 """
 
 from __future__ import annotations
@@ -32,7 +40,14 @@ from repro.core.budget import TaskBudget
 from repro.core.dropping import drop_before_exec, drop_before_queuing, drop_before_transmit
 from repro.core.events import Event, EventHeader, EventRecord, new_event_id
 
-__all__ = ["StageRequest", "StageResult", "ServedStage", "calibrate_xi"]
+__all__ = [
+    "StageRequest",
+    "StageResult",
+    "ServedStage",
+    "calibrate_xi",
+    "lower_stage",
+    "lower_app_stages",
+]
 
 
 @dataclass
@@ -107,6 +122,10 @@ class ServedStage:
         self.budget = TaskBudget(name, xi, m_max=m_max)
         self.batcher = DynamicBatcher(xi, m_max=m_max)
         self.stats = {"arrived": 0, "dropped": 0, "executed": 0, "batches": 0}
+        # Optional upstream stage: every drop here rejects into its budget
+        # (the serving analogue of the pipeline's path-based reject signals,
+        # §4.5; wired by lower_app_stages as VA <- CR).
+        self.upstream: Optional["ServedStage"] = None
 
     # -- Anveshak signal hooks (downstream stages call these) ----------- #
     def on_reject(self, event_id: int, epsilon: float, q_bar: float) -> None:
@@ -119,6 +138,10 @@ class ServedStage:
 
         self.budget.on_accept(AcceptSignal(event_id, epsilon, xi_bar))
 
+    def _reject_upstream(self, event_id: int, epsilon: float, q_bar: float) -> None:
+        if self.upstream is not None:
+            self.upstream.on_reject(event_id, max(epsilon, 0.0), q_bar)
+
     # -- Request path ---------------------------------------------------- #
     def submit(self, req: StageRequest) -> Optional[List[StageResult]]:
         """Drop point 1 + dynamic batching; returns results if a batch ran."""
@@ -129,7 +152,9 @@ class ServedStage:
             req.source_time, now, self.xi(1), beta, avoid_drop=req.avoid_drop
         ):
             self.stats["dropped"] += 1
-            return [StageResult(req.event_id, None, now - req.source_time, 0, dropped=True)]
+            u = now - req.source_time
+            self._reject_upstream(req.event_id, u + self.xi(1) - beta, 0.0)
+            return [StageResult(req.event_id, None, u, 0, dropped=True)]
         ev = Event(
             header=EventHeader(
                 event_id=req.event_id,
@@ -173,9 +198,9 @@ class ServedStage:
         results: List[StageResult] = []
         for ev in dropped:
             self.stats["dropped"] += 1
-            results.append(
-                StageResult(ev.event_id, None, now - ev.header.source_arrival, 0, dropped=True)
-            )
+            u_total = now - ev.header.source_arrival
+            self._reject_upstream(ev.event_id, u_total + self.xi(b) - beta, ev.header.q_bar)
+            results.append(StageResult(ev.event_id, None, u_total, 0, dropped=True))
         if not retained:
             return results
         pe_by_id = {pe.event.event_id: pe for pe in batch}
@@ -205,7 +230,101 @@ class ServedStage:
                 0.0, u, pi, beta, avoid_drop=ev.header.avoid_drop
             ):
                 self.stats["dropped"] += 1
+                self._reject_upstream(ev.event_id, u + pi - beta, ev.header.q_bar)
                 results.append(StageResult(ev.event_id, None, u + pi, m, dropped=True))
             else:
                 results.append(StageResult(ev.event_id, row, u + pi, m))
         return results
+
+
+# --------------------------------------------------------------------- #
+# App-compiler lowering: TrackingApp + DeploymentSpec -> ServedStages    #
+# --------------------------------------------------------------------- #
+def lower_stage(
+    module: str,
+    app,
+    deployment,
+    step_fn: Callable[[np.ndarray], Any],
+    *,
+    payload_shape: Optional[Sequence[int]] = None,
+    buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    clock: Callable[[], float] = time.monotonic,
+) -> ServedStage:
+    """Lower one module (``"VA"`` or ``"CR"``) of ``app`` onto a
+    :class:`ServedStage` wrapping ``step_fn``.
+
+    The stage's knobs come from the same spec resolution the discrete-event
+    compiler uses (``repro.core.compile.resolve_module``): the app's
+    per-module :class:`~repro.core.dataflow.ModuleSpec` overrides merged
+    over the :class:`~repro.core.compile.DeploymentSpec` defaults.  The
+    cost model priority is spec ``xi`` -> measured :func:`calibrate_xi`
+    (requires ``payload_shape``) — calibration replaces the paper's offline
+    benchmarking table.  Serving batches through the dynamic deadline
+    batcher only; a spec pinning ``static``/``nob`` batching is rejected
+    rather than silently ignored.
+    """
+    from repro.core.compile import _zero_xi, resolve_module
+
+    spec = resolve_module(app, deployment, module)
+    if spec.batching != "dynamic":
+        raise ValueError(
+            f"serving lowers only dynamic batching; {module} spec pins "
+            f"{spec.batching!r}"
+        )
+    xi = spec.xi
+    if xi is _zero_xi:
+        # Neither the app nor the deployment pinned a cost model (an
+        # *explicit* zero xi is honored as "free"): measure the compiled
+        # step itself.
+        if payload_shape is None:
+            raise ValueError(
+                f"{module} spec carries no xi cost model; pass payload_shape "
+                "so lower_stage can calibrate one from the compiled step"
+            )
+        xi = calibrate_xi(step_fn, payload_shape, buckets=buckets)
+    return ServedStage(
+        f"{app.name}/{module}",
+        step_fn,
+        xi,
+        gamma=app.gamma,
+        m_max=spec.m_max,
+        buckets=buckets,
+        drops_enabled=deployment.drops_enabled,
+        clock=clock,
+    )
+
+
+def lower_app_stages(
+    app,
+    deployment,
+    step_fns: Dict[str, Callable[[np.ndarray], Any]],
+    *,
+    payload_shapes: Optional[Dict[str, Sequence[int]]] = None,
+    buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    clock: Callable[[], float] = time.monotonic,
+) -> Dict[str, "ServedStage"]:
+    """Lower an app's compute modules onto serving stages.
+
+    ``step_fns`` maps module names (``"VA"``/``"CR"``) to jit-compiled
+    batched steps; the returned dict maps the same names to configured
+    :class:`ServedStage` instances.  Downstream accept/reject signals are
+    chained VA <- CR automatically (a CR-side drop rejects into the VA
+    budget, mirroring the pipeline's path-based signal delivery).
+    """
+    payload_shapes = payload_shapes or {}
+    stages = {
+        module: lower_stage(
+            module,
+            app,
+            deployment,
+            fn,
+            payload_shape=payload_shapes.get(module),
+            buckets=buckets,
+            clock=clock,
+        )
+        for module, fn in step_fns.items()
+    }
+    va, cr = stages.get("VA"), stages.get("CR")
+    if va is not None and cr is not None:
+        cr.upstream = va  # CR-side drops reject into the VA budget
+    return stages

@@ -1,15 +1,22 @@
 """Discrete-event simulation of the many-camera network (paper §5 setup)."""
 
 from .cameras import CameraNetwork, EntityWalk, Frame
-from .scenario import ScenarioConfig, ScenarioResult, TrackingScenario, linear_xi
+from .scenario import (
+    ScenarioConfig,
+    ScenarioResult,
+    TrackingScenario,
+    linear_xi,
+    make_scenario_cr,
+    va_passthrough,
+)
 from .simulator import DiscreteEventSimulator, NetworkModel
-from .sweep import CaseRecord, SweepResult, SweepRunner
+from .sweep import AppCase, CaseRecord, SweepResult, SweepRunner
 from .world import WorldBundle, WorldKey, clear_world_cache, get_world, world_cache_stats
 
 __all__ = [
-    "CameraNetwork", "CaseRecord", "DiscreteEventSimulator", "EntityWalk",
-    "Frame", "NetworkModel", "ScenarioConfig", "ScenarioResult",
-    "SweepResult", "SweepRunner", "TrackingScenario", "WorldBundle",
-    "WorldKey", "clear_world_cache", "get_world", "linear_xi",
-    "world_cache_stats",
+    "AppCase", "CameraNetwork", "CaseRecord", "DiscreteEventSimulator",
+    "EntityWalk", "Frame", "NetworkModel", "ScenarioConfig",
+    "ScenarioResult", "SweepResult", "SweepRunner", "TrackingScenario",
+    "WorldBundle", "WorldKey", "clear_world_cache", "get_world", "linear_xi",
+    "make_scenario_cr", "va_passthrough", "world_cache_stats",
 ]

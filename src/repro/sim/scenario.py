@@ -1,32 +1,53 @@
-"""End-to-end tracking scenario (paper §5 experiments).
+"""End-to-end tracking scenario: a thin driver over a compiled app.
 
-Wires the full Anveshak dataflow over the discrete-event engine:
+The executable unit is a :class:`~repro.core.dataflow.TrackingApp`: the app
+compiler (:func:`repro.core.compile.compile_app`) lowers it + a shared
+:class:`~repro.sim.world.WorldBundle` + a
+:class:`~repro.core.compile.DeploymentSpec` onto the Task DAG
 
     cameras --frames--> FC (one per camera, edge hosts)
       --> VA instances (hash by camera) --> CR instances --> UV sink
     UV --detections--> TL --(de)activate--> FC states      (feedback)
+    UV --positives--> QF --fused query--> VA/CR states     (feedback)
 
-Execution times are charged through each task's ``xi(b)`` cost model
-(calibrated to the paper: CR ~120 ms/event streaming for App 1, ~63% more
-for App 2), network transits through :class:`NetworkModel`, and all of the
-paper's knobs are exposed: batching strategy, drops on/off, TL strategy,
-entity peak speed ``es``, bandwidth schedule, clock skews.
+and this module drives it: sources frames from the camera network, ticks
+the TL control loop, applies activation/query control events after the
+control-network latency, and assembles the :class:`ScenarioResult`.
+
+:class:`ScenarioConfig` remains the historical knob surface (paper §5):
+``to_app()`` turns it into the equivalent preset ``TrackingApp`` (FC
+``isActive`` gate, pass-through VA, seeded-verdict CR, the ``tl:`` knob's
+strategy) and ``deployment()`` into the matching ``DeploymentSpec`` —
+``TrackingScenario(cfg)`` compiles and runs exactly the pipeline it always
+did, bit-identically.  Custom apps run the same road:
+``TrackingScenario(cfg, app=my_app, deployment=my_deployment)``.
+
+Execution times are charged through each module's resolved ``xi(b)`` cost
+model (calibrated to the paper: CR ~120 ms/event streaming for App 1, ~63%
+more for App 2), network transits through :class:`NetworkModel`, and all of
+the paper's knobs are exposed: batching strategy, drops on/off, TL
+strategy, entity peak speed ``es``, bandwidth schedule, clock skews.
 """
 
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.core.batching import DynamicBatcher, NOBBatcher, StaticBatcher
-from repro.core.budget import TaskBudget
-from repro.core.clock import Clock
-from repro.core.events import Event, EventHeader, new_event_id, source_header
-from repro.core.pipeline import SinkTask, Task
+from repro.core.compile import (
+    CompiledApp,
+    DeploymentSpec,
+    as_detection,
+    compile_app,
+    linear_xi,
+    resolve_module,
+)
+from repro.core.dataflow import ModuleSpec, TrackingApp, fc_is_active
+from repro.core.events import Event, new_event_id, source_header
+from repro.core.pipeline import Task
 from repro.core.tracking import (
     Detection,
     TLBFS,
@@ -39,31 +60,88 @@ from .cameras import CameraNetwork, Frame
 from .simulator import DiscreteEventSimulator, NetworkModel
 from .world import WorldBundle, WorldKey, get_world
 
-__all__ = ["ScenarioConfig", "ScenarioResult", "TrackingScenario", "linear_xi"]
+__all__ = [
+    "ScenarioConfig",
+    "ScenarioResult",
+    "TrackingScenario",
+    "linear_xi",
+    "make_scenario_cr",
+    "va_passthrough",
+]
 
 
-def _constant_partitioner(name: str) -> Callable:
-    def partition(ev) -> str:
-        return name
-
-    return partition
-
-
-def _table_partitioner(table: Dict) -> Callable:
-    def partition(ev) -> str:
-        return table[ev.key]
-
-    return partition
+# --------------------------------------------------------------------- #
+# Preset module logics (the historical hard-wired scenario pipeline,     #
+# now expressed in the DSL so ScenarioConfig is just an app factory)     #
+# --------------------------------------------------------------------- #
+def va_passthrough(camera_id, frames, state):
+    """Preset VA: object detection with 1:1 selectivity — every frame
+    yields its candidate boxes; the payload travels unchanged (the synthetic
+    frames already carry ground truth + optional embeddings)."""
+    return [(camera_id, frame) for frame in frames]
 
 
-def linear_xi(c0: float, c1: float) -> Callable[[int], float]:
-    """Affine batch cost model ``xi(b) = c0 + c1 * b`` (monotone, amortizes
-    the fixed model-invocation overhead — paper §2.2.2)."""
+# Lowering override (see repro.core.compile._event_level): pass-through VA
+# is the identity at event level — the compiler's hot path must not pay a
+# keyed-adapter round trip per event for a no-op transform.
+va_passthrough.task_logic = lambda events, state: events
 
-    def xi(b: int) -> float:
-        return c0 + c1 * max(int(b), 0)
 
-    return xi
+def make_scenario_cr(seed: int, p_true_positive: float):
+    """Preset CR: cross-camera re-id verdict per frame, 1:1, with the
+    per-instance RNG stream the scenario always used (seeded ``seed + 101``
+    in each CR task's state; consumed only on entity frames so the random
+    stream is identical across refactors).
+
+    Carries a ``task_logic`` lowering override: the event-level transform
+    is the pipeline's hottest user code (once per event), and the override
+    is the historical ``_cr_logic`` loop verbatim — event objects reused,
+    upstream ``batch_slowest`` marks cleared on transform.
+    """
+
+    def cr(camera_id, frames, state):
+        rng = state.get("rng")
+        if rng is None:
+            rng = state["rng"] = np.random.default_rng(seed + 101)
+        out = []
+        for frame in frames:
+            positive = bool(frame.has_entity) and (
+                float(rng.uniform()) <= p_true_positive
+            )
+            out.append(
+                (
+                    camera_id,
+                    Detection(
+                        camera_id=frame.camera_id,
+                        positive=positive,
+                        timestamp=frame.timestamp,
+                    ),
+                )
+            )
+        return out
+
+    def cr_task_logic(events, state):
+        rng = state.get("rng")
+        if rng is None:
+            rng = state["rng"] = np.random.default_rng(seed + 101)
+        for ev in events:
+            frame: Frame = ev.value
+            # NB: the rng is consumed only on entity frames (short-circuit),
+            # keeping the random stream identical across refactors.
+            positive = bool(frame.has_entity) and (
+                float(rng.uniform()) <= p_true_positive
+            )
+            # 1:1 transform: reuse the event object, swap the frame payload
+            # for the CR verdict.  Clear the slowest-of-batch mark from the
+            # upstream stage — the runtime re-marks this stage's slowest.
+            ev.batch_slowest = False
+            ev.value = Detection(
+                camera_id=frame.camera_id, positive=positive, timestamp=frame.timestamp
+            )
+        return events
+
+    cr.task_logic = cr_task_logic
+    return cr
 
 
 @dataclass
@@ -121,6 +199,78 @@ class ScenarioConfig:
     embed_dim: int = 0
     reid_threshold: float = 0.5
 
+    # ------------------------------------------------------------------ #
+    # App-compiler factories: the config is a preset-app description      #
+    # ------------------------------------------------------------------ #
+    def make_tl(self, road, camera_vertices: Dict[int, int]) -> TrackingLogic:
+        """Instantiate the ``tl:`` knob's strategy over a road network."""
+        kw = dict(
+            entity_speed=self.tl_peak_speed,
+            min_radius_m=self.tl_min_radius_m,
+        )
+        if self.tl == "base":
+            return TLBase(road, camera_vertices, **kw)
+        if self.tl == "bfs":
+            return TLBFS(road, camera_vertices, fixed_edge_length_m=84.5, **kw)
+        if self.tl == "wbfs":
+            return TLWBFS(road, camera_vertices, **kw)
+        if self.tl == "prob":
+            return TLProbabilistic(road, camera_vertices, **kw)
+        raise ValueError(f"unknown tl strategy {self.tl!r}")
+
+    def to_app(
+        self,
+        world: Optional[WorldBundle] = None,
+        cameras: Optional[CameraNetwork] = None,
+    ) -> TrackingApp:
+        """The preset :class:`TrackingApp` equivalent to this config's
+        historical hard-wired pipeline: ``isActive``-gated FC, pass-through
+        VA, seeded-verdict CR, the ``tl:`` knob's strategy, no QF.  Module
+        instance counts, batching and cost models ride along as per-module
+        :class:`ModuleSpec` overrides, so compiling this app against
+        ``self.deployment()`` reproduces the scenario bit-identically."""
+        if world is None:
+            world = get_world(WorldKey.from_config(self))
+        cams = cameras if cameras is not None else world.cameras
+        return TrackingApp(
+            name=f"scenario-{self.tl}",
+            fc=fc_is_active,
+            va=va_passthrough,
+            cr=make_scenario_cr(self.seed, self.p_true_positive),
+            tl=self.make_tl(world.road, cams.camera_vertices),
+            qf=None,
+            specs={
+                "FC": ModuleSpec(xi=linear_xi(*self.fc_cost), resource_tier="edge"),
+                "VA": ModuleSpec(
+                    instances=self.num_va,
+                    resource_tier="fog",
+                    xi=linear_xi(*self.va_cost),
+                    batching=self.batching,
+                    static_batch=self.static_batch,
+                    m_max=self.m_max,
+                ),
+                "CR": ModuleSpec(
+                    instances=self.num_cr,
+                    resource_tier="cloud",
+                    xi=linear_xi(*self.cr_cost),
+                    batching=self.batching,
+                    static_batch=self.static_batch,
+                    m_max=self.m_max,
+                ),
+            },
+            gamma=self.gamma,
+        )
+
+    def deployment(self) -> DeploymentSpec:
+        """The platform-side knobs of this config as a ``DeploymentSpec``."""
+        return DeploymentSpec(
+            num_nodes=self.num_nodes,
+            drops_enabled=self.drops_enabled,
+            avoid_drop_positives=self.avoid_drop_positives,
+            epsilon_max=self.epsilon_max,
+            node_clock_skews=self.node_clock_skews,
+        )
+
 
 @dataclass
 class ScenarioResult:
@@ -138,6 +288,7 @@ class ScenarioResult:
     positives_dropped: int
     detections_on_time: int
     reid_matched: int = 0
+    query_pushes: int = 0
 
     @property
     def peak_active(self) -> int:
@@ -181,12 +332,25 @@ class ScenarioResult:
 
 
 class TrackingScenario:
-    """Builds and runs one configured tracking experiment."""
+    """Builds and runs one configured tracking experiment.
 
-    def __init__(self, config: ScenarioConfig) -> None:
+    ``config`` describes the workload (cameras, duration, entity walk, QoS)
+    and — absent explicit ``app``/``deployment`` — the preset pipeline via
+    ``config.to_app()`` / ``config.deployment()``.  ``app`` may be a
+    :class:`TrackingApp` or a factory ``(world, cameras) -> TrackingApp``
+    (sweep grids use factories so fork workers build JAX-touching apps in
+    their own process).
+    """
+
+    def __init__(
+        self,
+        config: ScenarioConfig,
+        app: Optional[Any] = None,
+        deployment: Optional[DeploymentSpec] = None,
+    ) -> None:
         self.cfg = config
         t_init = time.perf_counter()
-        # The scenario no longer owns world geometry: the road network, walk
+        # The scenario does not own world geometry: the road network, walk
         # and camera placement live in a shared immutable WorldBundle, built
         # once per key and reused by every config of a sweep.
         key = WorldKey.from_config(config)
@@ -220,24 +384,49 @@ class TrackingScenario:
             )
         else:
             self.cameras = world.cameras
+
+        # ---- the executable unit: app + deployment ------------------- #
+        if callable(app) and not isinstance(app, TrackingApp):
+            app = app(world, self.cameras)
+        self.app: TrackingApp = app or config.to_app(world, self.cameras)
+        self.deployment = deployment or config.deployment()
+        self.tl: TrackingLogic = self.app.tl
+
         network = NetworkModel()
         if config.bandwidth_schedule is not None:
             network.bandwidth_schedule = config.bandwidth_schedule
         # The static (src, dst) -> (latency, over-network) classification
         # depends only on the deployment shape, so scenarios sharing a world
         # share the memoized table too.
+        num_va = resolve_module(self.app, self.deployment, "VA").instances
+        num_cr = resolve_module(self.app, self.deployment, "CR").instances
         self.sim = DiscreteEventSimulator(
             network,
             transit_cache=world.transit_table(
-                config.num_va, config.num_cr, config.num_nodes
+                num_va, num_cr, self.deployment.num_nodes
             ),
         )
         self._reid_enabled = config.embed_dim > 0
         self._reid_query = (
             self.cameras.entity_embedding[None, :] if self._reid_enabled else None
         )
-        self._build_tl()
-        self._build_pipeline()
+
+        # ---- lower the app onto the pipeline ------------------------- #
+        self.compiled: CompiledApp = compile_app(
+            self.app,
+            world,
+            self.deployment,
+            self.sim,
+            cameras=self.cameras,
+            on_detection=self._on_sink_event,
+            va_batch_hook=self._va_reid if self._reid_enabled else None,
+            # _on_sink_event only reads ev.value/ev.header inline and never
+            # retains the event, so recycling headers at the sink is safe.
+            sink_recycle_headers=True,
+        )
+        self.sink = self.compiled.sink
+        self._seed_tl()
+
         self._stats_active: List[Tuple[float, int]] = []
         self._positives_generated = 0
         self._positives_completed = 0
@@ -246,227 +435,39 @@ class TrackingScenario:
         self._pending_detections: List[Detection] = []
         self._source_events = 0
         # Active-set mirrors so the per-tick loops are O(active cameras),
-        # not O(all cameras): `_fc_active` tracks the FC states that are
-        # *currently* active (control latency applied); `_ctrl_target` is the
-        # last activation set TL asked for (so ticks only schedule control
-        # events for the delta).
-        self._fc_active: Set[int] = set(self.tl.active)
+        # not O(all cameras): the compiled app's `fc_active` tracks the FC
+        # states that are *currently* active (control latency applied);
+        # `_ctrl_target` is the last activation set TL asked for (so ticks
+        # only schedule control events for the delta).
+        self.compiled.fc_active |= set(self.tl.active)
         self._ctrl_target: Set[int] = set(self.tl.active)
-        #: Construction wall-time (world fetch + pipeline build), split from
+        #: Construction wall-time (world fetch + app lowering), split from
         #: run() wall-time so per-event rates aren't polluted by one-off
         #: builds (benchmarks record both).
         self.build_seconds = time.perf_counter() - t_init
 
     # ------------------------------------------------------------------ #
-    def _build_tl(self) -> None:
-        cfg = self.cfg
-        kw = dict(
-            entity_speed=cfg.tl_peak_speed,
-            min_radius_m=cfg.tl_min_radius_m,
-        )
+    def _seed_tl(self) -> None:
+        """Point the TL at the query's last-seen location (Fig. 1: start
+        with only the camera covering it active).  Apps that pre-seeded
+        their TL keep their own state."""
+        tl = self.tl
+        if tl.last_seen_camera is not None:
+            return  # the app brought its own warm-start state, active set incl.
         cams = self.cameras.camera_vertices
-        if cfg.tl == "base":
-            self.tl: TrackingLogic = TLBase(self.road, cams, **kw)
-        elif cfg.tl == "bfs":
-            self.tl = TLBFS(self.road, cams, fixed_edge_length_m=84.5, **kw)
-        elif cfg.tl == "wbfs":
-            self.tl = TLWBFS(self.road, cams, **kw)
-        elif cfg.tl == "prob":
-            self.tl = TLProbabilistic(self.road, cams, **kw)
-        else:
-            raise ValueError(f"unknown tl strategy {cfg.tl!r}")
-        # The query names a last-seen location (Fig. 1: start with only the
-        # camera covering it active).
         cam_ids = list(cams)
         cam_pos = self.road.positions[np.fromiter(cams.values(), dtype=np.int64)]
-        d = np.linalg.norm(cam_pos - self.road.positions[self.walk.vertices[0]], axis=1)
-        start_cam = cam_ids[int(np.argmin(d))]
-        self.tl.last_seen_camera = start_cam
-        self.tl.last_seen_time = 0.0
-        self.tl.active = self.tl.spotlight(0.0) if self.cfg.tl != "base" else set(cams)
-
-    def _make_batcher(self, xi: Callable[[int], float]):
-        cfg = self.cfg
-        if cfg.batching == "dynamic":
-            return DynamicBatcher(xi, m_max=cfg.m_max)
-        if cfg.batching == "static":
-            return StaticBatcher(xi, batch_size=cfg.static_batch)
-        if cfg.batching == "nob":
-            return NOBBatcher(xi, m_max=cfg.m_max)
-        raise ValueError(f"unknown batching {cfg.batching!r}")
-
-    def _build_pipeline(self) -> None:
-        cfg = self.cfg
-        sim = self.sim
-        skews = list(cfg.node_clock_skews or [0.0] * cfg.num_nodes)
-        if len(skews) < cfg.num_nodes:
-            skews += [0.0] * (cfg.num_nodes - len(skews))
-
-        self.sink = SinkTask(
-            "UV",
-            sim,
-            gamma=cfg.gamma,
-            epsilon_max=cfg.epsilon_max,
-            on_event=self._on_sink_event,
-            clock=Clock(0.0),  # kappa_n == kappa_1 (§4.6.2)
-            node="head",
-            # Budgets are only consulted by the drop points; skip the accept
-            # machinery entirely in no-drop runs.
-            learn_budgets=cfg.drops_enabled,
-            # _on_sink_event only reads ev.value/ev.header inline and never
-            # retains the event, so recycling headers at the sink is safe.
-            recycle_headers=True,
+        d = np.linalg.norm(
+            cam_pos - self.road.positions[self.walk.vertices[0]], axis=1
         )
-        sim.host_of["UV"] = "head"
-
-        fc_xi = linear_xi(*cfg.fc_cost)
-        va_xi = linear_xi(*cfg.va_cost)
-        cr_xi = linear_xi(*cfg.cr_cost)
-
-        self.cr_tasks: List[Task] = []
-        for i in range(cfg.num_cr):
-            node = f"node{i % cfg.num_nodes}"
-            t = Task(
-                f"CR-{i}",
-                sim,
-                cr_xi,
-                self._make_batcher(cr_xi),
-                logic=self._cr_logic,
-                clock=Clock(skews[i % cfg.num_nodes]),
-                budget=TaskBudget(f"CR-{i}", cr_xi, m_max=cfg.m_max),
-                drops_enabled=cfg.drops_enabled,
-                node=node,
-            )
-            t.output_event_bytes = 256.0  # metadata only (§2.2.3)
-            t.connect(self.sink)
-            t.partitioner = _constant_partitioner("UV")
-            # CR logic has no completion-time state reads: safe to fuse its
-            # streaming (b=1) executions with the outbound transit.
-            t.fuse_streaming = not cfg.drops_enabled and getattr(
-                sim, "transit_is_static", False
-            )
-            self.cr_tasks.append(t)
-            sim.host_of[t.name] = node
-
-        self.va_tasks: List[Task] = []
-        for i in range(cfg.num_va):
-            node = f"node{i % cfg.num_nodes}"
-            t = Task(
-                f"VA-{i}",
-                sim,
-                va_xi,
-                self._make_batcher(va_xi),
-                logic=self._va_logic,
-                clock=Clock(skews[i % cfg.num_nodes]),
-                budget=TaskBudget(f"VA-{i}", va_xi, m_max=cfg.m_max),
-                drops_enabled=cfg.drops_enabled,
-                node=node,
-            )
-            for cr in self.cr_tasks:
-                t.connect(cr)
-            # Keys are camera ids, a small fixed universe: precompute the
-            # routing table instead of formatting a string per event.
-            if not hasattr(self, "_cr_route"):
-                self._cr_route = {
-                    cam: f"CR-{hash(cam) % cfg.num_cr}"
-                    for cam in self.cameras.camera_vertices
-                }
-            t.partitioner = _table_partitioner(self._cr_route)
-            t.fuse_streaming = not cfg.drops_enabled and getattr(
-                sim, "transit_is_static", False
-            )
-            self.va_tasks.append(t)
-            sim.host_of[t.name] = node
-
-        # FC tasks are created lazily: a 10k-camera scenario with a spotlight
-        # TL only ever activates a small moving subset, so building a Task
-        # (+ its budget, batcher, wiring) per camera upfront dominated
-        # construction time.  `_make_fc` is called on first activation or
-        # first sourced frame.
-        self._fc_xi = fc_xi
-        self.fc_tasks: Dict[int, Task] = {}
-        # Full FC fusion: with drops off, a static network and a frame period
-        # longer than xi_fc(1), the FC stage reduces exactly to "arrive at
-        # the VA at t + xi_fc(1) + transit with xi_bar advanced" — the
-        # per-camera Task machinery is bypassed wholesale (it still runs for
-        # drops-enabled or dynamic-bandwidth configs).
-        self._fc_xi1 = fc_xi(1)
-        self._fuse_fc = (
-            not cfg.drops_enabled
-            and getattr(sim, "transit_is_static", False)
-            and 1.0 / cfg.fps > self._fc_xi1
-        )
-        if self._fuse_fc:
-            # All FC->VA transits are edge-host -> compute-node MAN hops with
-            # the same payload size: one delay for every camera.
-            self._fc_transit = sim.network.transit_delay(
-                "edge*", "node*", 2900.0, 0.0
-            )
-            self._va_of = {
-                cam: self.va_tasks[hash(cam) % cfg.num_va]
-                for cam in self.cameras.camera_vertices
-            }
-
-    def _make_fc(self, cam: int) -> Task:
-        cfg = self.cfg
-        sim = self.sim
-        # FC co-located with the camera on an edge host; round-robin the
-        # *downstream* VA by camera id (paper: FCs scheduled round-robin).
-        fc_xi = self._fc_xi
-        t = Task(
-            f"FC-{cam}",
-            sim,
-            fc_xi,
-            StaticBatcher(fc_xi, batch_size=1),  # FC logic is simple/edge
-            logic=self._fc_logic,
-            clock=Clock(0.0),  # source clock kappa_1
-            budget=TaskBudget(f"FC-{cam}", fc_xi, m_max=1),
-            drops_enabled=cfg.drops_enabled,
-            node=f"edge{cam}",
-        )
-        for va in self.va_tasks:
-            t.connect(va)
-        # Each FC has a fixed key (its camera), so its destination VA is
-        # a constant.
-        t.partitioner = _constant_partitioner(f"VA-{hash(cam) % cfg.num_va}")
-        t.state["isActive"] = cam in self._fc_active
-        # FC control updates land >= man_latency after a tick while xi(1) is
-        # sub-millisecond, so arrival-time state reads match finish-time
-        # reads: safe to fuse the execute+transmit hops (see pipeline.py).
-        t.fuse_streaming = not cfg.drops_enabled and getattr(
-            sim, "transit_is_static", False
-        )
-        self.fc_tasks[cam] = t
-        sim.host_of[t.name] = f"edge{cam}"
-        return t
+        tl.last_seen_camera = cam_ids[int(np.argmin(d))]
+        tl.last_seen_time = 0.0
+        tl.active = tl.spotlight(0.0)
 
     # ------------------------------------------------------------------ #
-    # Module logics                                                       #
+    # Driver-side instrumentation hooks                                   #
     # ------------------------------------------------------------------ #
-    def _fc_logic(self, events: List[Event], state: Dict) -> List[Event]:
-        if not state.get("isActive", True):
-            return []
-        # FC may inspect frame content (§2.2.1); a cheap edge-side candidate
-        # filter flags likely positives so no drop point sheds them (§4.3.3).
-        if self.cfg.avoid_drop_positives:
-            for ev in events:
-                if getattr(ev.value, "has_entity", False):
-                    ev.header.avoid_drop = True
-        return events
-
-    def _va_logic(self, events: List[Event], state: Dict) -> List[Event]:
-        # Object detection: every frame yields candidate boxes (1:1).  A
-        # high-confidence candidate match flags the event avoid-drop (§4.3.3)
-        # so the downstream drop points cannot shed it.
-        if self._reid_enabled:
-            self._va_reid(events)
-        if self.cfg.avoid_drop_positives:
-            for ev in events:
-                if getattr(ev.value, "has_entity", False):
-                    ev.header.avoid_drop = True
-        return events
-
-    def _va_reid(self, events: List[Event]) -> None:
+    def _va_reid(self, events: List[Event], state: Dict) -> None:
         """Batched re-ID over the batch's frame embeddings: one bucket-padded
         ``reid_match`` call per VA batch (gallery = the frames' embeddings,
         query = the tracked entity's embedding).  Matches count toward
@@ -483,69 +484,25 @@ class TrackingScenario:
             gallery, self._reid_query, threshold=self.cfg.reid_threshold
         )
         matched = np.asarray(matched)
-        avoid = self.cfg.avoid_drop_positives
+        avoid = self.deployment.avoid_drop_positives
         for j, i in enumerate(idx):
             if matched[j]:
                 self._reid_matched += 1
                 if avoid:
                     events[i].header.avoid_drop = True
 
-    def _cr_logic(self, events: List[Event], state: Dict) -> List[Event]:
-        rng = state.get("rng")
-        if rng is None:
-            rng = state["rng"] = np.random.default_rng(self.cfg.seed + 101)
-        p_tp = self.cfg.p_true_positive
-        avoid = self.cfg.avoid_drop_positives
-        for ev in events:
-            frame: Frame = ev.value
-            # NB: the rng is consumed only on entity frames (short-circuit),
-            # keeping the random stream identical across refactors.
-            positive = bool(frame.has_entity) and (float(rng.uniform()) <= p_tp)
-            if positive and avoid:
-                ev.header.avoid_drop = True
-            # 1:1 transform: reuse the event object, swap the frame payload
-            # for the CR verdict.  Clear the slowest-of-batch mark from the
-            # upstream stage — the runtime re-marks this stage's slowest.
-            ev.batch_slowest = False
-            ev.value = Detection(
-                camera_id=frame.camera_id, positive=positive, timestamp=frame.timestamp
-            )
-        return events
-
     # ------------------------------------------------------------------ #
     # Sink + TL feedback                                                  #
     # ------------------------------------------------------------------ #
     def _on_sink_event(self, ev: Event, now: float) -> None:
-        det: Detection = ev.value
+        det = ev.value
+        if not isinstance(det, Detection):
+            det = as_detection(ev)
         if det.positive:
             self._positives_completed += 1
-            if now - ev.header.source_arrival <= self.cfg.gamma:
+            if now - ev.header.source_arrival <= self.app.gamma:
                 self._detections_on_time += 1
         self._pending_detections.append(det)
-
-    def _apply_fc_active(self, cam: int, want: bool) -> None:
-        """Control-event delivery (runs ``man_latency_s`` after the TL tick)."""
-        if self._fuse_fc:
-            # Fused FC mode keeps no per-camera tasks; the mirror set is the
-            # entire FC state.
-            if want:
-                self._fc_active.add(cam)
-            else:
-                self._fc_active.discard(cam)
-            return
-        if want:
-            fc = self.fc_tasks.get(cam)
-            if fc is None:
-                self._fc_active.add(cam)  # _make_fc reads the mirror
-                self._make_fc(cam)
-            else:
-                fc.state["isActive"] = True
-                self._fc_active.add(cam)
-        else:
-            fc = self.fc_tasks.get(cam)
-            if fc is not None:
-                fc.state["isActive"] = False
-            self._fc_active.discard(cam)
 
     def _tl_tick(self) -> None:
         now = self.sim.time
@@ -556,11 +513,12 @@ class TrackingScenario:
         # Only the delta against the previously requested set is scheduled,
         # so a tick costs O(|changed|), not O(num_cameras).
         latency = self.sim.network.man_latency_s
+        set_active = self.compiled.set_fc_active
         prev = self._ctrl_target
         for cam in new_active - prev:
-            self.sim.schedule(latency, self._apply_fc_active, cam, True)
+            self.sim.schedule(latency, set_active, cam, True)
         for cam in prev - new_active:
-            self.sim.schedule(latency, self._apply_fc_active, cam, False)
+            self.sim.schedule(latency, set_active, cam, False)
         self._ctrl_target = new_active
         if now + self.cfg.tl_update_period <= self.cfg.duration_s:
             self.sim.schedule(self.cfg.tl_update_period, self._tl_tick)
@@ -570,20 +528,22 @@ class TrackingScenario:
     # ------------------------------------------------------------------ #
     def _frame_tick(self) -> None:
         t = self.sim.time
-        if self._fc_active:
+        compiled = self.compiled
+        fc_active = compiled.fc_active
+        if fc_active:
             # Batched sourcing: one position interpolation + one vectorized
             # FOV test for the whole active set (ascending camera order, same
             # as the old per-camera loop).
-            ids = np.fromiter(self._fc_active, dtype=np.int64, count=len(self._fc_active))
+            ids = np.fromiter(fc_active, dtype=np.int64, count=len(fc_active))
             ids.sort()
             frames = self.cameras.frames_at(t, ids)
             n_pos = 0
-            if self._fuse_fc:
+            if compiled.fuse_fc:
                 # FC stage fused into the source: identical arrival times and
-                # headers, no per-camera Task hops (see _build_pipeline).
-                xi1 = self._fc_xi1
-                avoid = self.cfg.avoid_drop_positives
-                va_of = self._va_of
+                # headers, no per-camera Task hops (see CompiledApp).
+                xi1 = compiled.fc_xi1
+                avoid = self.deployment.avoid_drop_positives
+                va_of = compiled.va_of
                 groups: Dict[Task, List[Event]] = {}
                 for frame in frames:
                     has = frame.has_entity
@@ -604,10 +564,12 @@ class TrackingScenario:
                         g.append(ev)
                 depart = t + xi1
                 for va, evs in groups.items():
-                    self.sim.schedule_at(depart + self._fc_transit, va._deliver_many, evs)
+                    self.sim.schedule_at(
+                        depart + compiled.fc_transit, va._deliver_many, evs
+                    )
             else:
-                fc_tasks = self.fc_tasks
-                make_fc = self._make_fc
+                fc_tasks = compiled.fc_tasks
+                make_fc = compiled.make_fc
                 for frame in frames:
                     if frame.has_entity:
                         n_pos += 1
@@ -628,20 +590,10 @@ class TrackingScenario:
         self.sim.schedule(0.0, self._frame_tick)
         self.sim.schedule(cfg.tl_update_period, self._tl_tick)
         # Allow in-flight events to drain past the generation horizon.
-        self.sim.run(until=cfg.duration_s + 3.0 * cfg.gamma)
+        self.sim.run(until=cfg.duration_s + 3.0 * self.app.gamma)
 
-        drops: Dict[str, int] = {}
-        batch_sizes: Dict[str, List[int]] = {"VA": [], "CR": []}
-        total_dropped = 0
-        for t in list(self.va_tasks) + list(self.cr_tasks) + list(self.fc_tasks.values()):
-            if t.stats.dropped:
-                drops[t.name] = t.stats.dropped
-                total_dropped += t.stats.dropped
-        for t in self.va_tasks:
-            batch_sizes["VA"].extend(t.stats.batch_sizes)
-        for t in self.cr_tasks:
-            batch_sizes["CR"].extend(t.stats.batch_sizes)
-
+        compiled = self.compiled
+        drops = compiled.drops_by_task()
         return ScenarioResult(
             config=cfg,
             active_timeline=self._stats_active,
@@ -649,12 +601,13 @@ class TrackingScenario:
             on_time=self.sink.on_time,
             delayed=self.sink.delayed,
             source_events=self._source_events,
-            dropped=total_dropped,
+            dropped=sum(drops.values()),
             drops_by_task=drops,
-            batch_sizes=batch_sizes,
+            batch_sizes=compiled.batch_sizes(),
             positives_generated=self._positives_generated,
             positives_completed=self._positives_completed,
             positives_dropped=self._positives_generated - self._positives_completed,
             detections_on_time=self._detections_on_time,
             reid_matched=self._reid_matched,
+            query_pushes=compiled.query_pushes,
         )

@@ -1,8 +1,12 @@
-"""Sweep engine: run a whole grid of scenario configs in one pass.
+"""Sweep engine: run a whole grid of scenario configs — or compiled apps —
+in one pass.
 
-A benchmark sweep (the paper's Figs. 5-13) is a list of ``(name,
-ScenarioConfig)`` pairs.  :class:`SweepRunner` executes the grid with the
-shared-world machinery:
+A benchmark sweep (the paper's Figs. 5-13) is a list of ``(name, case)``
+pairs where ``case`` is either a plain ``ScenarioConfig`` (the preset app)
+or an :class:`AppCase` pairing a ``TrackingApp`` factory + ``DeploymentSpec``
+with a workload config — so all four Table-1 apps run through the same
+engine, lowered by ``repro.core.compile.compile_app``.  :class:`SweepRunner`
+executes the grid with the shared-world machinery:
 
 * distinct :class:`~repro.sim.world.WorldKey`\\ s are prebuilt **once** in
   the parent and attached to the configs, so no grid point rebuilds
@@ -36,7 +40,29 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .scenario import ScenarioConfig, TrackingScenario
 from .world import WorldKey, clear_world_cache, get_world, world_cache_stats
 
-__all__ = ["CaseRecord", "SweepResult", "SweepRunner"]
+__all__ = ["AppCase", "CaseRecord", "SweepResult", "SweepRunner"]
+
+
+@dataclass
+class AppCase:
+    """One app-grid point: a ``TrackingApp`` (or factory) + deployment over
+    a workload.
+
+    ``app`` is either a :class:`~repro.core.dataflow.TrackingApp` or a
+    factory ``(world, cameras) -> TrackingApp`` — grids prefer factories so
+    fork workers construct JAX-touching apps (towers, kernels) inside their
+    own process, and so each case's TL strategy gets its own instance bound
+    to the case's world geometry.  ``workload`` is a ``ScenarioConfig``
+    describing cameras/duration/walk/QoS; its module knobs (``num_va``,
+    ``batching``, costs...) are ignored in favor of the app's specs merged
+    over ``deployment``.  ``needs_jax`` routes auto-mode grids away from
+    fork pools (see ``SweepRunner._resolve_mode``).
+    """
+
+    app: object  # TrackingApp | (world, cameras) -> TrackingApp
+    workload: ScenarioConfig
+    deployment: Optional[object] = None  # DeploymentSpec | None -> workload's
+    needs_jax: bool = False
 
 
 @dataclass
@@ -65,9 +91,22 @@ class SweepResult:
     world_build_s: float
 
 
-def _run_case(name: str, cfg: ScenarioConfig) -> CaseRecord:
+def _workload(case) -> ScenarioConfig:
+    """The ScenarioConfig a grid entry runs over (identity for plain
+    configs, the embedded workload for app cases)."""
+    return case.workload if isinstance(case, AppCase) else case
+
+
+def _run_case(name: str, case) -> CaseRecord:
     t0 = time.perf_counter()
-    scenario = TrackingScenario(cfg)
+    if isinstance(case, AppCase):
+        scenario = TrackingScenario(
+            case.workload, app=case.app, deployment=case.deployment
+        )
+        cfg = case.workload
+    else:
+        scenario = TrackingScenario(case)
+        cfg = case
     build_s = time.perf_counter() - t0
     gc_was_enabled = gc.isenabled()
     gc.disable()
@@ -89,9 +128,9 @@ def _run_case(name: str, cfg: ScenarioConfig) -> CaseRecord:
 
 
 # Fork-inherited grid: worker processes index into this instead of having
-# configs pickled to them (configs may carry lambdas, and the attached
-# WorldBundles travel copy-on-write through fork for free).
-_ACTIVE_GRID: List[Tuple[str, ScenarioConfig]] = []
+# cases pickled to them (configs and apps may carry lambdas/towers, and the
+# attached WorldBundles travel copy-on-write through fork for free).
+_ACTIVE_GRID: List[Tuple[str, object]] = []
 
 
 def _run_case_at(idx: int) -> CaseRecord:
@@ -99,11 +138,14 @@ def _run_case_at(idx: int) -> CaseRecord:
     return _run_case(name, cfg)
 
 
-def _cost_hint(cfg: ScenarioConfig) -> float:
-    """Rough relative cost of a config, used only to order pool submission
+def _cost_hint(case) -> float:
+    """Rough relative cost of a case, used only to order pool submission
     (longest first minimizes makespan).  Source events dominate: a base TL
     sources every camera each tick; spotlight TLs source an active set that
-    grows with the entity peak speed."""
+    grows with the entity peak speed.  App cases are estimated from their
+    workload (the app's own TL strategy isn't constructed until the worker
+    builds the world)."""
+    cfg = _workload(case)
     ticks = cfg.duration_s * cfg.fps
     if cfg.tl == "base":
         per_tick = float(cfg.num_cameras)
@@ -165,7 +207,7 @@ class SweepRunner:
         return "fork", workers
 
     # ------------------------------------------------------------------ #
-    def run(self, grid: Sequence[Tuple[str, ScenarioConfig]]) -> SweepResult:
+    def run(self, grid: Sequence[Tuple[str, object]]) -> SweepResult:
         grid = list(grid)
         t_sweep = time.perf_counter()
         builds_before = world_cache_stats()["builds"]
@@ -175,9 +217,10 @@ class SweepRunner:
             # attach the bundle so no case rebuilds shared geometry.
             bundles: Dict[WorldKey, object] = {}
             attached = []
-            for name, cfg in grid:
+            for name, case in grid:
+                cfg = _workload(case)
                 if cfg.world is not None:
-                    attached.append((name, cfg))
+                    attached.append((name, case))
                     continue
                 key = WorldKey.from_config(cfg)
                 bundle = bundles.get(key)
@@ -186,12 +229,21 @@ class SweepRunner:
                     bundle = get_world(key)
                     world_build_s += time.perf_counter() - t0
                     bundles[key] = bundle
-                attached.append((name, replace(cfg, world=bundle)))
+                cfg = replace(cfg, world=bundle)
+                if isinstance(case, AppCase):
+                    case = replace(case, workload=cfg)
+                else:
+                    case = cfg
+                attached.append((name, case))
             grid = attached
         # True builds only: LRU/disk hits during the prebuild don't count.
         worlds_built = world_cache_stats()["builds"] - builds_before
         world_build_total = world_build_s
-        needs_jax = any(cfg.embed_dim > 0 for _, cfg in grid)
+        needs_jax = any(
+            _workload(case).embed_dim > 0
+            or (isinstance(case, AppCase) and case.needs_jax)
+            for _, case in grid
+        )
         if not self.share_worlds:
             # The cold baseline is by definition sequential (per-case cache
             # clearing cannot be meaningful across concurrent workers).
@@ -235,7 +287,7 @@ class SweepRunner:
         )
 
     def _run_fork(
-        self, grid: List[Tuple[str, ScenarioConfig]], workers: int
+        self, grid: List[Tuple[str, object]], workers: int
     ) -> List[CaseRecord]:
         global _ACTIVE_GRID
         ctx = multiprocessing.get_context("fork")

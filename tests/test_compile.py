@@ -1,0 +1,336 @@
+"""App compiler: spec resolution, DSL lowering, QF feedback edge, and the
+bit-identity guarantee for ``ScenarioConfig`` preset apps.
+
+The frozen summaries below were recorded at the pre-compiler commit
+(42156c3, hard-wired scenario pipeline) for seed 0; the compiled preset
+apps must reproduce them bit-for-bit (acceptance: the refactor changes the
+API, not a single trajectory).
+"""
+
+import pytest
+
+from repro.core.compile import (
+    DeploymentSpec,
+    as_detection,
+    compile_app,
+    linear_xi,
+    resolve_module,
+)
+from repro.core.dataflow import ModuleSpec, TrackingApp, fc_is_active
+from repro.core.events import Event, EventHeader
+from repro.core.tracking import Detection
+from repro.sim import AppCase, ScenarioConfig, SweepRunner, TrackingScenario
+
+# --------------------------------------------------------------------- #
+# Frozen pre-refactor summaries (seed 0; 300 cameras / 180 s, 200 for    #
+# the all-active base TL)                                                #
+# --------------------------------------------------------------------- #
+GOLDEN = {
+    "base": {
+        "source_events": 36200, "on_time": 2070, "delayed": 16670,
+        "dropped": 0, "delayed_frac": 0.8895, "dropped_frac": 0.0,
+        "median_latency_s": 66.217, "p99_latency_s": 130.517,
+        "peak_active": 200, "positives_generated": 31, "positives_completed": 14,
+    },
+    "bfs": {
+        "source_events": 2195, "on_time": 2195, "delayed": 0, "dropped": 0,
+        "delayed_frac": 0.0, "dropped_frac": 0.0, "median_latency_s": 0.157,
+        "p99_latency_s": 0.517, "peak_active": 28,
+        "positives_generated": 31, "positives_completed": 23,
+    },
+    "wbfs": {
+        "source_events": 1472, "on_time": 1472, "delayed": 0, "dropped": 0,
+        "delayed_frac": 0.0, "dropped_frac": 0.0, "median_latency_s": 0.157,
+        "p99_latency_s": 0.397, "peak_active": 21,
+        "positives_generated": 31, "positives_completed": 23,
+    },
+    "prob": {
+        "source_events": 1242, "on_time": 1242, "delayed": 0, "dropped": 0,
+        "delayed_frac": 0.0, "dropped_frac": 0.0, "median_latency_s": 0.157,
+        "p99_latency_s": 0.277, "peak_active": 16,
+        "positives_generated": 31, "positives_completed": 23,
+    },
+    # The trickier lowering paths: static/NOB batchers through the spec
+    # resolution, and the avoid-drop flag plumbing with drops enabled.
+    "bfs_static20": {
+        "source_events": 2472, "on_time": 2098, "delayed": 282, "dropped": 0,
+        "delayed_frac": 0.1185, "dropped_frac": 0.0, "median_latency_s": 6.354,
+        "p99_latency_s": 33.564, "peak_active": 28,
+        "positives_generated": 31, "positives_completed": 23,
+    },
+    "bfs_nob": {
+        "source_events": 2195, "on_time": 2195, "delayed": 0, "dropped": 0,
+        "delayed_frac": 0.0, "dropped_frac": 0.0, "median_latency_s": 0.157,
+        "p99_latency_s": 0.517, "peak_active": 28,
+        "positives_generated": 31, "positives_completed": 23,
+    },
+}
+
+
+def _cfg(tl, **kw):
+    base = dict(num_cameras=300, duration_s=180.0, seed=0, tl=tl)
+    base.update(kw)
+    return ScenarioConfig(**base)
+
+
+@pytest.mark.parametrize("tl", ["base", "bfs", "wbfs", "prob"])
+def test_preset_apps_bit_identical_to_pre_refactor(tl):
+    cfg = _cfg(tl, num_cameras=200 if tl == "base" else 300,
+               batching="dynamic", m_max=25)
+    assert TrackingScenario(cfg).run().summary() == GOLDEN[tl]
+
+
+def test_static_and_nob_batching_bit_identical():
+    s20 = TrackingScenario(_cfg("bfs", batching="static", static_batch=20)).run()
+    assert s20.summary() == GOLDEN["bfs_static20"]
+    nob = TrackingScenario(_cfg("bfs", batching="nob")).run()
+    assert nob.summary() == GOLDEN["bfs_nob"]
+
+
+def test_explicit_app_equals_preset(tiny_cfg=None):
+    """`TrackingScenario(cfg)` and `TrackingScenario(cfg, app=cfg.to_app(),
+    deployment=cfg.deployment())` are the same program."""
+    cfg = _cfg("bfs", duration_s=60.0)
+    implicit = TrackingScenario(cfg).run().summary()
+    sc = TrackingScenario(cfg, app=cfg.to_app(), deployment=cfg.deployment())
+    assert sc.run().summary() == implicit
+
+
+# --------------------------------------------------------------------- #
+# ModuleSpec hygiene + spec resolution                                   #
+# --------------------------------------------------------------------- #
+def test_module_spec_validates_at_construction():
+    with pytest.raises(ValueError):
+        ModuleSpec(batching="bogus")
+    with pytest.raises(ValueError):
+        ModuleSpec(resource_tier="mainframe")
+    with pytest.raises(ValueError):
+        ModuleSpec(instances=0)
+    with pytest.raises(ValueError):
+        ModuleSpec(m_max=-1)
+    with pytest.raises(ValueError):
+        ModuleSpec(xi=3.14)
+
+
+def test_module_spec_no_shared_default_xi():
+    """The old `xi: Callable = lambda b: 0.0` default was one shared object
+    across every spec; now None means "inherit" and is resolved per app."""
+    a, b = ModuleSpec(), ModuleSpec()
+    assert a.xi is None and b.xi is None
+    assert a.batching is None  # inherit, not a silently-pinned 'dynamic'
+
+
+def _tiny_app(**spec_kw):
+    from repro.core.roadnet import make_road_network
+    from repro.core.tracking import TLBase
+
+    road = make_road_network(num_vertices=30, target_edges=84, seed=0)
+    return TrackingApp(
+        name="t", fc=fc_is_active, va=lambda c, f, s: [(c, x) for x in f],
+        cr=lambda c, v, s: [(c, x) for x in v], tl=TLBase(road, {0: 0}),
+        specs=spec_kw,
+    )
+
+
+def test_resolve_module_merges_app_over_deployment_over_defaults():
+    app = _tiny_app(VA=ModuleSpec(instances=7, m_max=11))
+    dep = DeploymentSpec(modules={
+        "VA": ModuleSpec(instances=3, batching="nob", xi=linear_xi(0.1, 0.2)),
+        "CR": ModuleSpec(instances=5),
+    })
+    va = resolve_module(app, dep, "VA")
+    assert va.instances == 7          # app override wins
+    assert va.m_max == 11             # app override wins
+    assert va.batching == "nob"       # deployment default fills in
+    assert va.xi(2) == pytest.approx(0.5)
+    cr = resolve_module(app, dep, "CR")
+    assert cr.instances == 5          # deployment default
+    assert cr.batching == "dynamic"   # global default
+    assert cr.resource_tier == "cloud"  # per-module global tier default
+    fc = resolve_module(app, dep, "FC")
+    assert fc.instances == 1 and fc.resource_tier == "edge"
+    assert fc.xi(100) == 0.0          # no cost model anywhere -> free
+
+
+def test_deployment_spec_validates():
+    with pytest.raises(ValueError):
+        DeploymentSpec(num_nodes=0)
+    with pytest.raises(ValueError):
+        DeploymentSpec(modules={"NOPE": ModuleSpec()})
+
+
+def test_as_detection_coerces_bare_verdicts():
+    det = Detection(camera_id=4, positive=True, timestamp=2.0)
+    ev = Event(header=EventHeader(event_id=1, source_arrival=1.5), key=4, value=det)
+    assert as_detection(ev) is det
+    ev2 = Event(header=EventHeader(event_id=2, source_arrival=3.25), key=9, value=True)
+    d2 = as_detection(ev2)
+    assert d2.camera_id == 9 and d2.positive and d2.timestamp == 3.25
+
+
+def test_compile_app_requires_scheduler():
+    with pytest.raises(ValueError):
+        compile_app(_tiny_app(), object(), DeploymentSpec(), None)
+
+
+# --------------------------------------------------------------------- #
+# QF feedback edge (§2.2.5)                                              #
+# --------------------------------------------------------------------- #
+def _qf_cfg():
+    return ScenarioConfig(num_cameras=200, duration_s=60.0, seed=0, tl="bfs")
+
+
+def test_qf_fused_query_reaches_va_cr_before_next_batch():
+    """A query pushed by QF must be visible in VA/CR state before the next
+    batch executes (one control latency after the triggering detection)."""
+    cfg = _qf_cfg()
+    app = cfg.to_app()
+    box = {}
+    va_obs = []  # (sim time, query seen) per VA batch
+    qf_calls = []  # sim time of each fusion
+
+    inner_va = app.va
+
+    def observing_va(camera_id, frames, state):
+        va_obs.append((box["sim"].time, state.get("entity_query")))
+        return inner_va(camera_id, frames, state)
+
+    def qf(detections, state):
+        n = state.get("fused", 0) + len(detections)
+        state["fused"] = n
+        qf_calls.append(box["sim"].time)
+        return ("q", n)
+
+    app.va = observing_va
+    app.qf = qf
+    sc = TrackingScenario(cfg, app=app, deployment=cfg.deployment())
+    box["sim"] = sc.sim
+    sc.run()
+
+    assert qf_calls, "the entity was sighted; QF must have fused queries"
+    assert sc.compiled.query_pushes == len(qf_calls)
+    fused = sc.compiled.qf_state["entity_query"]
+    assert fused == ("q", sc.compiled.qf_state["fused"])
+    # The push propagated to every VA and CR instance's state.
+    for t in sc.compiled.va_tasks + sc.compiled.cr_tasks:
+        assert t.state["entity_query"] == fused
+    # Every batch executing after the first push's control latency saw a
+    # fused (non-None) query — i.e. the update landed before the next batch.
+    latency = sc.sim.network.man_latency_s
+    horizon = qf_calls[0] + latency
+    late = [(t, q) for t, q in va_obs if t > horizon]
+    assert late, "batches kept executing after the first fusion"
+    assert all(q is not None for _, q in late)
+
+
+def test_qf_none_and_noop_qf_do_not_change_trajectories():
+    """Apps without QF are untouched by the new edge, and a QF that never
+    fuses (returns None) is observationally identical to no QF."""
+    cfg = _qf_cfg()
+    base = TrackingScenario(cfg).run()
+    assert base.query_pushes == 0
+
+    app = cfg.to_app()
+    app.qf = lambda detections, state: None
+    noop = TrackingScenario(cfg, app=app, deployment=cfg.deployment()).run()
+    assert noop.query_pushes == 0
+    assert noop.summary() == base.summary()
+
+
+# --------------------------------------------------------------------- #
+# (app, deployment) grids through the sweep engine                       #
+# --------------------------------------------------------------------- #
+def _factory(tl_name):
+    def make(world, cameras):
+        cfg = ScenarioConfig(tl=tl_name)
+        app = cfg.to_app(world, cameras)
+        app.name = f"grid-{tl_name}"
+        return app
+
+    return make
+
+
+@pytest.mark.skipif(not SweepRunner.fork_available(), reason="fork unavailable")
+# Forcing fork after another test initialized JAX in this process trips
+# JAX's os.fork() RuntimeWarning; these workers never touch JAX (preset
+# apps, embed_dim=0), which is exactly the fork-safe pattern sweep.py
+# documents — silence the advisory rather than degrade the test to serial.
+@pytest.mark.filterwarnings("ignore:os\\.fork\\(\\) was called:RuntimeWarning")
+def test_app_grid_fork_matches_serial():
+    wl = ScenarioConfig(num_cameras=200, duration_s=45.0, seed=0)
+    grid = [
+        (tl, AppCase(app=_factory(tl), workload=wl, deployment=DeploymentSpec()))
+        for tl in ("bfs", "wbfs")
+    ]
+    serial = SweepRunner(mode="serial").run(grid)
+    fork = SweepRunner(mode="fork").run(grid)
+    assert fork.mode == "fork"
+    for a, b in zip(serial.records, fork.records):
+        assert a.summary == b.summary
+        assert a.summary["source_events"] > 0
+
+
+def test_app_case_matches_equivalent_config_case():
+    """An AppCase built from `to_app()` reproduces the plain-config case
+    bit-identically through the sweep engine."""
+    cfg = ScenarioConfig(num_cameras=200, duration_s=45.0, seed=0, tl="wbfs")
+    res = SweepRunner(mode="serial").run([
+        ("cfg", cfg),
+        ("app", AppCase(
+            app=lambda world, cameras: cfg.to_app(world, cameras),
+            workload=cfg,
+            deployment=cfg.deployment(),
+        )),
+    ])
+    assert res.records[0].summary == res.records[1].summary
+
+
+def test_avoid_drop_shields_bare_bool_verdicts():
+    """make_cr apps emit bare bool verdicts; avoid_drop_positives must
+    shield those exactly like Detection.positive ones (same interpretation
+    as_detection applies at the sink)."""
+    from repro.core.compile import _adapt_cr
+
+    logic = _adapt_cr(lambda c, v, s: [(c, bool(getattr(x, "has_entity", False))) for x in v], True)
+
+    class _Frame:
+        has_entity = True
+
+    hit = Event(header=EventHeader(event_id=1, source_arrival=0.0), key=2, value=_Frame())
+    miss = Event(header=EventHeader(event_id=2, source_arrival=0.0), key=2, value=object())
+    out = logic([hit, miss], {})
+    assert [ev.value for ev in out] == [True, False]
+    assert out[0].header.avoid_drop and not out[1].header.avoid_drop
+
+
+def test_seed_tl_keeps_preseeded_app_state():
+    """An app whose TL arrives warm-started (last_seen + active set) keeps
+    that state; fresh TLs are pointed at the query's last-seen location."""
+    cfg = ScenarioConfig(num_cameras=150, duration_s=20.0, seed=3, tl="bfs")
+    app = cfg.to_app()
+    app.tl.last_seen_camera = 42
+    app.tl.last_seen_time = 5.0
+    app.tl.active = {42, 43, 44}
+    sc = TrackingScenario(cfg, app=app, deployment=cfg.deployment())
+    assert sc.tl.last_seen_camera == 42 and sc.tl.last_seen_time == 5.0
+    assert sc.tl.active == {42, 43, 44}
+    assert sc.compiled.fc_active == {42, 43, 44}
+    fresh = TrackingScenario(cfg)
+    assert fresh.tl.last_seen_time == 0.0
+    assert fresh.tl.active == fresh.tl.spotlight(0.0)
+
+
+def test_apply_keyed_none_filters_keep_attribution():
+    """Filtering via None pairs keeps survivor payloads married to their
+    own events (a compacted shorter list would misattribute them)."""
+    from repro.core.compile import _apply_keyed
+
+    def va(camera_id, frames, state):
+        return [(camera_id, f * 10) if f % 2 else None for f in frames]
+
+    events = [
+        Event(header=EventHeader(event_id=i, source_arrival=float(i)), key=7, value=i)
+        for i in (1, 2, 3)
+    ]
+    out = _apply_keyed(va, events, {})
+    assert [(ev.header.event_id, ev.value) for ev in out] == [(1, 10), (3, 30)]

@@ -1,0 +1,50 @@
+"""The examples are executable documentation: both must build *and run*
+their apps end-to-end through the app compiler (not merely construct them).
+
+Each example runs in a subprocess: they manipulate ``sys.path`` and print,
+and ``examples/apps.py`` fork-pools JAX-touching workers — isolating them
+keeps this test independent of the pytest process's own JAX state.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_example(script: str, timeout: float = 900.0) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script)],
+        cwd=ROOT,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    assert proc.returncode == 0, (
+        f"{script} exited {proc.returncode}\n--- stdout ---\n{proc.stdout}"
+        f"\n--- stderr ---\n{proc.stderr}"
+    )
+    return proc.stdout
+
+
+def test_quickstart_runs_composed_app_end_to_end():
+    out = _run_example("quickstart.py")
+    assert "Composed app1-missing-person" in out
+    assert "OK: all events within gamma" in out
+
+
+def test_apps_executes_all_four_table1_apps():
+    out = _run_example("apps.py")
+    # All four Table-1 apps ran end-to-end through compile_app + SweepRunner.
+    for name in ("app1", "app2", "app3", "app4"):
+        assert f"  {name}: events=" in out, out
+    assert "Composed 4 tracking applications" in out
+    assert "JAX end to end" in out

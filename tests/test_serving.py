@@ -105,3 +105,107 @@ def test_reid_match_pipeline():
     scores, best, is_match = match(tower, frames, query, threshold=0.999)
     assert bool(is_match[5])
     assert int(jnp.argmax(scores)) == 5
+
+
+# --------------------------------------------------------------------- #
+# App-compiler lowering: one spec, two planes                            #
+# --------------------------------------------------------------------- #
+class TestLowerAppStages:
+    def _app(self, **specs):
+        from repro.core.dataflow import ModuleSpec, TrackingApp, fc_is_active
+        from repro.core.roadnet import make_road_network
+        from repro.core.tracking import TLBase
+
+        road = make_road_network(num_vertices=30, target_edges=84, seed=0)
+        return TrackingApp(
+            name="served",
+            fc=fc_is_active,
+            va=lambda c, f, s: [(c, x) for x in f],
+            cr=lambda c, v, s: [(c, x) for x in v],
+            tl=TLBase(road, {0: 0}),
+            gamma=0.75,
+            specs=specs,
+        )
+
+    def test_stages_resolve_from_app_and_deployment(self):
+        from repro.core.compile import DeploymentSpec, linear_xi
+        from repro.core.dataflow import ModuleSpec
+        from repro.serving import lower_app_stages
+
+        app = self._app(
+            VA=ModuleSpec(m_max=8, xi=linear_xi(0.001, 0.0005)),
+            CR=ModuleSpec(m_max=4, xi=linear_xi(0.002, 0.001)),
+        )
+        stages = lower_app_stages(
+            app,
+            DeploymentSpec(drops_enabled=True),
+            {"VA": lambda x: x, "CR": lambda x: x * 2},
+        )
+        va, cr = stages["VA"], stages["CR"]
+        assert va.name == "served/VA" and cr.name == "served/CR"
+        assert va.gamma == cr.gamma == 0.75  # app QoS, both planes
+        assert va.batcher.m_max == 8 and cr.batcher.m_max == 4
+        assert va.drops_enabled and cr.drops_enabled
+        assert cr.upstream is va  # reject/accept chain VA <- CR
+        assert va.xi(2) == pytest.approx(0.002)
+        # The stages actually serve: submit one request through VA.
+        res = va.submit(StageRequest(np.ones(4, np.float32), source_time=va.clock()))
+        assert res and not res[0].dropped
+        np.testing.assert_allclose(res[0].output, np.ones(4, np.float32))
+
+    def test_non_dynamic_batching_is_rejected(self):
+        from repro.core.compile import DeploymentSpec, linear_xi
+        from repro.core.dataflow import ModuleSpec
+        from repro.serving import lower_stage
+
+        app = self._app(VA=ModuleSpec(batching="static", xi=linear_xi(0.001, 0.0)))
+        with pytest.raises(ValueError, match="dynamic"):
+            lower_stage("VA", app, DeploymentSpec(), lambda x: x)
+
+    def test_missing_cost_model_calibrates_from_step(self):
+        from repro.core.compile import DeploymentSpec, linear_xi
+        from repro.core.dataflow import ModuleSpec
+        from repro.serving import lower_stage
+
+        app = self._app()  # no xi anywhere
+        with pytest.raises(ValueError, match="payload_shape"):
+            lower_stage("VA", app, DeploymentSpec(), lambda x: x)
+        stage = lower_stage(
+            "VA", app, DeploymentSpec(), lambda x: x,
+            payload_shape=(4,), buckets=(1, 2),
+        )
+        assert stage.xi(1) > 0.0  # measured, monotone-ish cost model
+        # An *explicit* zero cost model is a declaration, not an absence:
+        # it must be honored, never overridden by calibration.
+        free = self._app(VA=ModuleSpec(xi=linear_xi(0.0, 0.0)))
+        stage = lower_stage("VA", free, DeploymentSpec(), lambda x: x)
+        assert stage.xi(8) == 0.0
+
+    def test_cr_drop_rejects_into_va_budget(self):
+        """The VA <- CR signal chain is live: a CR-side drop calls the VA
+        stage's on_reject with the lateness epsilon."""
+        from repro.core.compile import DeploymentSpec, linear_xi
+        from repro.core.dataflow import ModuleSpec
+        from repro.serving import lower_app_stages
+
+        app = self._app(
+            VA=ModuleSpec(xi=linear_xi(0.001, 0.0)),
+            CR=ModuleSpec(xi=linear_xi(0.001, 0.0)),
+        )
+        stages = lower_app_stages(
+            app, DeploymentSpec(drops_enabled=True),
+            {"VA": lambda x: x, "CR": lambda x: x},
+        )
+        va, cr = stages["VA"], stages["CR"]
+        rejects = []
+        va.on_reject = lambda eid, eps, q_bar: rejects.append((eid, eps, q_bar))
+        # Teach CR a finite budget, then submit a hopelessly stale request:
+        # DP1 drops it and the reject must reach the VA hook.
+        cr.budget.set_budget(0.05)
+        res = cr.submit(
+            StageRequest(np.zeros(4, np.float32), source_time=cr.clock() - 10.0)
+        )
+        assert res and res[0].dropped
+        assert len(rejects) == 1
+        eid, eps, _ = rejects[0]
+        assert eid == res[0].event_id and eps > 0.0
