@@ -434,6 +434,11 @@ class CompiledApp:
         cr_xi = self.cr_spec.xi
         cr_logic = _adapt_cr(app.cr, deployment.avoid_drop_positives)
         transit_static = getattr(sim, "transit_is_static", False)
+        # Compute perturbations (dynamism plane) make actual execution
+        # durations time-varying; the fused fast paths precompute them, so
+        # fusion is only sound when xi is static too.  One predicate for
+        # every fusion site, including the lazily-built FCs (make_fc).
+        fuse_ok = self._fuse_ok = transit_static and getattr(sim, "xi_is_static", True)
         for i in range(self.cr_spec.instances):
             node = f"node{i % num_nodes}"
             t = Task(
@@ -455,7 +460,7 @@ class CompiledApp:
             # TL activation and QF query pushes — land one MAN latency after
             # their trigger, slower than xi(1)): safe to fuse its streaming
             # (b=1) executions with the outbound transit.
-            t.fuse_streaming = not drops and transit_static
+            t.fuse_streaming = not drops and fuse_ok
             t.state["entity_query"] = app.entity_query
             self.cr_tasks.append(t)
             sim.host_of[t.name] = node
@@ -487,7 +492,7 @@ class CompiledApp:
             for cr in self.cr_tasks:
                 t.connect(cr)
             t.partitioner = _table_partitioner(self._cr_route)
-            t.fuse_streaming = not drops and transit_static
+            t.fuse_streaming = not drops and fuse_ok
             t.state["entity_query"] = app.entity_query
             self.va_tasks.append(t)
             sim.host_of[t.name] = node
@@ -509,7 +514,7 @@ class CompiledApp:
         self.fuse_fc = (
             app.fc is fc_is_active
             and not drops
-            and transit_static
+            and fuse_ok
             and self.fps > 0
             and 1.0 / self.fps > self.fc_xi1
         )
@@ -557,9 +562,7 @@ class CompiledApp:
         # FC control updates land >= man_latency after a tick while xi(1) is
         # sub-millisecond, so arrival-time state reads match finish-time
         # reads: safe to fuse the execute+transmit hops (see pipeline.py).
-        t.fuse_streaming = not self.deployment.drops_enabled and getattr(
-            sim, "transit_is_static", False
-        )
+        t.fuse_streaming = not self.deployment.drops_enabled and self._fuse_ok
         self.fc_tasks[cam] = t
         sim.host_of[t.name] = f"edge{cam}"
         return t
@@ -613,6 +616,22 @@ class CompiledApp:
             t.state["entity_query"] = query
         for t in self.cr_tasks:
             t.state["entity_query"] = query
+
+    # ------------------------------------------------------------------ #
+    # Telemetry (dynamism plane)                                          #
+    # ------------------------------------------------------------------ #
+    def sample_telemetry(self, trace) -> None:
+        """Append one sample per VA/CR task (and the sink) to a
+        ``repro.sim.dynamism.DynamismTrace``-shaped recorder, plus one
+        aggregate ``FC*`` row over the lazy FC plane (a per-camera series
+        would be 10k columns).  Called by the driver's telemetry tick on a
+        fixed cadence — never from the per-event hot path."""
+        for t in self.va_tasks:
+            trace.sample_task(t)
+        for t in self.cr_tasks:
+            trace.sample_task(t)
+        trace.sample_task(self.sink)
+        trace.sample_aggregate("FC*", self.fc_tasks.values())
 
     # ------------------------------------------------------------------ #
     # Results                                                             #

@@ -51,7 +51,7 @@ from .events import (
     release_header,
 )
 
-__all__ = ["Task", "SinkTask", "PipelineStats", "Scheduler"]
+__all__ = ["Task", "SinkTask", "PipelineStats", "STAT_FIELDS", "Scheduler"]
 
 UserLogic = Callable[[List[Event], Dict[str, Any]], List[Event]]
 Partitioner = Callable[[Event], str]
@@ -84,11 +84,33 @@ class PipelineStats:
     dropped_dp3: int = 0
     executed: int = 0
     batches: int = 0
+    # Signal-plane counters (cold path: drops/signals only) sampled by the
+    # dynamism telemetry alongside the drop points.
+    probes: int = 0
+    accepts_rx: int = 0
+    rejects_rx: int = 0
     batch_sizes: List[int] = field(default_factory=list)
 
     @property
     def dropped(self) -> int:
         return self.dropped_dp1 + self.dropped_dp2 + self.dropped_dp3
+
+
+#: Telemetry field -> PipelineStats attribute for the cumulative counters a
+#: dynamism trace samples per task.  Lives next to PipelineStats so the
+#: per-task, aggregate (``FC*``) and serving
+#: (:meth:`repro.serving.scheduler.ServedStage.telemetry`) rows share one
+#: mapping without the serving plane importing the sim package.
+STAT_FIELDS = (
+    ("dp1", "dropped_dp1"),
+    ("dp2", "dropped_dp2"),
+    ("dp3", "dropped_dp3"),
+    ("probes", "probes"),
+    ("accepts", "accepts_rx"),
+    ("rejects", "rejects_rx"),
+    ("batches", "batches"),
+    ("executed", "executed"),
+)
 
 
 class Task:
@@ -147,6 +169,11 @@ class Task:
         self._streaming = (
             isinstance(batcher, StaticBatcher) and getattr(batcher, "batch_size", 0) == 1
         )
+        # Dynamism plane: optional (host, t) -> duration multiplier applied
+        # to *actual* execution time (never to the xi estimates the drop /
+        # batching decisions use — stragglers are unannounced).  None in
+        # every undisturbed run: the hot path pays one attribute test.
+        self._xi_mult = getattr(sim, "xi_multiplier", None)
         # Fused streaming (opt-in, see ``fuse_streaming``): collapse the
         # execute->transmit pair into a single scheduled downstream arrival.
         self.fuse_streaming = False
@@ -210,6 +237,8 @@ class Task:
             busy = self._busy or now_local < self._busy_until
             if not busy:
                 exec_dur = self._xi1
+                if self._xi_mult is not None:
+                    exec_dur *= self._xi_mult(self.node, self.sim.time)
                 if self.fuse_streaming:
                     # Fused: run the logic now, mark the server busy for
                     # xi(1), and schedule the downstream arrival directly at
@@ -337,6 +366,8 @@ class Task:
             else:
                 retained_pes = batch
             exec_dur = self.xi(len(retained_pes))
+            if self._xi_mult is not None:
+                exec_dur *= self._xi_mult(self.node, self.sim.time)
             self._busy = True
             self.sim.schedule(exec_dur, self._finish_and_continue, retained_pes, now_local, exec_dur)
             return
@@ -635,6 +666,7 @@ class Task:
         # signal to act on, which is what lets a collapsed budget recover
         # (§4.5.2).
         if self.probe_every > 0 and self._drop_count % self.probe_every == 0:
+            self.stats.probes += 1
             probe = Event(
                 header=EventHeader(
                     event_id=header.event_id,
@@ -653,10 +685,12 @@ class Task:
         release_header(header)
 
     def receive_reject(self, sig: RejectSignal) -> None:
+        self.stats.rejects_rx += 1
         downstream = self._event_downstream.get(sig.event_id, "")
         self.budget.on_reject(sig, downstream=downstream)
 
     def receive_accept(self, sig: AcceptSignal) -> None:
+        self.stats.accepts_rx += 1
         downstream = self._event_downstream.get(sig.event_id, "")
         self.budget.on_accept(sig, downstream=downstream)
 
@@ -701,6 +735,10 @@ class SinkTask(Task):
         self.latencies: List[Tuple[float, float]] = []  # (t_now, latency)
         self.delayed: int = 0
         self.on_time: int = 0
+        #: Probe events that completed the full path to the sink (§4.5.2);
+        #: reconciled against the tasks' emitted-probe counters by the
+        #: pipeline invariant tests.
+        self.probes_seen: int = 0
         self.budget.set_budget(self.gamma)
 
     def on_arrival(self, ev: Event) -> None:  # overrides Task
@@ -709,6 +747,7 @@ class SinkTask(Task):
         header = ev.header
         u = now_local - header.source_arrival  # kappa_1 == kappa_n (§4.6.2)
         if header.is_probe:
+            self.probes_seen += 1
             if u <= self.gamma and self.learn_budgets:
                 self._send_accept(ev, epsilon=self.gamma - u)
             return

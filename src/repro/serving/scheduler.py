@@ -121,7 +121,22 @@ class ServedStage:
         self.clock = clock
         self.budget = TaskBudget(name, xi, m_max=m_max)
         self.batcher = DynamicBatcher(xi, m_max=m_max)
-        self.stats = {"arrived": 0, "dropped": 0, "executed": 0, "batches": 0}
+        # "dropped" stays the total; the per-drop-point split feeds the same
+        # telemetry surface the pipeline's dynamism trace samples (§4.3).
+        # Counter keys use the PipelineStats attribute names so telemetry()
+        # can be driven by repro.core.pipeline.STAT_FIELDS directly.
+        self.stats = {
+            "arrived": 0,
+            "dropped": 0,
+            "dropped_dp1": 0,
+            "dropped_dp2": 0,
+            "dropped_dp3": 0,
+            "executed": 0,
+            "batches": 0,
+            "probes": 0,  # serving has no probe re-injection (yet)
+            "accepts_rx": 0,
+            "rejects_rx": 0,
+        }
         # Optional upstream stage: every drop here rejects into its budget
         # (the serving analogue of the pipeline's path-based reject signals,
         # §4.5; wired by lower_app_stages as VA <- CR).
@@ -131,12 +146,31 @@ class ServedStage:
     def on_reject(self, event_id: int, epsilon: float, q_bar: float) -> None:
         from repro.core.events import RejectSignal
 
+        self.stats["rejects_rx"] += 1
         self.budget.on_reject(RejectSignal(event_id, epsilon, q_bar))
 
     def on_accept(self, event_id: int, epsilon: float, xi_bar: float) -> None:
         from repro.core.events import AcceptSignal
 
+        self.stats["accepts_rx"] += 1
         self.budget.on_accept(AcceptSignal(event_id, epsilon, xi_bar))
+
+    def telemetry(self) -> Dict[str, float]:
+        """One telemetry sample, shaped like the discrete-event plane's
+        :data:`repro.sim.dynamism.TRACE_FIELDS` row so a serving deployment
+        can be traced on a cadence by the same tooling: current budget,
+        queue depth, the three drop-point counters and the signal counters.
+        Pure snapshot — no allocation on the request path."""
+        from repro.core.pipeline import STAT_FIELDS
+
+        s = self.stats
+        row: Dict[str, float] = {
+            "beta": self.budget.min_budget(),
+            "queue": self.batcher.current_size,
+        }
+        for fld, attr in STAT_FIELDS:
+            row[fld] = s[attr]
+        return row
 
     def _reject_upstream(self, event_id: int, epsilon: float, q_bar: float) -> None:
         if self.upstream is not None:
@@ -152,6 +186,7 @@ class ServedStage:
             req.source_time, now, self.xi(1), beta, avoid_drop=req.avoid_drop
         ):
             self.stats["dropped"] += 1
+            self.stats["dropped_dp1"] += 1
             u = now - req.source_time
             self._reject_upstream(req.event_id, u + self.xi(1) - beta, 0.0)
             return [StageResult(req.event_id, None, u, 0, dropped=True)]
@@ -198,6 +233,7 @@ class ServedStage:
         results: List[StageResult] = []
         for ev in dropped:
             self.stats["dropped"] += 1
+            self.stats["dropped_dp2"] += 1
             u_total = now - ev.header.source_arrival
             self._reject_upstream(ev.event_id, u_total + self.xi(b) - beta, ev.header.q_bar)
             results.append(StageResult(ev.event_id, None, u_total, 0, dropped=True))
@@ -230,6 +266,7 @@ class ServedStage:
                 0.0, u, pi, beta, avoid_drop=ev.header.avoid_drop
             ):
                 self.stats["dropped"] += 1
+                self.stats["dropped_dp3"] += 1
                 self._reject_upstream(ev.event_id, u + pi - beta, ev.header.q_bar)
                 results.append(StageResult(ev.event_id, None, u + pi, m, dropped=True))
             else:

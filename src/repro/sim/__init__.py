@@ -1,6 +1,15 @@
 """Discrete-event simulation of the many-camera network (paper §5 setup)."""
 
 from .cameras import CameraNetwork, EntityWalk, Frame
+from .dynamism import (
+    BandwidthCollapse,
+    CameraChurn,
+    ComputeSlowdown,
+    DynamismSpec,
+    DynamismTrace,
+    InputRateSpike,
+    fig9_collapse,
+)
 from .scenario import (
     ScenarioConfig,
     ScenarioResult,
@@ -14,9 +23,11 @@ from .sweep import AppCase, CaseRecord, SweepResult, SweepRunner
 from .world import WorldBundle, WorldKey, clear_world_cache, get_world, world_cache_stats
 
 __all__ = [
-    "AppCase", "CameraNetwork", "CaseRecord", "DiscreteEventSimulator",
-    "EntityWalk", "Frame", "NetworkModel", "ScenarioConfig",
-    "ScenarioResult", "SweepResult", "SweepRunner", "TrackingScenario",
-    "WorldBundle", "WorldKey", "clear_world_cache", "get_world", "linear_xi",
-    "make_scenario_cr", "va_passthrough", "world_cache_stats",
+    "AppCase", "BandwidthCollapse", "CameraChurn", "CameraNetwork",
+    "CaseRecord", "ComputeSlowdown", "DiscreteEventSimulator", "DynamismSpec",
+    "DynamismTrace", "EntityWalk", "Frame", "InputRateSpike", "NetworkModel",
+    "ScenarioConfig", "ScenarioResult", "SweepResult", "SweepRunner",
+    "TrackingScenario", "WorldBundle", "WorldKey", "clear_world_cache",
+    "fig9_collapse", "get_world", "linear_xi", "make_scenario_cr",
+    "va_passthrough", "world_cache_stats",
 ]

@@ -57,6 +57,7 @@ from repro.core.tracking import (
     TrackingLogic,
 )
 from .cameras import CameraNetwork, Frame
+from .dynamism import DynamismSpec, DynamismTrace
 from .simulator import DiscreteEventSimulator, NetworkModel
 from .world import WorldBundle, WorldKey, get_world
 
@@ -198,6 +199,11 @@ class ScenarioConfig:
     # tensors (bucket-padded through repro.kernels.dispatch).
     embed_dim: int = 0
     reid_threshold: float = 0.5
+    # Dynamism plane (§4.3–§4.5, Figs. 7/9): composable seeded perturbations
+    # (bandwidth collapse, compute stragglers, input spikes, camera churn)
+    # plus per-task telemetry + ground-truth tracking quality.  None keeps
+    # the scenario bit-identical to its undisturbed trajectory.
+    dynamism: Optional[DynamismSpec] = None
 
     # ------------------------------------------------------------------ #
     # App-compiler factories: the config is a preset-app description      #
@@ -289,6 +295,11 @@ class ScenarioResult:
     detections_on_time: int
     reid_matched: int = 0
     query_pushes: int = 0
+    # Dynamism plane outputs: the sampled telemetry trace and the
+    # ground-truth quality report (both None for undisturbed runs, keeping
+    # summary() — and the frozen goldens over it — unchanged).
+    trace: Optional[DynamismTrace] = None
+    quality: Optional[Dict[str, float]] = None
 
     @property
     def peak_active(self) -> int:
@@ -316,7 +327,7 @@ class ScenarioResult:
         return self.dropped / self.source_events if self.source_events else 0.0
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "source_events": self.source_events,
             "on_time": self.on_time,
             "delayed": self.delayed,
@@ -329,6 +340,13 @@ class ScenarioResult:
             "positives_generated": self.positives_generated,
             "positives_completed": self.positives_completed,
         }
+        # Dynamism-plane extras ride along only when the run carried a spec,
+        # so undisturbed summaries stay bit-identical to the frozen goldens.
+        if self.trace is not None:
+            out.update(self.trace.summary())
+        elif self.quality is not None:
+            out.update(self.quality)
+        return out
 
 
 class TrackingScenario:
@@ -393,8 +411,15 @@ class TrackingScenario:
         self.tl: TrackingLogic = self.app.tl
 
         network = NetworkModel()
-        if config.bandwidth_schedule is not None:
-            network.bandwidth_schedule = config.bandwidth_schedule
+        spec = config.dynamism
+        if spec is not None:
+            # Compose the dynamism plane's bandwidth perturbations over any
+            # explicit schedule the config carries (both may be None).
+            schedule = spec.bandwidth_schedule(config.bandwidth_schedule)
+        else:
+            schedule = config.bandwidth_schedule
+        if schedule is not None:
+            network.bandwidth_schedule = schedule
         # The static (src, dst) -> (latency, over-network) classification
         # depends only on the deployment shape, so scenarios sharing a world
         # share the memoized table too.
@@ -406,6 +431,25 @@ class TrackingScenario:
                 num_va, num_cr, self.deployment.num_nodes
             ),
         )
+        # Compute stragglers scale actual execution durations inside the
+        # engine; installed before compile_app so every Task (and the
+        # compiler's fusion decisions) sees the dynamic-xi regime.
+        if spec is not None:
+            self.sim.xi_multiplier = spec.xi_multiplier()
+        self._rate_mult = spec.rate_multiplier() if spec is not None else None
+        # Rate-window edges: a slowdown (factor < 1) stretches the tick
+        # interval, and an unclamped interval computed just before a window
+        # closes would overshoot it — or the end of the run — stalling the
+        # source clock for good.  Ticks are clamped to the next boundary.
+        self._rate_boundaries: List[float] = []
+        if self._rate_mult is not None:
+            bounds = set()
+            for p in spec.perturbations:
+                if hasattr(p, "rate_multiplier") and hasattr(p, "window"):
+                    for b in p.window():
+                        if 0.0 < b < config.duration_s:
+                            bounds.add(float(b))
+            self._rate_boundaries = sorted(bounds)
         self._reid_enabled = config.embed_dim > 0
         self._reid_query = (
             self.cameras.entity_embedding[None, :] if self._reid_enabled else None
@@ -427,6 +471,9 @@ class TrackingScenario:
         self.sink = self.compiled.sink
         self._seed_tl()
 
+        #: Simulation horizon: generation stops at duration_s; in-flight
+        #: events (and telemetry) drain until here.
+        self._horizon = config.duration_s + 3.0 * self.app.gamma
         self._stats_active: List[Tuple[float, int]] = []
         self._positives_generated = 0
         self._positives_completed = 0
@@ -434,6 +481,24 @@ class TrackingScenario:
         self._detections_on_time = 0
         self._pending_detections: List[Detection] = []
         self._source_events = 0
+
+        # ---- dynamism plane: telemetry, quality, churn ---------------- #
+        self._trace: Optional[DynamismTrace] = None
+        if spec is not None and spec.telemetry_period_s > 0:
+            self._trace = DynamismTrace(spec=spec, period_s=spec.telemetry_period_s)
+        self._quality_on = spec is not None and spec.quality
+        if self._quality_on:
+            # Ground truth: every (camera, tick) pair where the entity is
+            # inside the FOV — including cameras the TL left inactive, which
+            # is exactly what separates *track* recall from drop accounting.
+            self._truth_ids = np.arange(self.cameras.num_cameras, dtype=np.int64)
+            self._truth_pairs: Set[Tuple[int, float]] = set()
+            self._sink_positive_pairs: List[Tuple[int, float]] = []
+        self._churns = []
+        if spec is not None:
+            for i, ch in enumerate(spec.churns()):
+                rng = np.random.default_rng(ch.seed + 1009 * i + config.seed)
+                self._churns.append((ch, rng))
         # Active-set mirrors so the per-tick loops are O(active cameras),
         # not O(all cameras): the compiled app's `fc_active` tracks the FC
         # states that are *currently* active (control latency applied);
@@ -502,6 +567,8 @@ class TrackingScenario:
             self._positives_completed += 1
             if now - ev.header.source_arrival <= self.app.gamma:
                 self._detections_on_time += 1
+            if self._quality_on:
+                self._sink_positive_pairs.append((det.camera_id, det.timestamp))
         self._pending_detections.append(det)
 
     def _tl_tick(self) -> None:
@@ -530,6 +597,10 @@ class TrackingScenario:
         t = self.sim.time
         compiled = self.compiled
         fc_active = compiled.fc_active
+        if self._quality_on:
+            vis = self.cameras.visible_batch(self._truth_ids, t)
+            for c in np.nonzero(vis)[0]:
+                self._truth_pairs.add((int(c), t))
         if fc_active:
             # Batched sourcing: one position interpolation + one vectorized
             # FOV test for the whole active set (ascending camera order, same
@@ -581,17 +652,107 @@ class TrackingScenario:
                     fc.on_arrival(Event(header=header, key=cam, value=frame))
             self._positives_generated += n_pos
             self._source_events += len(frames)
-        if t + 1.0 / self.cfg.fps <= self.cfg.duration_s:
-            self.sim.schedule(1.0 / self.cfg.fps, self._frame_tick)
+        if self._rate_mult is None:
+            dt = 1.0 / self.cfg.fps
+        else:
+            # Input-rate spike: the source plane ticks faster while the
+            # multiplier is > 1 (flash-crowd input at the FC sources).
+            # Spec perturbations validate factor > 0; the floor guards
+            # custom multiplier objects against a stalled/reversed clock.
+            dt = 1.0 / (self.cfg.fps * max(self._rate_mult(t), 1e-9))
+            # Never overshoot the next window edge: the multiplier sampled
+            # *now* only holds until then (a sub-1 factor would otherwise
+            # skip past its own window's end, or the run's).
+            for b in self._rate_boundaries:
+                if b > t + 1e-9:
+                    if t + dt > b:
+                        dt = b - t
+                    break
+        if t + dt <= self.cfg.duration_s:
+            self.sim.schedule(dt, self._frame_tick)
+
+    # ------------------------------------------------------------------ #
+    # Dynamism plane ticks                                                #
+    # ------------------------------------------------------------------ #
+    def _sample_telemetry_now(self) -> None:
+        trace = self._trace
+        trace.times.append(self.sim.time)
+        trace.active_cameras.append(len(self.compiled.fc_active))
+        self.compiled.sample_telemetry(trace)
+
+    def _telemetry_tick(self) -> None:
+        self._sample_telemetry_now()
+        # Keep sampling through the drain window (run() horizon) so budget
+        # recovery after a perturbation closes is visible in the trace.
+        if self.sim.time + self._trace.period_s <= self._horizon:
+            self.sim.schedule(self._trace.period_s, self._telemetry_tick)
+
+    def _churn_tick(self, idx: int) -> None:
+        ch, rng = self._churns[idx]
+        now = self.sim.time
+        if ch.fraction > 0.0 and ch.t_start <= now < ch.t_end:
+            # Candidates: cameras the TL currently wants AND that are up.
+            target = sorted(self._ctrl_target & self.compiled.fc_active)
+            if target:
+                # Round up to one camera for any positive fraction;
+                # fraction == 0 is the undisturbed baseline of a sweep axis.
+                k = min(len(target), max(1, int(round(ch.fraction * len(target)))))
+                picks = rng.choice(len(target), size=k, replace=False)
+                for j in sorted(int(p) for p in picks):
+                    cam = target[j]
+                    self.compiled.set_fc_active(cam, False)
+                    self.sim.schedule(ch.outage_s, self._churn_restore, cam)
+        if now + ch.period_s <= min(ch.t_end, self.cfg.duration_s):
+            self.sim.schedule(ch.period_s, self._churn_tick, idx)
+
+    def _churn_restore(self, cam: int) -> None:
+        # The camera comes back only if the TL still wants it (otherwise the
+        # next TL delta would immediately deactivate it anyway).
+        if cam in self._ctrl_target:
+            self.compiled.set_fc_active(cam, True)
+
+    def _quality_report(self) -> Dict[str, float]:
+        truth = self._truth_pairs
+        detected = set(self._sink_positive_pairs)
+        tp = len(detected & truth)
+        return {
+            "truth_events": len(truth),
+            "track_recall": round(tp / len(truth), 4) if truth else 1.0,
+            "track_precision": round(tp / len(detected), 4) if detected else 1.0,
+        }
 
     # ------------------------------------------------------------------ #
     def run(self) -> ScenarioResult:
         cfg = self.cfg
         self.sim.schedule(0.0, self._frame_tick)
         self.sim.schedule(cfg.tl_update_period, self._tl_tick)
+        if self._trace is not None:
+            self.sim.schedule(0.0, self._telemetry_tick)
+        for idx, (ch, _) in enumerate(self._churns):
+            # First tick right at the window opening (not one period in), so
+            # windows shorter than period_s still perturb and the trace's
+            # pre/during split lines up with the first dropout.
+            self.sim.schedule_at(ch.t_start, self._churn_tick, idx)
         # Allow in-flight events to drain past the generation horizon.
-        self.sim.run(until=cfg.duration_s + 3.0 * self.app.gamma)
+        self.sim.run(until=self._horizon)
 
+        if self._trace is not None:
+            # Final sample after the drain: cumulative counters (drops,
+            # probes) now reconcile exactly with the ScenarioResult totals.
+            # If the last periodic tick already sampled this timestamp,
+            # replace it (same-time events may have processed *after* it)
+            # rather than appending a zero-width duplicate interval.
+            tr = self._trace
+            if tr.times and tr.times[-1] == self.sim.time:
+                tr.times.pop()
+                tr.active_cameras.pop()
+                for row in tr.series.values():
+                    for col in row.values():
+                        col.pop()
+            self._sample_telemetry_now()
+        quality = self._quality_report() if self._quality_on else None
+        if self._trace is not None:
+            self._trace.quality = quality
         compiled = self.compiled
         drops = compiled.drops_by_task()
         return ScenarioResult(
@@ -610,4 +771,6 @@ class TrackingScenario:
             detections_on_time=self._detections_on_time,
             reid_matched=self._reid_matched,
             query_pushes=compiled.query_pushes,
+            trace=self._trace,
+            quality=quality,
         )

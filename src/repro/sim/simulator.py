@@ -26,6 +26,14 @@ def _default_bandwidth_schedule(t: float) -> float:
     return 1.0
 
 
+def _hop_latency_is_man(src_host: str, dst_host: str) -> bool:
+    """Hop classification for *distinct* hosts (paper §5.1): only the
+    compute cluster (``node*`` / ``head``) shares a LAN; edge hosts are
+    separate sites, so any hop touching an edge host — including between
+    two distinct edge hosts (``edge3`` -> ``edge7``) — crosses the MAN."""
+    return src_host.startswith("edge") or dst_host.startswith("edge")
+
+
 @dataclass
 class NetworkModel:
     """Node-to-node transit: ``latency(src,dst) + bytes / bandwidth(t)``.
@@ -48,7 +56,7 @@ class NetworkModel:
         bw = self.lan_bandwidth_bps * max(self.bandwidth_schedule(t), 1e-9)
         latency = (
             self.man_latency_s
-            if src_host.startswith("edge") != dst_host.startswith("edge")
+            if _hop_latency_is_man(src_host, dst_host)
             else self.lan_latency_s
         )
         return latency + size_bytes * 8.0 / bw
@@ -67,6 +75,12 @@ class DiscreteEventSimulator(Scheduler):
         self._time = 0.0
         self.network = network or NetworkModel()
         self.host_of: Dict[str, str] = {}
+        # Optional (host, t) -> execution-duration multiplier installed by
+        # the dynamism plane (ComputeSlowdown).  Tasks consult it when
+        # charging *actual* execution time; the runtime's xi(b) estimates
+        # (drop decisions, batch deadlines) stay unscaled — a straggler is
+        # unannounced and the budget protocol must adapt through signals.
+        self._xi_multiplier: Optional[Callable[[str, float], float]] = None
         # (src, dst) -> (fixed latency, charged over the network?).  Host
         # assignment is static once the pipeline is built, so the
         # classification (IPC vs LAN vs MAN) never changes.  A caller may
@@ -98,6 +112,30 @@ class DiscreteEventSimulator(Scheduler):
         memoize their per-destination transit delay."""
         return self.network.bandwidth_schedule is _default_bandwidth_schedule
 
+    @property
+    def xi_is_static(self) -> bool:
+        """True when execution durations cannot vary over time (no compute
+        perturbation installed), letting the compiler keep its fused
+        streaming / fused-FC fast paths."""
+        return self._xi_multiplier is None
+
+    @property
+    def xi_multiplier(self) -> Optional[Callable[[str, float], float]]:
+        return self._xi_multiplier
+
+    @xi_multiplier.setter
+    def xi_multiplier(self, fn: Optional[Callable[[str, float], float]]) -> None:
+        # Tasks snapshot the multiplier at construction (hot-path: no
+        # per-event indirection), so installing one after the pipeline is
+        # built would silently scale nothing while xi_is_static flips —
+        # refuse loudly instead.
+        if fn is not None and self.tasks and self.tasks is not Scheduler.tasks:
+            raise RuntimeError(
+                "install xi_multiplier before building tasks on this "
+                "simulator — tasks snapshot it at construction"
+            )
+        self._xi_multiplier = fn
+
     def transit_delay(self, src: str, dst: str, size_bytes: float) -> float:
         ent = self._transit_cache.get((src, dst))
         if ent is None:
@@ -109,7 +147,7 @@ class DiscreteEventSimulator(Scheduler):
             else:
                 latency = (
                     net.man_latency_s
-                    if src_host.startswith("edge") != dst_host.startswith("edge")
+                    if _hop_latency_is_man(src_host, dst_host)
                     else net.lan_latency_s
                 )
                 ent = (latency, True)

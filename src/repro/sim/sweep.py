@@ -147,6 +147,17 @@ def _cost_hint(case) -> float:
     builds the world)."""
     cfg = _workload(case)
     ticks = cfg.duration_s * cfg.fps
+    dyn = getattr(cfg, "dynamism", None)
+    if dyn is not None:
+        # Input-rate spikes multiply the source tick count over their
+        # window — the actual cost driver for dynamism grid points.
+        for p in dyn.perturbations:
+            if hasattr(p, "rate_multiplier") and hasattr(p, "window"):
+                s, e = p.window()
+                s = max(0.0, min(s, cfg.duration_s))
+                e = min(e, cfg.duration_s)
+                if e > s:
+                    ticks += (p.rate_multiplier((s + e) / 2.0) - 1.0) * (e - s) * cfg.fps
     if cfg.tl == "base":
         per_tick = float(cfg.num_cameras)
     else:

@@ -49,6 +49,36 @@ def test_pipeline_smoke_writes_records(tmp_path):
         assert rec["run_s"] > 0 and rec["build_s"] >= 0
 
 
+def test_dynamism_smoke_writes_records_and_shows_recovery(tmp_path):
+    """The dynamism grid's acceptance contract: ``--only dynamism --smoke``
+    runs DB/SB/NOB under the bandwidth-collapse and compute-slowdown
+    perturbations deterministically at seed 0, records them, and the
+    DynamicBatcher's CR budget recovers (post within 10% of pre) where the
+    StaticBatcher's does not."""
+    out = tmp_path / "dynamism.json"
+    status = _run(["--only", "dynamism", "--smoke", "--mode", "serial",
+                   "--json", str(out)])
+    assert status == 0
+    data = json.loads(out.read_text())
+    cases = {r["case"]: r for r in data["records"] if r["bench"] == "dynamism"}
+    expected = {
+        f"{p}_{b}"
+        for p in ("bwcollapse", "cpuslow")
+        for b in ("DB-25", "SB-20", "NOB-25")
+    }
+    assert expected <= set(cases)
+
+    def recovery(case):
+        derived = dict(
+            kv.split("=", 1) for kv in cases[case]["derived"].split(";") if "=" in kv
+        )
+        return float(derived["beta_recovery"])
+
+    for perturb in ("bwcollapse", "cpuslow"):
+        assert recovery(f"{perturb}_DB-25") >= 0.9, perturb
+        assert recovery(f"{perturb}_SB-20") < 0.9, perturb
+
+
 def test_compare_gate_passes_against_fresh_records(tmp_path):
     out = tmp_path / "base.json"
     assert _run(["--only", "pipeline", "--smoke", "--mode", "serial",

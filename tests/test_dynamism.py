@@ -1,0 +1,330 @@
+"""Dynamism plane: perturbation composition, telemetry, tracking quality,
+and the frozen golden trace (satellite of the dynamism-plane PR).
+
+The golden digest below was recorded at this PR's commit for seed 0 and must
+replay bit-identically (mirroring the frozen-summary pattern in
+``tests/test_compile.py``): the trace is a pure function of (config, spec),
+so any drift in the event runtime, the budget protocol, the perturbation
+plumbing or the telemetry sampling changes it loudly.
+"""
+
+import math
+
+import pytest
+
+from repro.sim import (
+    BandwidthCollapse,
+    CameraChurn,
+    ComputeSlowdown,
+    DynamismSpec,
+    InputRateSpike,
+    ScenarioConfig,
+    TrackingScenario,
+    fig9_collapse,
+)
+
+# --------------------------------------------------------------------- #
+# The golden Fig.-9-style bandwidth-collapse run (seed 0): 300 cameras,   #
+# 150 s, collapse over [50, 90), dynamic batching, drops on.              #
+# --------------------------------------------------------------------- #
+GOLDEN_SPEC = DynamismSpec((BandwidthCollapse(50.0, 90.0, 2e-5),))
+GOLDEN_DIGEST = "1e90992d1844ad60402c31575e2bff056b00a8ecf6c1e117b6e65c8caaa8c977"
+GOLDEN_SUMMARY = {
+    "source_events": 1991, "on_time": 970, "delayed": 2, "dropped": 1019,
+    "delayed_frac": 0.0021, "dropped_frac": 0.5118,
+    "median_latency_s": 8.488, "p99_latency_s": 14.663, "peak_active": 41,
+    "positives_generated": 31, "positives_completed": 23,
+    "samples": 40, "beta_pre": 12.2133, "beta_low": 1.4281,
+    "beta_post": 14.9022, "beta_recovery": 1.2202, "peak_queue": 21,
+    "probes": 53, "truth_events": 31, "track_recall": 0.7419,
+    "track_precision": 1.0,
+}
+
+
+def _cfg(**kw):
+    base = dict(num_cameras=300, duration_s=150.0, seed=0, tl="bfs",
+                batching="dynamic", m_max=25)
+    base.update(kw)
+    return ScenarioConfig(**base)
+
+
+def _golden_cfg():
+    return _cfg(drops_enabled=True, avoid_drop_positives=True,
+                dynamism=GOLDEN_SPEC)
+
+
+@pytest.fixture(scope="module")
+def golden_run():
+    return TrackingScenario(_golden_cfg()).run()
+
+
+def test_golden_trace_bit_identical_replay(golden_run):
+    """The frozen seed-0 bandwidth-collapse trace replays bit-for-bit."""
+    assert golden_run.summary() == GOLDEN_SUMMARY
+    assert golden_run.trace.digest() == GOLDEN_DIGEST
+    # And a second independent run reproduces the digest (replayability is
+    # a property of the run, not of one lucky recording).
+    again = TrackingScenario(_golden_cfg()).run()
+    assert again.trace.digest() == GOLDEN_DIGEST
+
+
+def test_golden_trace_shows_collapse_drop_wave_and_recovery(golden_run):
+    """The qualitative Fig.-9 story, as the trace actually records it:
+
+    * the CR budget collapses (bootstrap-era, §4.5) and probes recover it —
+      the trace-wide ``low`` is a fraction of the settled pre-window value;
+    * the bandwidth window's effect is a *drop wave* — late events die at
+      the upstream drop points at well over the undisturbed rate (the
+      upstream drops shield CR, so its beta series stays flat in-window);
+    * the budget ends within 10% of its pre-perturbation value, and the
+      dynamic batcher grew batches well past streaming along the way.
+    """
+    trace = golden_run.trace
+    rec = trace.budget_recovery("CR")
+    assert rec["low"] < 0.2 * rec["pre"], "budget collapse + recovery missing"
+    assert rec["recovery"] >= 0.9, "dynamic batcher must recover its budget"
+    spec = trace.spec.perturbations[0]
+    in_window = trace.dropped_between(spec.t_start, spec.t_end)
+    before = trace.dropped_between(
+        spec.t_start - (spec.t_end - spec.t_start), spec.t_start
+    )
+    assert in_window > 1.5 * before, "collapse must cause a drop wave"
+    assert max(trace.mean_batch("CR")) > 5.0, "batch-size growth missing"
+    assert sum(
+        row["probes"][-1] for row in trace.series.values() if row["probes"]
+    ) > 0, "recovery must have been probe-driven"
+
+
+# --------------------------------------------------------------------- #
+# Composition                                                            #
+# --------------------------------------------------------------------- #
+def test_spec_multipliers_compose_multiplicatively():
+    spec = DynamismSpec((
+        BandwidthCollapse(10.0, 20.0, 0.5),
+        BandwidthCollapse(15.0, 30.0, 0.2),
+        ComputeSlowdown(10.0, 20.0, 3.0, hosts=("node0",)),
+        ComputeSlowdown(15.0, 30.0, 2.0),
+        InputRateSpike(5.0, 25.0, 4.0),
+    ))
+    bw = spec.bandwidth_schedule()
+    assert bw(5.0) == 1.0
+    assert bw(12.0) == 0.5
+    assert bw(17.0) == pytest.approx(0.1)   # overlap: 0.5 * 0.2
+    assert bw(25.0) == 0.2
+    xi = spec.xi_multiplier()
+    assert xi("node0", 17.0) == pytest.approx(6.0)  # 3.0 * 2.0
+    assert xi("node1", 17.0) == 2.0                  # host-filtered
+    assert xi("node0", 35.0) == 1.0
+    rate = spec.rate_multiplier()
+    assert rate(10.0) == 4.0 and rate(30.0) == 1.0
+    # Composition over an explicit base schedule (the config's own Fig. 9).
+    assert spec.bandwidth_schedule(lambda t: 0.5)(12.0) == pytest.approx(0.25)
+
+
+def test_empty_spec_installs_nothing():
+    spec = DynamismSpec()
+    assert spec.bandwidth_schedule() is None
+    assert spec.xi_multiplier() is None
+    assert spec.rate_multiplier() is None
+    assert spec.churns() == ()
+
+
+def test_fig9_collapse_helper():
+    spec = fig9_collapse()
+    assert spec.bandwidth_schedule()(299.0) == 1.0
+    assert spec.bandwidth_schedule()(301.0) == 0.03
+
+
+def test_undisturbed_run_carries_no_trace_or_extras():
+    res = TrackingScenario(_cfg(duration_s=30.0)).run()
+    assert res.trace is None and res.quality is None
+    assert "beta_recovery" not in res.summary()
+    assert "track_recall" not in res.summary()
+
+
+# --------------------------------------------------------------------- #
+# Individual perturbations through the compiled pipeline                  #
+# --------------------------------------------------------------------- #
+def test_compute_slowdown_inflates_latency():
+    base = TrackingScenario(_cfg(duration_s=60.0)).run()
+    slow = TrackingScenario(_cfg(
+        duration_s=60.0,
+        dynamism=DynamismSpec((ComputeSlowdown(0.0, math.inf, 20.0, hosts=("node",)),)),
+    )).run()
+    # Same workload (the walk and spotlight don't depend on xi)...
+    assert slow.source_events == base.source_events
+    # ...but every VA/CR execution takes 20x longer.
+    assert slow.median_latency > 3.0 * base.median_latency
+
+
+def test_compute_slowdown_disables_fusion_but_not_correctness():
+    cfg = _cfg(duration_s=60.0, dynamism=DynamismSpec(
+        (ComputeSlowdown(1e9, math.inf, 5.0),)  # window never opens
+    ))
+    sc = TrackingScenario(cfg)
+    assert not sc.compiled.fuse_fc  # dynamic-xi regime: fusion off
+    res = sc.run()
+    base = TrackingScenario(_cfg(duration_s=60.0)).run()
+    # A multiplier whose window never opens is identity: same counters.
+    assert res.source_events == base.source_events
+    assert res.on_time == base.on_time
+    assert res.delayed == base.delayed
+
+
+def test_input_rate_slowdown_resumes_after_window():
+    """A sub-1 rate factor stretches the tick interval; the tick must be
+    clamped to the window edge so sourcing resumes when it closes instead
+    of overshooting past the end of the run (a permanent stall)."""
+    base = TrackingScenario(_cfg(duration_s=150.0)).run()
+    slowed = TrackingScenario(_cfg(
+        duration_s=150.0,
+        dynamism=DynamismSpec((InputRateSpike(50.0, 60.0, 0.001),)),
+    )).run()
+    # The 10 s window goes quiet, but the other 140 s source normally.
+    assert slowed.source_events > 0.7 * base.source_events
+    assert max(t for t, _ in slowed.latencies) > 60.0, "sourcing never resumed"
+
+
+def test_xi_multiplier_installed_after_build_raises():
+    """Tasks snapshot the multiplier at construction; a late install would
+    silently scale nothing, so the simulator refuses it."""
+    sc = TrackingScenario(_cfg(duration_s=10.0))
+    with pytest.raises(RuntimeError):
+        sc.sim.xi_multiplier = lambda host, t: 2.0
+
+
+def test_input_rate_spike_raises_source_events():
+    base = TrackingScenario(_cfg(duration_s=60.0)).run()
+    spiked = TrackingScenario(_cfg(
+        duration_s=60.0,
+        dynamism=DynamismSpec((InputRateSpike(20.0, 40.0, 3.0),)),
+    )).run()
+    assert spiked.source_events > 1.5 * base.source_events
+
+
+def test_camera_churn_is_seeded_and_dents_the_active_set():
+    spec = DynamismSpec((CameraChurn(period_s=5.0, fraction=0.5,
+                                     outage_s=4.0, seed=3),))
+    cfg = _cfg(duration_s=60.0, dynamism=spec)
+    a = TrackingScenario(cfg).run()
+    b = TrackingScenario(cfg).run()
+    # Seeded churn is replayable...
+    assert a.trace.digest() == b.trace.digest()
+    assert a.summary() == b.summary()
+    # ...and actually takes cameras down: fewer sourced frames than the
+    # undisturbed run, and the entity is missed more often.
+    base = TrackingScenario(_cfg(duration_s=60.0)).run()
+    assert a.source_events < base.source_events
+    assert a.positives_generated <= base.positives_generated
+
+
+def test_perturbations_validate_at_construction():
+    with pytest.raises(ValueError):
+        InputRateSpike(factor=0.0)   # would stall the source clock
+    with pytest.raises(ValueError):
+        ComputeSlowdown(factor=-1.0)
+    with pytest.raises(ValueError):
+        BandwidthCollapse(factor=0.0)
+    with pytest.raises(ValueError):
+        CameraChurn(period_s=0.0)
+    with pytest.raises(ValueError):
+        CameraChurn(fraction=1.5)
+    with pytest.raises(ValueError):
+        CameraChurn(outage_s=-1.0)
+
+
+def test_camera_churn_zero_fraction_is_the_undisturbed_baseline():
+    """fraction=0 on a sweep axis must mean *no* churn, not one camera."""
+    base = TrackingScenario(_cfg(duration_s=60.0)).run()
+    zero = TrackingScenario(_cfg(
+        duration_s=60.0,
+        dynamism=DynamismSpec((CameraChurn(period_s=5.0, fraction=0.0),)),
+    )).run()
+    assert zero.source_events == base.source_events
+    assert zero.on_time == base.on_time
+
+
+def test_camera_churn_window_shorter_than_period_still_fires():
+    """The first churn tick lands at t_start, so a window narrower than
+    period_s darkens cameras exactly once instead of silently never."""
+    spec = DynamismSpec((CameraChurn(period_s=20.0, fraction=1.0,
+                                     outage_s=6.0, t_start=30.0, t_end=33.0),))
+    base = TrackingScenario(_cfg(duration_s=60.0)).run()
+    churned = TrackingScenario(_cfg(duration_s=60.0, dynamism=spec)).run()
+    assert churned.source_events < base.source_events
+    # The whole wanted set went dark at t=30: the active series dips to 0.
+    trace = churned.trace
+    dipped = [c for t, c in zip(trace.times, trace.active_cameras)
+              if 30.0 <= t < 36.0]
+    assert dipped and min(dipped) == 0
+
+
+def test_bandwidth_collapse_composes_with_config_schedule():
+    """A config-level Fig.-9 schedule and a spec-level collapse multiply."""
+    cfg = _cfg(
+        duration_s=30.0,
+        bandwidth_schedule=lambda t: 0.5,
+        dynamism=DynamismSpec((BandwidthCollapse(0.0, math.inf, 0.5),),
+                              telemetry_period_s=0.0, quality=False),
+    )
+    sc = TrackingScenario(cfg)
+    assert sc.sim.network.bandwidth_schedule(10.0) == pytest.approx(0.25)
+    assert not sc.sim.transit_is_static
+
+
+# --------------------------------------------------------------------- #
+# Telemetry + quality harness                                            #
+# --------------------------------------------------------------------- #
+def test_telemetry_samples_every_module_and_cadence(golden_run):
+    trace = golden_run.trace
+    cfg = _golden_cfg()
+    names = set(trace.series)
+    assert {f"VA-{i}" for i in range(cfg.num_va)} <= names
+    assert {f"CR-{i}" for i in range(cfg.num_cr)} <= names
+    assert "UV" in names and "FC*" in names
+    n = len(trace.times)
+    assert n == len(trace.active_cameras)
+    for row in trace.series.values():
+        assert all(len(col) == n for col in row.values())
+    # Cadence: strictly increasing sample times (the final drain sample
+    # replaces, never duplicates, a same-timestamp tick), 5 s apart.
+    deltas = [round(b - a, 6) for a, b in zip(trace.times, trace.times[1:])]
+    assert all(0.0 < d <= 5.0 for d in deltas)
+    # Cumulative counters never decrease.
+    for row in trace.series.values():
+        for fld in ("dp1", "dp2", "dp3", "probes", "accepts", "rejects",
+                    "batches", "executed"):
+            col = row[fld]
+            assert all(x <= y for x, y in zip(col, col[1:]))
+
+
+def test_quality_metrics_without_drops_match_completion_accounting():
+    """With drops off and a pass-through pipeline every ground-truth frame
+    the spotlight sourced completes, so recall is completed/truth and the
+    preset CR (no false positives) gives precision 1.0."""
+    res = TrackingScenario(_cfg(
+        duration_s=90.0,
+        dynamism=DynamismSpec(telemetry_period_s=0.0),
+    )).run()
+    assert res.trace is None and res.quality is not None
+    q = res.quality
+    assert q["track_precision"] == 1.0
+    assert q["truth_events"] >= res.positives_generated
+    assert q["track_recall"] == pytest.approx(
+        res.positives_completed / q["truth_events"], abs=1e-4
+    )
+
+
+def test_telemetry_only_spec_keeps_trajectory_identical():
+    """A spec with no perturbations only *observes*: every counter of the
+    undisturbed run is reproduced exactly (the telemetry tick must not
+    perturb event ordering)."""
+    base = TrackingScenario(_cfg(duration_s=60.0)).run()
+    observed = TrackingScenario(_cfg(
+        duration_s=60.0, dynamism=DynamismSpec()
+    )).run()
+    for key in ("source_events", "on_time", "delayed", "dropped",
+                "positives_generated", "positives_completed"):
+        assert base.summary()[key] == observed.summary()[key], key
+    assert observed.trace is not None
+    assert observed.trace.summary()["samples"] > 0

@@ -39,6 +39,8 @@ def test_quickstart_runs_composed_app_end_to_end():
     out = _run_example("quickstart.py")
     assert "Composed app1-missing-person" in out
     assert "OK: all events within gamma" in out
+    # The dynamism epilogue: perturbed run with budget recovery + quality.
+    assert "OK: budget recovered after the collapse." in out
 
 
 def test_apps_executes_all_four_table1_apps():

@@ -1,0 +1,107 @@
+"""Pipeline invariants under drops (satellite of the dynamism-plane PR):
+
+* no event is ever executed (as a normal event) after being dropped;
+* every probe emitted at a drop point traverses the full path to the sink;
+* the telemetry trace's cumulative drop counters reconcile *exactly* with
+  the ``ScenarioResult`` totals, per task and per drop point, across the
+  base/bfs/wbfs/prob presets.
+"""
+
+import itertools
+
+import pytest
+
+from repro.core.pipeline import Task
+from repro.sim import DynamismSpec, ScenarioConfig, TrackingScenario
+
+
+def _overloaded_cfg(tl, **kw):
+    """Constrained deployment (cf. Fig. 11) so drops actually happen."""
+    base = dict(
+        num_cameras=200 if tl == "base" else 400,
+        duration_s=90.0,
+        seed=0,
+        tl=tl,
+        tl_peak_speed=7.0,
+        num_va=3,
+        num_cr=3,
+        batching="dynamic",
+        m_max=25,
+        drops_enabled=True,
+    )
+    base.update(kw)
+    return ScenarioConfig(**base)
+
+
+PRESETS = ["base", "bfs", "wbfs", "prob"]
+
+
+@pytest.mark.parametrize("tl", PRESETS)
+def test_no_execution_after_drop_and_probes_reach_sink(tl, monkeypatch):
+    seq = itertools.count()
+    dropped_at = {}   # event_id -> seq of its drop
+    violations = []
+
+    orig_drop = Task._on_drop
+    orig_finish = Task._finish_batch
+
+    def logging_drop(self, ev, epsilon, downstream=""):
+        dropped_at[ev.header.event_id] = next(seq)
+        return orig_drop(self, ev, epsilon, downstream=downstream)
+
+    def logging_finish(self, batch, exec_start, exec_dur):
+        s = next(seq)
+        for pe in batch:
+            h = pe.event.header
+            if not h.is_probe and dropped_at.get(h.event_id, s + 1) < s:
+                violations.append((self.name, h.event_id))
+        return orig_finish(self, batch, exec_start, exec_dur)
+
+    monkeypatch.setattr(Task, "_on_drop", logging_drop)
+    monkeypatch.setattr(Task, "_finish_batch", logging_finish)
+
+    sc = TrackingScenario(_overloaded_cfg(tl))
+    res = sc.run()
+    assert res.dropped > 0, "overload preset must actually drop"
+    assert not violations, f"events executed after being dropped: {violations[:5]}"
+
+    # Every emitted probe completed the path to the sink (§4.5.2: probes
+    # are un-droppable, so after the drain none may be missing).
+    emitted = sum(t.stats.probes for t in sc.compiled.all_tasks())
+    assert emitted > 0, "probe machinery never engaged"
+    assert sc.sink.probes_seen == emitted
+
+
+@pytest.mark.parametrize("tl", PRESETS)
+def test_telemetry_drop_counts_reconcile_with_result(tl):
+    """Final cumulative dp1+dp2+dp3 per task in the trace == the result's
+    drops_by_task, and their sum == ScenarioResult.dropped."""
+    cfg = _overloaded_cfg(tl, dynamism=DynamismSpec())  # observe-only spec
+    sc = TrackingScenario(cfg)
+    res = sc.run()
+    trace = res.trace
+    assert res.dropped > 0
+
+    traced = {}
+    for name in trace.series:
+        if name in ("UV", "FC*"):
+            continue
+        total = trace.dropped_total(name)
+        if total:
+            traced[name] = total
+    # FC drops (if any) are traced in aggregate.
+    fc_traced = trace.dropped_total("FC*")
+    fc_result = sum(v for k, v in res.drops_by_task.items() if k.startswith("FC"))
+    assert fc_traced == fc_result
+    va_cr_result = {
+        k: v for k, v in res.drops_by_task.items() if not k.startswith("FC")
+    }
+    assert traced == va_cr_result
+    assert sum(traced.values()) + fc_traced == res.dropped
+    # Per-drop-point split is internally consistent too: each sampled
+    # cumulative column ends at the task's stats counter.
+    for t in sc.compiled.va_tasks + sc.compiled.cr_tasks:
+        row = trace.series[t.name]
+        assert row["dp1"][-1] == t.stats.dropped_dp1
+        assert row["dp2"][-1] == t.stats.dropped_dp2
+        assert row["dp3"][-1] == t.stats.dropped_dp3

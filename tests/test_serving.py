@@ -97,6 +97,29 @@ class TestServedStage:
         done = (res or []) + (stage.flush() or [])
         assert all(not r.dropped for r in done)
 
+    def test_telemetry_snapshot_mirrors_dynamism_trace_fields(self):
+        """ServedStage exposes the same telemetry row the discrete-event
+        plane's DynamismTrace samples (budget, queue, the three drop-point
+        counters, signal counters) — one tracing surface for both planes."""
+        from repro.sim.dynamism import TRACE_FIELDS
+
+        stage = self.make_stage()
+        t0 = stage.telemetry()
+        assert set(t0) == set(TRACE_FIELDS)
+        assert t0["dp1"] == t0["dp2"] == t0["dp3"] == 0
+        # A DP1 drop shows up in the split AND keeps the "dropped" total.
+        stage.budget.set_budget(0.01)
+        stage.submit(StageRequest(np.zeros(64, np.float32),
+                                  source_time=stage.clock() - 10.0))
+        t1 = stage.telemetry()
+        assert t1["dp1"] == 1 and stage.stats["dropped"] == 1
+        # Signals land in the counters the trace samples.
+        stage.on_accept(event_id=123, epsilon=1.0, xi_bar=0.5)
+        stage.on_reject(event_id=124, epsilon=1.0, q_bar=0.5)
+        t2 = stage.telemetry()
+        assert t2["accepts"] == 1 and t2["rejects"] == 1
+        assert t2["beta"] == stage.budget.min_budget()
+
 
 def test_reid_match_pipeline():
     tower = init_reid_tower(jax.random.PRNGKey(2), d_in=32, d_embed=16)

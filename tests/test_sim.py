@@ -83,3 +83,44 @@ def test_clock_skew_statistically_invariant_with_drops():
     assert abs(a.source_events - b.source_events) <= 0.2 * max(a.source_events, 1)
     assert a.delayed_fraction < 0.05 and b.delayed_fraction < 0.05
     assert abs(a.dropped_fraction - b.dropped_fraction) < 0.15
+
+
+# --------------------------------------------------------------------- #
+# Network-model host classification (paper §5.1 topology)                 #
+# --------------------------------------------------------------------- #
+def test_transit_delay_host_classification():
+    """IPC / LAN / MAN hop classification: same host is IPC; distinct
+    cluster hosts (node*/head) share the LAN; any hop touching an edge host
+    crosses the MAN — *including two distinct edge sites* (edge3 -> edge7),
+    which used to be misclassified as LAN because both names start with
+    "edge"."""
+    from repro.sim.simulator import DiscreteEventSimulator, NetworkModel
+
+    net = NetworkModel()
+    cases = [
+        # (src, dst, expected latency)
+        ("edge3", "edge3", net.ipc_latency_s),   # IPC: same host
+        ("node2", "node2", net.ipc_latency_s),
+        ("node0", "node7", net.lan_latency_s),   # LAN: distinct cluster hosts
+        ("node4", "head", net.lan_latency_s),
+        ("head", "node4", net.lan_latency_s),
+        ("edge3", "node1", net.man_latency_s),   # MAN: edge <-> cluster
+        ("node1", "edge3", net.man_latency_s),
+        ("edge3", "edge7", net.man_latency_s),   # MAN: distinct edge sites
+        ("edge7", "edge3", net.man_latency_s),
+        ("edge3", "head", net.man_latency_s),
+    ]
+    for src, dst, latency in cases:
+        expected = latency if src == dst else latency + 2900 * 8.0 / net.lan_bandwidth_bps
+        assert net.transit_delay(src, dst, 2900, 0.0) == pytest.approx(expected), (src, dst)
+
+    # The simulator's cached classification agrees with the network model.
+    sim = DiscreteEventSimulator(net)
+    for src, dst, _ in cases:
+        assert sim.transit_delay(src, dst, 2900) == pytest.approx(
+            net.transit_delay(src, dst, 2900, 0.0)
+        ), (src, dst)
+    # And the cache serves the same answer twice.
+    assert sim.transit_delay("edge3", "edge7", 2900) == pytest.approx(
+        net.man_latency_s + 2900 * 8.0 / net.lan_bandwidth_bps
+    )
