@@ -1,0 +1,31 @@
+"""repro: a growing reproduction of the Anveshak many-camera tracking
+platform on a JAX/Pallas stack.
+
+Subpackages are imported explicitly (``repro.core``, ``repro.sim``,
+``repro.kernels``, ``repro.serving``, ``repro.query``, ...); this root only
+lazily re-exports the multi-query tenancy plane so
+``from repro import MultiQueryScenario`` works without importing the whole
+stack at startup (PEP 562).
+"""
+
+_QUERY_EXPORTS = (
+    "AdmissionController",
+    "AdmissionPolicy",
+    "MultiQueryResult",
+    "MultiQueryScenario",
+    "QueryRegistry",
+    "QuerySpec",
+    "QueryState",
+    "normalize_queries",
+    "run_queries_serial",
+)
+
+__all__ = list(_QUERY_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _QUERY_EXPORTS:
+        from repro import query
+
+        return getattr(query, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

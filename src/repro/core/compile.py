@@ -399,6 +399,10 @@ class CompiledApp:
         # QF state (entity query + whatever the QF logic accumulates).
         self.qf_state: Dict[str, Any] = {"entity_query": app.entity_query}
         self.query_pushes = 0
+        # Multi-query tenancy (repro.query): one drop observer shared by
+        # every task of the DAG — including FCs materialized after
+        # install_drop_hook() was called (see make_fc).
+        self._drop_hook: Optional[Callable[[Event, int, float], None]] = None
 
         self._build()
 
@@ -563,6 +567,7 @@ class CompiledApp:
         # sub-millisecond, so arrival-time state reads match finish-time
         # reads: safe to fuse the execute+transmit hops (see pipeline.py).
         t.fuse_streaming = not self.deployment.drops_enabled and self._fuse_ok
+        t.on_drop_hook = self._drop_hook
         self.fc_tasks[cam] = t
         sim.host_of[t.name] = f"edge{cam}"
         return t
@@ -616,6 +621,21 @@ class CompiledApp:
             t.state["entity_query"] = query
         for t in self.cr_tasks:
             t.state["entity_query"] = query
+
+    # ------------------------------------------------------------------ #
+    # Multi-query tenancy: per-query drop charging                        #
+    # ------------------------------------------------------------------ #
+    def install_drop_hook(
+        self, hook: Optional[Callable[[Event, int, float], None]]
+    ) -> None:
+        """Install ``hook(ev, point, epsilon)`` on every task of the DAG
+        (and every FC materialized later), fired once per dropped event at
+        each of the three drop points.  The query plane uses it to charge
+        drops to each query tagged on the event's ``query_mask`` — per
+        query, not globally.  Pass ``None`` to uninstall."""
+        self._drop_hook = hook
+        for t in self.all_tasks():
+            t.on_drop_hook = hook
 
     # ------------------------------------------------------------------ #
     # Telemetry (dynamism plane)                                          #

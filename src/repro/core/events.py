@@ -180,15 +180,21 @@ class Event:
     ``key`` is typically the camera ID; ``value`` the frame / detections.
     ``batch_slowest`` is set by the runtime on the slowest event of a batch
     so the sink can generate accept signals (§4.5.2).
+    ``query_mask`` is the multi-query tenancy tag (``repro.query``): a bit
+    per live tracking query interested in this event at source time.  0 (the
+    default everywhere outside a multi-query run) means "untagged"; the
+    runtime's 1:1 fast paths reuse the event object, so the tag survives
+    value transforms without any per-hop copying.
     """
 
-    __slots__ = ("header", "key", "value", "batch_slowest")
+    __slots__ = ("header", "key", "value", "batch_slowest", "query_mask")
 
     def __init__(self, header: EventHeader, key: Any, value: Any = None) -> None:
         self.header = header
         self.key = key
         self.value = value
         self.batch_slowest = False
+        self.query_mask = 0
 
     def __repr__(self) -> str:
         return f"Event(header={self.header!r}, key={self.key!r}, value={self.value!r})"

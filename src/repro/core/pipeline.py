@@ -177,6 +177,12 @@ class Task:
         # Fused streaming (opt-in, see ``fuse_streaming``): collapse the
         # execute->transmit pair into a single scheduled downstream arrival.
         self.fuse_streaming = False
+        # Multi-query tenancy (repro.query): optional observer invoked once
+        # per dropped event as ``hook(ev, point, epsilon)`` with the drop
+        # point (1/2/3) — lets the query plane charge a drop to every query
+        # tagged on the event *before* the header is recycled.  None (the
+        # default) costs a single attribute test on the drop cold path only.
+        self.on_drop_hook: Optional[Callable[[Event, int, float], None]] = None
         self._xi1 = xi(1)
         self._busy_until = -math.inf
         self._drain_pending = False
@@ -276,7 +282,7 @@ class Task:
             ):
                 self.stats.dropped_dp1 += 1
                 u = now_local - header.source_arrival
-                self._on_drop(ev, epsilon=u + self.xi(1) - beta)
+                self._on_drop(ev, epsilon=u + self.xi(1) - beta, point=1)
                 return
             deadline = header.source_arrival + beta
         else:
@@ -357,7 +363,7 @@ class Task:
                         pe = pe_by_id[ev.header.event_id]
                         u = pe.arrival - ev.header.source_arrival
                         q = now_local - pe.arrival
-                        self._on_drop(ev, epsilon=u + q + xi_b - beta)
+                        self._on_drop(ev, epsilon=u + q + xi_b - beta, point=2)
                     if not retained_evs:
                         continue
                     retained_pes = [pe_by_id[ev.header.event_id] for ev in retained_evs]
@@ -628,7 +634,7 @@ class Task:
                 avoid_drop=ev.header.avoid_drop or ev.header.is_probe,
             ):
                 self.stats.dropped_dp3 += 1
-                self._on_drop(ev, epsilon=u + pi - beta, downstream=dst_name)
+                self._on_drop(ev, epsilon=u + pi - beta, downstream=dst_name, point=3)
                 return
         static = getattr(self.sim, "transit_is_static", False)
         delay = self._transit_memo.get(dst_name) if static else None
@@ -649,9 +655,16 @@ class Task:
     # ------------------------------------------------------------------ #
     # Signals (§4.5)                                                     #
     # ------------------------------------------------------------------ #
-    def _on_drop(self, ev: Event, epsilon: float, downstream: str = "") -> None:
+    def _on_drop(
+        self, ev: Event, epsilon: float, downstream: str = "", point: int = 0
+    ) -> None:
         self._drop_count += 1
         header = ev.header
+        hook = self.on_drop_hook
+        if hook is not None:
+            # Fire while the event (and its header) is still intact; the
+            # hook must not retain either — the header is recycled below.
+            hook(ev, point, epsilon)
         sig = RejectSignal(
             event_id=header.event_id,
             epsilon=max(epsilon, 0.0),

@@ -40,7 +40,68 @@ __all__ = [
     "TLBFS",
     "TLWBFS",
     "TLProbabilistic",
+    "multi_source_spotlight",
 ]
+
+
+def multi_source_spotlight(
+    network: RoadNetwork,
+    camera_vertices: Dict[int, int],
+    sources: Sequence[int],
+    radii: Sequence[float],
+    *,
+    coverage: Optional[float] = None,
+) -> List[Set[int]]:
+    """Per-source spotlight camera sets via **one** batched multi-source
+    ``spotlight_ball`` relaxation (bucket-padded through
+    ``repro.kernels.dispatch``, so the dense min-plus adjacency stays
+    device-resident and one jit compile serves every bucket shape).
+
+    ``sources``/``radii`` give each query's ball (source vertex, radius in
+    metres).  With ``coverage=None`` each set is *every* camera inside the
+    ball — bitwise equal to a per-source Dijkstra ball, which is what makes
+    the fused multi-query path bit-exact against per-query serial runs.
+    With ``coverage=c`` each set is the smallest likelihood-mass cover
+    (:class:`TLProbabilistic`'s activation rule), vectorized per source.
+
+    This is the single multi-source ball implementation shared by
+    :meth:`TLProbabilistic.spotlight_multi` and the multi-query tenancy
+    plane's union spotlight (``repro.query``).
+    """
+    import numpy as np
+
+    from repro.kernels import dispatch
+
+    if len(sources) == 0:
+        return []
+    indptr, indices, weights = network.csr()
+    src = np.asarray(sources, dtype=np.int32)
+    rad = np.asarray(radii, dtype=np.float32)
+    dists = np.asarray(
+        dispatch.spotlight_ball(indptr, indices, weights, src, rad)
+    )  # (Q, V); inf outside each ball
+    cam_ids = np.fromiter(camera_vertices.keys(), dtype=np.int64)
+    cam_verts = np.fromiter(camera_vertices.values(), dtype=np.int64)
+    degrees = np.diff(indptr).astype(np.float64)
+    out: List[Set[int]] = []
+    for qi in range(len(src)):
+        d = dists[qi, cam_verts]
+        inside = np.isfinite(d)
+        if not inside.any():
+            out.append(set())
+            continue
+        if coverage is None:
+            out.append({int(c) for c in cam_ids[inside]})
+            continue
+        radius = float(rad[qi])
+        scale = max(radius, 1.0)
+        deg = np.maximum(degrees[cam_verts[inside]], 1.0)
+        mass = np.exp(-2.0 * d[inside].astype(np.float64) / scale) / deg
+        order = np.argsort(-mass, kind="stable")
+        csum = np.cumsum(mass[order])
+        cut = int(np.searchsorted(csum, coverage * csum[-1])) + 1
+        out.append({int(c) for c in cam_ids[inside][order[:cut]]})
+    return out
 
 
 @dataclass(slots=True)
@@ -297,39 +358,19 @@ class TLProbabilistic(_SpotlightTL):
         return chosen
 
     def _spotlight_multi_kernel(self, now: float) -> Set[int]:
-        """Batched path: one bucket-padded ``spotlight_ball`` relaxation for
-        all entities' balls over the CSR graph (dispatched through
-        ``repro.kernels.dispatch`` so the dense adjacency stays
-        device-resident and jit caches are shared across scenarios), then
-        vectorized coverage selection."""
-        import numpy as np
-
-        from repro.kernels import dispatch
-
-        indptr, indices, weights = self.network.csr()
+        """Batched path: delegate to the shared multi-source ball
+        implementation (:func:`multi_source_spotlight`) — one bucket-padded
+        ``spotlight_ball`` relaxation for all entities' balls, then
+        vectorized per-entity coverage selection, unioned."""
         items = list(self.entities.items())
-        sources = np.asarray([v for _, (v, _) in items], dtype=np.int32)
-        radii = np.asarray(
-            [self._entity_radius(t, now) for _, (_, t) in items], dtype=np.float32
+        per_entity = multi_source_spotlight(
+            self.network,
+            self.camera_vertices,
+            [v for _, (v, _) in items],
+            [self._entity_radius(t, now) for _, (_, t) in items],
+            coverage=self.coverage,
         )
-        dists = np.asarray(
-            dispatch.spotlight_ball(indptr, indices, weights, sources, radii)
-        )  # (Q, V); inf outside each ball
-        cam_ids = np.fromiter(self.camera_vertices.keys(), dtype=np.int64)
-        cam_verts = np.fromiter(self.camera_vertices.values(), dtype=np.int64)
-        degrees = np.diff(indptr).astype(np.float64)
         chosen: Set[int] = set()
-        for qi in range(len(items)):
-            d = dists[qi, cam_verts]
-            inside = np.isfinite(d)
-            if not inside.any():
-                continue
-            radius = float(radii[qi])
-            scale = max(radius, 1.0)
-            deg = np.maximum(degrees[cam_verts[inside]], 1.0)
-            mass = np.exp(-2.0 * d[inside].astype(np.float64) / scale) / deg
-            order = np.argsort(-mass, kind="stable")
-            csum = np.cumsum(mass[order])
-            cut = int(np.searchsorted(csum, self.coverage * csum[-1])) + 1
-            chosen.update(int(c) for c in cam_ids[inside][order[:cut]])
+        for cams in per_entity:
+            chosen |= cams
         return chosen

@@ -41,6 +41,7 @@ __all__ = [
     "bucket",
     "spotlight_ball",
     "reid_match",
+    "reid_match_multi",
     "stats",
     "reset_stats",
     "jit_cache_sizes",
@@ -50,6 +51,7 @@ BUCKET_MIN = 8
 
 _STATS = {
     "reid_calls": 0,
+    "reid_multi_calls": 0,
     "ball_calls": 0,
     "device_cache_hits": 0,
     "device_cache_misses": 0,
@@ -322,11 +324,109 @@ def reid_match(gallery, queries, *, threshold: float = 0.5):
     return scores[:N], best[:N], matched[:N]
 
 
+# --------------------------------------------------------------------- #
+# Query-major batched re-id (multi-query tenancy plane)                   #
+# --------------------------------------------------------------------- #
+def _make_reid_multi_padded():
+    import jax
+    import jax.numpy as jnp
+
+    donate = (0, 2) if jax.default_backend() == "tpu" else ()
+
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def reid_multi_padded(gallery, queries, mask, threshold):
+        # Per-(candidate, query) cosine similarity with a broadcast
+        # multiply-then-reduce over the feature axis: every sim[n, q] is an
+        # independent D-length reduction whose arithmetic does not depend on
+        # how many other rows/queries share the bucket — which is what makes
+        # the fused call bit-exact against per-query serial dispatches.
+        g = gallery.astype(jnp.float32)
+        q = queries.astype(jnp.float32)
+        g = g / jnp.maximum(jnp.linalg.norm(g, axis=-1, keepdims=True), 1e-6)
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-6)
+        sim = jnp.sum(g[:, None, :] * q[None, :, :], axis=-1)  # (Nb, Qb)
+        sim = jnp.where(mask, sim, -jnp.inf)
+        return sim, jnp.logical_and(mask, sim >= threshold)
+
+    return reid_multi_padded
+
+
+_REID_MULTI_PADDED = None
+
+
+def reid_match_multi(gallery, queries, *, mask=None, threshold: float = 0.5):
+    """Query-major batched re-id: ``(scores, matched)`` of shape ``(N, Q)``
+    for an ``(N, D)`` gallery against ``(Q, D)`` query embeddings.
+
+    ``mask`` (optional ``(N, Q)`` bool) is the tenancy filter: pair
+    ``(n, q)`` is only evaluated when ``mask[n, q]`` — masked-out pairs get
+    ``-inf`` score and ``matched=False``.  Both axes are padded to
+    power-of-two buckets (pad pairs masked out), so a whole multi-query
+    sweep compiles this kernel at most once per bucket shape.
+
+    Bit-exactness contract: each ``sim[n, q]`` is an independent
+    normalize-then-reduce over ``D``, so real entries are **bitwise** equal
+    to a per-query serial call (``Q=1``) with the same gallery rows — unlike
+    :func:`reid_match`, no GEMM re-blocking is involved.  The fused
+    multi-query VA stage relies on this to stay bit-identical to N
+    independent single-query runs.
+    """
+    global _REID_MULTI_PADDED
+    import jax.numpy as jnp
+
+    _STATS["reid_multi_calls"] += 1
+    gallery = np.asarray(gallery, dtype=np.float32)
+    if gallery.ndim != 2:
+        raise ValueError(f"gallery must be (N, D), got {gallery.shape}")
+    N, D = gallery.shape
+    queries_np = np.asarray(queries, dtype=np.float32)
+    if queries_np.ndim != 2 or queries_np.shape[1] != D:
+        raise ValueError(f"queries must be (Q, {D}), got {queries_np.shape}")
+    Q = queries_np.shape[0]
+    if mask is None:
+        mask_np = np.ones((N, Q), dtype=bool)
+    else:
+        mask_np = np.asarray(mask, dtype=bool)
+        if mask_np.shape != (N, Q):
+            raise ValueError(f"mask must be ({N}, {Q}), got {mask_np.shape}")
+    nb, qb = bucket(N), bucket(Q)
+    g_pad = np.zeros((nb, D), dtype=np.float32)
+    g_pad[:N] = gallery
+    m_pad = np.zeros((nb, qb), dtype=bool)
+    m_pad[:N, :Q] = mask_np
+
+    def _pad_queries(_q):
+        q_pad = np.zeros((qb, D), dtype=np.float32)
+        q_pad[:Q] = queries_np
+        return q_pad
+
+    if isinstance(queries, np.ndarray):
+        # The live-query block is long-lived (the query registry caches one
+        # array per live set): pad once, keep device-resident by identity —
+        # same contract as the single-query reid_match query block.
+        q_dev = _device_resident(queries, transform=_pad_queries)
+    else:
+        q_dev = jnp.asarray(_pad_queries(queries_np))
+
+    if _REID_MULTI_PADDED is None:
+        _REID_MULTI_PADDED = _make_reid_multi_padded()
+    _note_shape(("reid_multi", nb, qb, D))
+    scores, matched = _REID_MULTI_PADDED(
+        jnp.asarray(g_pad), q_dev, jnp.asarray(m_pad),
+        jnp.float32(threshold),
+    )
+    return scores[:N, :Q], matched[:N, :Q]
+
+
 def jit_cache_sizes() -> Dict[str, int]:
     """Number of distinct compilations held by each padded kernel (0 when
     the kernel has not been dispatched yet)."""
     sizes = {}
-    for name, fn in (("ball", _BALL_PADDED), ("reid", _REID_PADDED)):
+    for name, fn in (
+        ("ball", _BALL_PADDED),
+        ("reid", _REID_PADDED),
+        ("reid_multi", _REID_MULTI_PADDED),
+    ):
         if fn is None:
             sizes[name] = 0
             continue

@@ -1,0 +1,31 @@
+"""Multi-query tenancy plane: concurrent tracking queries over one shared
+camera network.
+
+The platform's unit of service becomes a *set* of live tracking queries:
+one pipeline, one world, one discrete-event clock — N spotlights.  See
+:mod:`repro.query.scenario` for the fused driver,
+:mod:`repro.query.registry` for per-query state/lifecycle, and
+:mod:`repro.query.admission` for load shedding.
+"""
+
+from .admission import AdmissionController, AdmissionPolicy
+from .registry import QUERY_STATES, QueryRegistry, QuerySpec, QueryState
+from .scenario import (
+    MultiQueryResult,
+    MultiQueryScenario,
+    normalize_queries,
+    run_queries_serial,
+)
+
+__all__ = [
+    "QUERY_STATES",
+    "AdmissionController",
+    "AdmissionPolicy",
+    "MultiQueryResult",
+    "MultiQueryScenario",
+    "QueryRegistry",
+    "QuerySpec",
+    "QueryState",
+    "normalize_queries",
+    "run_queries_serial",
+]

@@ -1,0 +1,131 @@
+"""Admission control: cap live queries while the shared pipeline is loaded.
+
+The platform's shared resource is the CR tier: every live query's spotlight
+adds cameras to the union the pipeline must serve, and the CR completion
+budget ``beta`` (paper §4.5) is the live health signal the dynamism plane
+already samples (:class:`~repro.sim.dynamism.DynamismTrace`, PR 4).  The
+admission controller closes the loop: when the CR budget degrades past a
+threshold, new query submissions are **queued** (or hard-rejected) instead
+of admitted, and queued queries are re-evaluated on the control cadence once
+the budget recovers — so admitted queries keep their QoS instead of everyone
+collapsing together.
+
+Fairness: drops are charged per query (the three drop points fire the
+compiled app's drop hook with the event's ``query_mask``), so the
+controller's view of "who is hurting" is per-query, not global; the
+per-query virtual-task budgets (:meth:`QueryState.beta`) expose it.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+__all__ = ["AdmissionPolicy", "AdmissionController"]
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """Operator knobs for the admission controller.
+
+    ``beta_floor``: admit only while the CR-tier completion budget is at
+    least this many seconds (``inf`` samples — bootstrap, or drops disabled
+    — always admit: there is no evidence of load).
+    ``beta_frac_of_gamma`` expresses the same floor as a fraction of the
+    app's ``gamma`` and takes precedence when set.  ``max_live`` is a hard
+    cap on concurrently-live queries.  ``queue_rejected`` keeps turned-away
+    submissions in a FIFO retried on the control cadence; False rejects
+    them outright (terminal ``cancelled``/``admission-rejected``).
+
+    ``signal_prefix`` names the telemetry rows whose min budget is the
+    health signal.  The default ``"VA"`` is *the budget toward the CR
+    tier*: per §4.3.4 a task holds one completion budget per downstream, so
+    the budget that collapses when CR is overloaded — lowered by the reject
+    signals CR's drop points emit — is held at the VA tasks, keyed by CR
+    instance.  (CR's own row tracks the UV hop, which the sink's accepts
+    keep near ``gamma`` — drops upstream shield it, see
+    ``DynamismTrace.budget_recovery``.)
+    """
+
+    beta_floor: float = 0.0
+    beta_frac_of_gamma: Optional[float] = None
+    max_live: Optional[int] = None
+    queue_rejected: bool = True
+    signal_prefix: str = "VA"
+
+    def floor(self, gamma: float) -> float:
+        if self.beta_frac_of_gamma is not None:
+            return self.beta_frac_of_gamma * gamma
+        return self.beta_floor
+
+
+class AdmissionController:
+    """Decides admit/queue/reject for query submissions.
+
+    The CR-budget signal is read from the scenario's telemetry plane: the
+    last sampled ``DynamismTrace`` CR row when a trace is attached (the PR-4
+    cadence, off the hot path), falling back to a live probe of the compiled
+    CR tasks' budgets.  Decisions and queue occupancy are counted for the
+    run report.
+    """
+
+    def __init__(self, policy: Optional[AdmissionPolicy] = None) -> None:
+        self.policy = policy or AdmissionPolicy()
+        self.queue: List[int] = []  # query ids awaiting admission (FIFO)
+        self.decisions: Dict[str, int] = {"admit": 0, "queue": 0, "reject": 0}
+        self.requeued = 0
+
+    # ------------------------------------------------------------------ #
+    def cr_beta(self, scenario) -> float:
+        """The CR-tier admission budget — min over the ``signal_prefix``
+        rows (default: the VA-held budgets toward the CR instances): the
+        last telemetry sample when the run carries a trace (the PR-4
+        cadence), else a live probe of the compiled tasks."""
+        prefix = self.policy.signal_prefix
+        trace = getattr(scenario, "_trace", None)
+        if trace is not None and trace.times:
+            series = trace.min_beta(prefix)
+            if series:
+                return series[-1]
+        compiled = scenario.compiled
+        tasks = [
+            t
+            for t in compiled.va_tasks + compiled.cr_tasks
+            if t.name.startswith(prefix)
+        ]
+        return min((t.budget.min_budget() for t in tasks), default=math.inf)
+
+    # ------------------------------------------------------------------ #
+    def admittable(self, scenario, live_count: int) -> bool:
+        """Would a query be admitted right now?  (No decision counted —
+        the queue-drain retry loop polls this on the control cadence.)"""
+        pol = self.policy
+        if pol.max_live is not None and live_count >= pol.max_live:
+            return False
+        floor = pol.floor(scenario.app.gamma)
+        if floor > 0.0:
+            beta = self.cr_beta(scenario)
+            # inf = no evidence of load (bootstrap / drops off): admit.
+            if not math.isinf(beta) and beta < floor:
+                return False
+        return True
+
+    def decide(self, scenario, live_count: int) -> str:
+        """``admit`` | ``queue`` | ``reject`` for one submission, given the
+        current live-query count."""
+        if self.admittable(scenario, live_count):
+            verdict = "admit"
+        else:
+            verdict = "queue" if self.policy.queue_rejected else "reject"
+        self.decisions[verdict] += 1
+        return verdict
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "adm_admitted": self.decisions["admit"] + self.requeued,
+            "adm_queued": self.decisions["queue"],
+            "adm_rejected": self.decisions["reject"],
+            "adm_requeued": self.requeued,
+            "adm_queue_left": len(self.queue),
+        }

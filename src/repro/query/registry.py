@@ -1,0 +1,327 @@
+"""Query registry: per-query state for the multi-query tenancy plane.
+
+A *query* is the unit the platform serves: "track this entity" submitted by
+one user over the shared camera network.  The registry owns every query's
+state — its entity embedding, its TL spotlight strategy instance, its
+per-query completion :class:`~repro.core.budget.TaskBudget`, its lifecycle —
+and the counters that make per-query accounting reconcile exactly with the
+shared pipeline's global :class:`~repro.sim.scenario.ScenarioResult`:
+
+* lifecycle: ``submitted -> scoped -> found`` and the terminal states
+  ``expired`` / ``cancelled`` (admission rejects are ``cancelled`` with
+  ``reason='admission-rejected'``).  ``found`` is sticky: a query that has
+  seen its entity keeps tracking it.
+* tagging: each live query holds a unique ``bit``; a sourced event's
+  ``query_mask`` is the OR of the bits of every live query whose *applied*
+  spotlight contains the camera at source time.  Bits are never reused, so
+  an in-flight event of a dead query can never be mis-attributed to a newer
+  one.
+* counters: ``sourced`` (events tagged at the source), ``completed`` /
+  ``dropped`` (attributed while the query was live), and the orphan pair
+  (events completing/dropping *after* the query ended — they were in flight
+  at cancellation; no event is ever *executed for* a dead query, see the
+  property tests).  After the drain window,
+  ``sourced == completed + dropped + orphan_completed + orphan_dropped``.
+* per-query budget: the query is treated as a virtual pipeline task whose
+  event record is the end-to-end trip — completions record
+  ``<u, q_bar, 1, xi_bar>`` and raise the budget via accept signals when
+  early; drops charged to the query lower it via reject signals.  The
+  resulting per-query ``beta`` feeds the admission controller's fairness
+  view and the per-query telemetry row (``DynamismTrace`` key ``Q:<id>``).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.budget import TaskBudget
+from repro.core.events import AcceptSignal, EventRecord, RejectSignal
+
+__all__ = ["QUERY_STATES", "QuerySpec", "QueryState", "QueryRegistry"]
+
+#: Lifecycle states.  ``submitted`` covers both "just arrived" and "queued
+#: by admission"; ``scoped`` means the TL spotlight is live.
+QUERY_STATES = ("submitted", "scoped", "found", "expired", "cancelled")
+_DEAD = ("expired", "cancelled")
+
+
+@dataclass
+class QuerySpec:
+    """One tracking query as submitted by a user.
+
+    ``tl`` / ``tl_peak_speed`` / ``coverage`` override the workload config's
+    TL knobs for this query only (None inherits).  ``submit_at`` /
+    ``cancel_at`` schedule the lifecycle mid-run; ``ttl_s`` expires a query
+    that has not reached ``found`` within the window.  ``embedding_seed``
+    draws a distinct entity embedding for the fused re-ID plane (None uses
+    the world's true entity embedding, the single-query behavior);
+    ``last_seen_camera`` warm-starts the spotlight (None seeds from the
+    entity walk exactly like a single-query scenario).
+    """
+
+    query_id: Optional[int] = None
+    tl: Optional[str] = None
+    tl_peak_speed: Optional[float] = None
+    coverage: Optional[float] = None
+    submit_at: float = 0.0
+    cancel_at: Optional[float] = None
+    ttl_s: Optional[float] = None
+    embedding_seed: Optional[int] = None
+    last_seen_camera: Optional[int] = None
+    # Escape hatch for custom apps: ``(world, cameras) -> TrackingLogic``.
+    make_tl: Optional[Callable[..., Any]] = None
+
+    def solo_config(self, base):
+        """The single-query ``ScenarioConfig`` this query corresponds to —
+        the per-query-serial baseline (and the bit-exactness oracle) runs
+        one ``TrackingScenario`` per spec over these."""
+        from dataclasses import replace
+
+        kw: Dict[str, Any] = {}
+        if self.tl is not None:
+            kw["tl"] = self.tl
+        if self.tl_peak_speed is not None:
+            kw["tl_peak_speed"] = self.tl_peak_speed
+        return replace(base, **kw) if kw else base
+
+
+@dataclass
+class QueryState:
+    """Registry-owned mutable state of one query."""
+
+    spec: QuerySpec
+    query_id: int
+    bit: int  # unique tag bit: event.query_mask & bit <=> tagged for us
+    state: str = "submitted"
+    reason: str = ""
+    tl: Any = None  # TrackingLogic, built at activation
+    budget: Optional[TaskBudget] = None
+    embedding: Optional[np.ndarray] = None
+    # Control-plane mirrors (same split as the scenario's union mirrors):
+    # ``requested`` is the last TL-requested set; ``applied`` what the
+    # control events have delivered so far (one control latency behind).
+    requested: Set[int] = field(default_factory=set)
+    applied: Set[int] = field(default_factory=set)
+    # Counters (see module docstring for the reconciliation contract).
+    sourced: int = 0
+    positives_generated: int = 0
+    completed: int = 0
+    positives_completed: int = 0
+    detections_on_time: int = 0
+    on_time: int = 0
+    delayed: int = 0
+    dropped: int = 0
+    dp: List[int] = field(default_factory=lambda: [0, 0, 0, 0])  # [_, dp1..3]
+    orphan_completed: int = 0
+    orphan_dropped: int = 0
+    reid_matched: int = 0
+    accepts: int = 0
+    rejects: int = 0
+    latencies: List[Tuple[float, float]] = field(default_factory=list)
+    active_timeline: List[Tuple[float, int]] = field(default_factory=list)
+    sink_positive_pairs: List[Tuple[int, float]] = field(default_factory=list)
+    submitted_at: float = 0.0
+    scoped_at: Optional[float] = None
+    found_at: Optional[float] = None
+    ended_at: Optional[float] = None
+
+    @property
+    def live(self) -> bool:
+        return self.state in ("scoped", "found")
+
+    @property
+    def dead(self) -> bool:
+        return self.state in _DEAD
+
+    @property
+    def in_flight(self) -> int:
+        return self.sourced - (
+            self.completed + self.dropped + self.orphan_completed + self.orphan_dropped
+        )
+
+    # -- per-query virtual-task budget ---------------------------------- #
+    # The query is a virtual task with xi == 0 and m_max == 1, for which the
+    # paper's update formulas reduce exactly: an accept's lam and a reject's
+    # lam are both 0, so an accept sets beta = max(beta, u) and a reject
+    # beta = min(beta, u).  The hot-path guard below skips the TaskBudget
+    # record/signal machinery whenever the update provably would not move
+    # the budget — the resulting trajectory is identical, at one cached
+    # min_budget() read per event instead of an allocation per event.
+    def record_completion(
+        self, event_id: int, u: float, q_bar: float, xi_bar: float, gamma: float,
+        epsilon_max: float,
+    ) -> None:
+        b = self.budget
+        if b is None:
+            return
+        epsilon = gamma - u
+        cur = b.min_budget()
+        if not math.isinf(cur) and (epsilon <= epsilon_max or u <= cur):
+            return  # no accept would fire, or it could not raise the budget
+        b.record(event_id, EventRecord(departure=u, queuing=q_bar, batch_size=1, xi=xi_bar))
+        if epsilon > epsilon_max:
+            self.accepts += 1
+            b.on_accept(AcceptSignal(event_id, epsilon, xi_bar))
+
+    def record_drop(
+        self, event_id: int, u: float, q_bar: float, xi_bar: float, epsilon: float
+    ) -> None:
+        b = self.budget
+        if b is None:
+            return
+        self.rejects += 1
+        cur = b.min_budget()
+        if not math.isinf(cur) and u >= cur:
+            return  # reject could not lower the budget further
+        # A drop is this virtual task's own "departure": record the trip so
+        # far, then apply the reject (bootstrap-initializes on first drop).
+        b.record(event_id, EventRecord(departure=u, queuing=q_bar, batch_size=1, xi=xi_bar))
+        b.on_reject(RejectSignal(event_id, max(epsilon, 0.0), q_bar))
+
+    def beta(self) -> float:
+        return self.budget.min_budget() if self.budget is not None else math.inf
+
+    def telemetry_row(self) -> Dict[str, float]:
+        """One ``TRACE_FIELDS``-shaped sample (the ``Q:<id>`` trace row)."""
+        return {
+            "beta": self.beta(),
+            "queue": self.in_flight,
+            "dp1": self.dp[1],
+            "dp2": self.dp[2],
+            "dp3": self.dp[3],
+            "probes": 0.0,
+            "accepts": self.accepts,
+            "rejects": self.rejects,
+            "batches": 0.0,
+            "executed": self.completed,
+        }
+
+
+class QueryRegistry:
+    """Owns every query of a multi-query run, live or dead."""
+
+    def __init__(self) -> None:
+        self.states: Dict[int, QueryState] = {}
+        self._by_bit_index: Dict[int, QueryState] = {}
+        self._next_bit = 0
+        self._next_auto_id = 0
+        # Admission bookkeeping (filled by the driver/controller).
+        self.submitted = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.queued_peak = 0
+        self._live_cache: Optional[List[QueryState]] = None
+        # mask -> states cache: a bit is never reassigned, so the state
+        # tuple for a given mask value is immutable for the registry's
+        # lifetime (liveness is the caller's concern).
+        self._mask_cache: Dict[int, Tuple[QueryState, ...]] = {}
+        self._emb_cache: Optional[Tuple[np.ndarray, List[QueryState]]] = None
+
+    # ------------------------------------------------------------------ #
+    def register(self, spec: QuerySpec, now: float = 0.0) -> QueryState:
+        qid = spec.query_id
+        if qid is None:
+            qid = self._next_auto_id
+        if qid in self.states:
+            raise ValueError(f"query id {qid} already registered")
+        self._next_auto_id = max(self._next_auto_id, qid + 1)
+        bit_index = self._next_bit
+        self._next_bit += 1
+        st = QueryState(spec=spec, query_id=qid, bit=1 << bit_index)
+        st.submitted_at = now
+        self.states[qid] = st
+        self._by_bit_index[bit_index] = st
+        self.submitted += 1
+        self._live_cache = None
+        self._emb_cache = None
+        return st
+
+    def get(self, qid: int) -> QueryState:
+        return self.states[qid]
+
+    def live_states(self) -> List[QueryState]:
+        cache = self._live_cache
+        if cache is None:
+            cache = self._live_cache = [
+                s for s in self.states.values() if s.live
+            ]
+        return cache
+
+    def live_count(self) -> int:
+        return len(self.live_states())
+
+    def mark(self, st: QueryState, state: str, now: float, reason: str = "") -> None:
+        if state not in QUERY_STATES:
+            raise ValueError(f"unknown query state {state!r}")
+        st.state = state
+        if reason:
+            st.reason = reason
+        if state == "scoped" and st.scoped_at is None:
+            st.scoped_at = now
+        elif state == "found" and st.found_at is None:
+            st.found_at = now
+        elif state in _DEAD:
+            st.ended_at = now
+        self._live_cache = None
+        self._emb_cache = None
+
+    # ------------------------------------------------------------------ #
+    def for_mask(self, mask: int) -> Tuple[QueryState, ...]:
+        """The QueryStates of every bit set in ``mask`` (live or dead — the
+        caller decides attribution vs orphan accounting).  Memoized per mask
+        value: bits are never reassigned, so the tuple is stable, and event
+        streams repeat the same handful of masks."""
+        cached = self._mask_cache.get(mask)
+        if cached is not None:
+            return cached
+        by_index = self._by_bit_index
+        out = []
+        m = mask
+        while m:
+            low = m & -m
+            m ^= low
+            st = by_index.get(low.bit_length() - 1)
+            if st is not None:
+                out.append(st)
+        self._mask_cache[mask] = result = tuple(out)
+        return result
+
+    def embedding_block(self) -> Tuple[np.ndarray, List[QueryState]]:
+        """Stacked live-query embeddings + the matching states, in bit
+        order (the query-major axis of ``reid_match_multi``).
+
+        The stacked array is cached until the live set changes (it is on
+        the per-VA-batch hot path), and the *same object* is returned
+        across calls so ``reid_match_multi`` keeps it device-resident via
+        the dispatch layer's identity-keyed cache."""
+        cached = self._emb_cache
+        if cached is not None:
+            return cached
+        live = [s for s in self.live_states() if s.embedding is not None]
+        live.sort(key=lambda s: s.bit)
+        if not live:
+            block: np.ndarray = np.zeros((0, 0), dtype=np.float32)
+        else:
+            block = np.stack([s.embedding for s in live]).astype(np.float32)
+        self._emb_cache = (block, live)
+        return self._emb_cache
+
+    # ------------------------------------------------------------------ #
+    def reconcile(self) -> Dict[int, Dict[str, int]]:
+        """Per-query reconciliation view: after the drain window every
+        query's ``unaccounted`` is 0 (the property suite asserts this)."""
+        out: Dict[int, Dict[str, int]] = {}
+        for qid, st in sorted(self.states.items()):
+            out[qid] = {
+                "sourced": st.sourced,
+                "completed": st.completed,
+                "dropped": st.dropped,
+                "orphan_completed": st.orphan_completed,
+                "orphan_dropped": st.orphan_dropped,
+                "unaccounted": st.in_flight,
+            }
+        return out

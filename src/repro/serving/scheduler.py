@@ -52,12 +52,18 @@ __all__ = [
 
 @dataclass
 class StageRequest:
-    """One unit of work (e.g. a camera frame's features)."""
+    """One unit of work (e.g. a camera frame's features).
+
+    ``query_id`` is the multi-query tenancy tag (None outside multi-query
+    serving): requests carrying one are counted into the stage's per-query
+    telemetry row, mirroring the sim plane's ``Event.query_mask``.
+    """
 
     payload: np.ndarray
     source_time: float
     event_id: int = field(default_factory=new_event_id)
     avoid_drop: bool = False
+    query_id: Optional[int] = None
 
 
 @dataclass
@@ -67,6 +73,22 @@ class StageResult:
     latency: float
     batch_size: int
     dropped: bool = False
+
+
+# Counter keys of a per-query telemetry row (same keys as ServedStage.stats,
+# minus nothing — signals are stage-level but the row shape stays uniform).
+_ZERO_QUERY_ROW: Dict[str, int] = {
+    "arrived": 0,
+    "dropped": 0,
+    "dropped_dp1": 0,
+    "dropped_dp2": 0,
+    "dropped_dp3": 0,
+    "executed": 0,
+    "batches": 0,
+    "probes": 0,
+    "accepts_rx": 0,
+    "rejects_rx": 0,
+}
 
 
 def calibrate_xi(
@@ -141,6 +163,16 @@ class ServedStage:
         # (the serving analogue of the pipeline's path-based reject signals,
         # §4.5; wired by lower_app_stages as VA <- CR).
         self.upstream: Optional["ServedStage"] = None
+        # Multi-query tenancy: per-query counter rows (same keys as
+        # ``stats``) and the event-id -> query-id attribution map for
+        # requests currently in flight through the batcher.
+        self._query_stats: Dict[int, Dict[str, int]] = {}
+        self._query_of: Dict[int, int] = {}
+        # Query-major fused step: a (Q, D) query-embedding block padded to a
+        # power-of-two bucket (see set_queries); when present, the step is
+        # invoked as ``step_fn(payloads, query_block, nq)``.
+        self._query_block: Optional[Any] = None
+        self._nq: int = 0
 
     # -- Anveshak signal hooks (downstream stages call these) ----------- #
     def on_reject(self, event_id: int, epsilon: float, q_bar: float) -> None:
@@ -155,22 +187,77 @@ class ServedStage:
         self.stats["accepts_rx"] += 1
         self.budget.on_accept(AcceptSignal(event_id, epsilon, xi_bar))
 
-    def telemetry(self) -> Dict[str, float]:
+    def telemetry(self, query_id: Optional[int] = None) -> Dict[str, float]:
         """One telemetry sample, shaped like the discrete-event plane's
         :data:`repro.sim.dynamism.TRACE_FIELDS` row so a serving deployment
         can be traced on a cadence by the same tooling: current budget,
         queue depth, the three drop-point counters and the signal counters.
-        Pure snapshot — no allocation on the request path."""
+        Pure snapshot — no allocation on the request path.
+
+        ``query_id`` selects the multi-query dimension: ``None`` returns the
+        stage-wide row (historical behavior); a query id returns that
+        query's row in the *same shape* — counters restricted to requests
+        tagged with the id, queue depth to its pending requests, ``beta``
+        the shared stage budget (the device is the shared resource) — so the
+        serving and sim planes report identical per-query row shapes."""
         from repro.core.pipeline import STAT_FIELDS
 
-        s = self.stats
+        if query_id is None:
+            s = self.stats
+            queue = self.batcher.current_size
+        else:
+            s = self._query_stats.get(query_id, _ZERO_QUERY_ROW)
+            q_of = self._query_of
+            queue = sum(
+                1
+                for pe in self.batcher._current
+                if q_of.get(pe.event.event_id) == query_id
+            )
         row: Dict[str, float] = {
             "beta": self.budget.min_budget(),
-            "queue": self.batcher.current_size,
+            "queue": queue,
         }
         for fld, attr in STAT_FIELDS:
             row[fld] = s[attr]
         return row
+
+    # -- Multi-query tenancy -------------------------------------------- #
+    def query_ids(self) -> List[int]:
+        """Query ids this stage has seen (sorted)."""
+        return sorted(self._query_stats)
+
+    def _qstat(self, query_id: int) -> Dict[str, int]:
+        qs = self._query_stats.get(query_id)
+        if qs is None:
+            qs = self._query_stats[query_id] = dict(_ZERO_QUERY_ROW)
+        return qs
+
+    def set_queries(self, embeddings: np.ndarray) -> None:
+        """Install a query-major fused step: the ``(Q, D)`` live-query
+        embedding block is padded to a power-of-two query bucket (same
+        bucketing rule as ``repro.kernels.dispatch``, so XLA compiles one
+        executable per bucket even as queries come and go) and kept
+        device-resident; ``step_fn`` is then invoked as
+        ``step_fn(payloads, query_block, nq)`` with ``nq`` the number of
+        real queries (pad rows to be masked by the step).  Pass an empty
+        block to fall back to the single-query ``step_fn(payloads)``."""
+        import jax.numpy as jnp
+
+        from repro.kernels.dispatch import bucket
+
+        emb = np.asarray(embeddings, dtype=np.float32)
+        if emb.size == 0:
+            self._query_block = None
+            self._nq = 0
+            return
+        if emb.ndim != 2:
+            raise ValueError(f"embeddings must be (Q, D), got {emb.shape}")
+        Q, D = emb.shape
+        qb = bucket(Q)
+        pad = np.zeros((qb, D), dtype=np.float32)
+        pad[:Q] = emb
+        self._query_block = jnp.asarray(pad)
+        self._nq = Q
 
     def _reject_upstream(self, event_id: int, epsilon: float, q_bar: float) -> None:
         if self.upstream is not None:
@@ -181,15 +268,23 @@ class ServedStage:
         """Drop point 1 + dynamic batching; returns results if a batch ran."""
         now = self.clock()
         self.stats["arrived"] += 1
+        qs = self._qstat(req.query_id) if req.query_id is not None else None
+        if qs is not None:
+            qs["arrived"] += 1
         beta = self.budget.min_budget() if self.drops_enabled else math.inf
         if self.drops_enabled and drop_before_queuing(
             req.source_time, now, self.xi(1), beta, avoid_drop=req.avoid_drop
         ):
             self.stats["dropped"] += 1
             self.stats["dropped_dp1"] += 1
+            if qs is not None:
+                qs["dropped"] += 1
+                qs["dropped_dp1"] += 1
             u = now - req.source_time
             self._reject_upstream(req.event_id, u + self.xi(1) - beta, 0.0)
             return [StageResult(req.event_id, None, u, 0, dropped=True)]
+        if qs is not None:
+            self._query_of[req.event_id] = req.query_id
         ev = Event(
             header=EventHeader(
                 event_id=req.event_id,
@@ -231,9 +326,15 @@ class ServedStage:
         else:
             retained, dropped = [t[3] for t in tuples], []
         results: List[StageResult] = []
+        q_of = self._query_of
         for ev in dropped:
             self.stats["dropped"] += 1
             self.stats["dropped_dp2"] += 1
+            qid = q_of.pop(ev.event_id, None)
+            if qid is not None:
+                qs = self._qstat(qid)
+                qs["dropped"] += 1
+                qs["dropped_dp2"] += 1
             u_total = now - ev.header.source_arrival
             self._reject_upstream(ev.event_id, u_total + self.xi(b) - beta, ev.header.q_bar)
             results.append(StageResult(ev.event_id, None, u_total, 0, dropped=True))
@@ -247,11 +348,29 @@ class ServedStage:
         if bucket > m:
             pad = np.zeros((bucket - m, *payloads.shape[1:]), payloads.dtype)
             payloads = np.concatenate([payloads, pad])
-        out = jax.device_get(self.step_fn(payloads))
+        if self._query_block is None:
+            out = jax.device_get(self.step_fn(payloads))
+        else:
+            # Query-major fused step: every live query rides one device call
+            # (the block is bucket-padded and device-resident; see
+            # set_queries), the serving analogue of the sim plane's
+            # cross-query reid_match_multi dispatch.
+            out = jax.device_get(self.step_fn(payloads, self._query_block, self._nq))
         end = self.clock()
         exec_dur = end - now
         self.stats["executed"] += m
         self.stats["batches"] += 1
+        batch_queries = set()
+        executed_q: Dict[int, int] = {}
+        for ev in retained:
+            qid = q_of.pop(ev.event_id, None)
+            if qid is not None:
+                executed_q[ev.event_id] = qid
+                qs = self._qstat(qid)
+                qs["executed"] += 1
+                if qid not in batch_queries:
+                    batch_queries.add(qid)
+                    qs["batches"] += 1
         for ev in retained:
             pe = pe_by_id[ev.event_id]
             u = pe.arrival - ev.header.source_arrival
@@ -267,6 +386,11 @@ class ServedStage:
             ):
                 self.stats["dropped"] += 1
                 self.stats["dropped_dp3"] += 1
+                qid = executed_q.get(ev.event_id)
+                if qid is not None:
+                    qst = self._qstat(qid)
+                    qst["dropped"] += 1
+                    qst["dropped_dp3"] += 1
                 self._reject_upstream(ev.event_id, u + pi - beta, ev.header.q_bar)
                 results.append(StageResult(ev.event_id, None, u + pi, m, dropped=True))
             else:

@@ -19,15 +19,40 @@ from .scenario import (
     va_passthrough,
 )
 from .simulator import DiscreteEventSimulator, NetworkModel
-from .sweep import AppCase, CaseRecord, SweepResult, SweepRunner
+from .sweep import AppCase, CaseRecord, QueryCase, SweepResult, SweepRunner
 from .world import WorldBundle, WorldKey, clear_world_cache, get_world, world_cache_stats
 
+# Multi-query tenancy plane: repro.query layers on this package's scenario
+# driver, so its names are re-exported lazily (PEP 562) — an eager import
+# here would be circular (repro.query.scenario imports repro.sim.scenario,
+# which initializes this package first).
+_QUERY_EXPORTS = (
+    "AdmissionController",
+    "AdmissionPolicy",
+    "MultiQueryResult",
+    "MultiQueryScenario",
+    "QueryRegistry",
+    "QuerySpec",
+    "run_queries_serial",
+)
+
+
+def __getattr__(name):
+    if name in _QUERY_EXPORTS:
+        from repro import query
+
+        return getattr(query, name)
+    raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")
+
+
 __all__ = [
-    "AppCase", "BandwidthCollapse", "CameraChurn", "CameraNetwork",
-    "CaseRecord", "ComputeSlowdown", "DiscreteEventSimulator", "DynamismSpec",
-    "DynamismTrace", "EntityWalk", "Frame", "InputRateSpike", "NetworkModel",
+    "AdmissionController", "AdmissionPolicy", "AppCase", "BandwidthCollapse",
+    "CameraChurn", "CameraNetwork", "CaseRecord", "ComputeSlowdown",
+    "DiscreteEventSimulator", "DynamismSpec", "DynamismTrace", "EntityWalk",
+    "Frame", "InputRateSpike", "MultiQueryResult", "MultiQueryScenario",
+    "NetworkModel", "QueryCase", "QueryRegistry", "QuerySpec",
     "ScenarioConfig", "ScenarioResult", "SweepResult", "SweepRunner",
     "TrackingScenario", "WorldBundle", "WorldKey", "clear_world_cache",
     "fig9_collapse", "get_world", "linear_xi", "make_scenario_cr",
-    "va_passthrough", "world_cache_stats",
+    "run_queries_serial", "va_passthrough", "world_cache_stats",
 ]

@@ -304,6 +304,23 @@ class DynamismTrace:
         for fld, attr in STAT_FIELDS:
             row[fld].append(getattr(stats, attr))
 
+    def sample_keyed(self, name: str, values: Dict[str, float]) -> None:
+        """Append one sample for a *keyed* row that is not backed by a
+        pipeline Task — the multi-query tenancy plane records one row per
+        tracking query (``Q:<id>``) this way, with the same
+        :data:`TRACE_FIELDS` shape as every task row.  Rows created
+        mid-trace (queries submitted after sampling started) are backfilled
+        (``beta`` with ``inf`` — no budget yet — and counters with 0) so
+        every row stays aligned with ``times``."""
+        row = self.task_row(name)
+        n = len(self.times) - 1  # samples recorded before this one
+        for f in TRACE_FIELDS:
+            col = row[f]
+            fill = math.inf if f == "beta" else 0.0
+            if len(col) < n:
+                col.extend([fill] * (n - len(col)))
+            col.append(float(values.get(f, fill)))
+
     def sample_aggregate(self, name, tasks) -> None:
         """Append one sample aggregating ``tasks`` under one row ``name``
         (min budget, summed queue depths and counters) — used for the lazy
@@ -377,7 +394,9 @@ class DynamismTrace:
         end = self._total_drops_at(b) if b >= 0 else 0
         return end - start
 
-    def budget_recovery(self, prefix: str = "CR") -> Dict[str, float]:
+    def budget_recovery(
+        self, prefix: str = "CR", until: Optional[float] = None
+    ) -> Dict[str, float]:
         """Budget trajectory around the spec's perturbation windows, over
         the min-budget series of the ``prefix`` module.
 
@@ -390,6 +409,12 @@ class DynamismTrace:
         acceptance bar for an adaptive batcher is ``recovery >= 0.9``
         (§4.5.2: probes + accepts re-inflate a collapsed budget).
 
+        ``until`` bounds the series: samples after it are ignored, so
+        ``post`` becomes the last finite sample at or before ``until``.
+        The multi-query admission benchmark passes the generation horizon
+        here — once sourcing stops, the drain window always re-inflates
+        budgets, which would mask "still overloaded while serving".
+
         Caveat: drops upstream of ``prefix`` shield it — a bandwidth
         collapse whose late events die at the VA drop points leaves the CR
         series flat.  Check where the wave landed with
@@ -401,6 +426,8 @@ class DynamismTrace:
         beta = self.min_beta(prefix)
         pre = dip = low = post = math.nan
         for t, b in zip(self.times, beta):
+            if until is not None and t > until:
+                break
             if math.isinf(b):
                 continue
             low = b if math.isnan(low) else min(low, b)
@@ -456,8 +483,17 @@ class DynamismTrace:
                 if not math.isnan(val):
                     out[key] = round(val, 4)
             out.update(
+                # Task rows only: a per-query ``Q:<id>`` row's "queue" is
+                # that query's whole-pipeline in-flight count, not a task
+                # queue depth — it would dominate the max and misreport
+                # pipeline queue pressure in multi-query runs.
                 peak_queue=max(
-                    (max(row["queue"]) for row in self.series.values()), default=0
+                    (
+                        max(row["queue"])
+                        for name, row in self.series.items()
+                        if not name.startswith("Q:")
+                    ),
+                    default=0,
                 ),
                 probes=sum(
                     int(row["probes"][-1]) for row in self.series.values() if row["probes"]

@@ -454,6 +454,14 @@ class TrackingScenario:
         self._reid_query = (
             self.cameras.entity_embedding[None, :] if self._reid_enabled else None
         )
+        # Multi-query tenancy hooks (repro.query.MultiQueryScenario): when
+        # `_mask_of` is set (camera id -> live-query bitmask), sourced events
+        # are tagged with it and zero-mask cameras (no live query interested)
+        # are skipped; `_source_hook(frames, t)` observes each tick's sourced
+        # frames for per-query accounting.  Both None in single-query runs —
+        # the source loop pays one attribute test per tick.
+        self._mask_of: Optional[Dict[int, int]] = None
+        self._source_hook: Optional[Callable[[List[Frame], float], None]] = None
 
         # ---- lower the app onto the pipeline ------------------------- #
         self.compiled: CompiledApp = compile_app(
@@ -608,6 +616,12 @@ class TrackingScenario:
             ids = np.fromiter(fc_active, dtype=np.int64, count=len(fc_active))
             ids.sort()
             frames = self.cameras.frames_at(t, ids)
+            mask_of = self._mask_of
+            if mask_of is not None:
+                # Multi-query mode: a camera still active only because a
+                # cancelled query's control deltas are in flight sources
+                # nothing — no live query would consume the frame.
+                frames = [f for f in frames if mask_of.get(f.camera_id, 0)]
             n_pos = 0
             if compiled.fuse_fc:
                 # FC stage fused into the source: identical arrival times and
@@ -626,6 +640,8 @@ class TrackingScenario:
                     if has and avoid:
                         header.avoid_drop = True
                     ev = Event(header=header, key=cam, value=frame)
+                    if mask_of is not None:
+                        ev.query_mask = mask_of[cam]
                     ev.batch_slowest = True  # a b=1 batch's sole event
                     va = va_of[cam]
                     g = groups.get(va)
@@ -649,9 +665,14 @@ class TrackingScenario:
                     if fc is None:
                         fc = make_fc(cam)
                     header = source_header(new_event_id(), t)
-                    fc.on_arrival(Event(header=header, key=cam, value=frame))
+                    ev = Event(header=header, key=cam, value=frame)
+                    if mask_of is not None:
+                        ev.query_mask = mask_of[cam]
+                    fc.on_arrival(ev)
             self._positives_generated += n_pos
             self._source_events += len(frames)
+            if self._source_hook is not None:
+                self._source_hook(frames, t)
         if self._rate_mult is None:
             dt = 1.0 / self.cfg.fps
         else:

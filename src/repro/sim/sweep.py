@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .scenario import ScenarioConfig, TrackingScenario
 from .world import WorldKey, clear_world_cache, get_world, world_cache_stats
 
-__all__ = ["AppCase", "CaseRecord", "SweepResult", "SweepRunner"]
+__all__ = ["AppCase", "CaseRecord", "QueryCase", "SweepResult", "SweepRunner"]
 
 
 @dataclass
@@ -63,6 +63,24 @@ class AppCase:
     workload: ScenarioConfig
     deployment: Optional[object] = None  # DeploymentSpec | None -> workload's
     needs_jax: bool = False
+
+
+@dataclass
+class QueryCase:
+    """One multi-query grid point: N concurrent tracking queries (an int or
+    a sequence of ``repro.query.QuerySpec``) fused over one shared pipeline
+    on ``workload``, optionally behind an admission policy/controller.
+
+    Runs through ``repro.query.MultiQueryScenario`` (imported lazily so the
+    sweep engine has no hard dependency on the tenancy plane); the record's
+    summary is the fused run's global summary plus the per-query extras
+    (``queries``, ``union_peak_active``, admission counters...).
+    """
+
+    queries: object  # int | Sequence[repro.query.QuerySpec]
+    workload: ScenarioConfig
+    admission: Optional[object] = None  # AdmissionPolicy | AdmissionController
+    spotlight_mode: str = "per-query"
 
 
 @dataclass
@@ -93,13 +111,23 @@ class SweepResult:
 
 def _workload(case) -> ScenarioConfig:
     """The ScenarioConfig a grid entry runs over (identity for plain
-    configs, the embedded workload for app cases)."""
-    return case.workload if isinstance(case, AppCase) else case
+    configs, the embedded workload for app/query cases)."""
+    return case.workload if isinstance(case, (AppCase, QueryCase)) else case
 
 
 def _run_case(name: str, case) -> CaseRecord:
     t0 = time.perf_counter()
-    if isinstance(case, AppCase):
+    if isinstance(case, QueryCase):
+        from repro.query import MultiQueryScenario
+
+        scenario = MultiQueryScenario(
+            case.workload,
+            case.queries,
+            admission=case.admission,
+            spotlight_mode=case.spotlight_mode,
+        )
+        cfg = case.workload
+    elif isinstance(case, AppCase):
         scenario = TrackingScenario(
             case.workload, app=case.app, deployment=case.deployment
         )
@@ -241,7 +269,7 @@ class SweepRunner:
                     world_build_s += time.perf_counter() - t0
                     bundles[key] = bundle
                 cfg = replace(cfg, world=bundle)
-                if isinstance(case, AppCase):
+                if isinstance(case, (AppCase, QueryCase)):
                     case = replace(case, workload=cfg)
                 else:
                     case = cfg

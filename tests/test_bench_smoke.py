@@ -79,6 +79,78 @@ def test_dynamism_smoke_writes_records_and_shows_recovery(tmp_path):
         assert recovery(f"{perturb}_SB-20") < 0.9, perturb
 
 
+def test_queries_smoke_shows_fusion_and_admission_shedding(tmp_path):
+    """The multi-query grid's acceptance contract: ``--only queries
+    --smoke`` (a) runs the fused N-query scaling sweep with per-query
+    summaries bit-identical to the per-query-serial baseline, the fused run
+    beating it on wall-clock, and (b) demonstrates admission control —
+    under the ComputeSlowdown window with 64 submitted queries, the
+    admission-on run's CR-tier budget recovers to >= 0.9 of its
+    pre-perturbation value while the no-admission run's does not."""
+    out = tmp_path / "queries.json"
+    status = _run(["--only", "queries", "--smoke", "--mode", "serial",
+                   "--json", str(out)])
+    assert status == 0
+    data = json.loads(out.read_text())
+    cases = {r["case"]: r for r in data["records"] if r["bench"] == "queries"}
+
+    def derived(case):
+        return dict(
+            kv.split("=", 1) for kv in cases[case]["derived"].split(";") if "=" in kv
+        )
+
+    for n in (1, 4, 16):
+        d = derived(f"fused_N{n}")
+        assert d["bit_identical"] == "True", (n, d)
+    # Wall-clock: fused 16 queries through one pipeline beats 16 serial
+    # runs.  The >= 3x acceptance bar is frozen for the full-mode record on
+    # the 1000-camera world (see BENCH_pipeline.json test below); the smoke
+    # bar is kept loose for noisy CI containers.
+    assert float(derived("fused_N16")["speedup_x"]) >= 1.5
+
+    on, off = derived("admission_on"), derived("admission_off")
+    assert float(on["beta_recovery"]) >= 0.9, on
+    assert float(off["beta_recovery"]) < 0.9, off
+    # Shedding is visible: fewer live queries, some queued, less dropping.
+    assert int(on["live_end"]) < int(off["live_end"])
+    assert int(on["queued"]) > 0
+    assert float(on["dropped_frac"]) < float(off["dropped_frac"])
+
+
+def test_checked_in_baseline_freezes_fused_query_speedup():
+    """BENCH_pipeline.json records the acceptance numbers: the fused
+    16-query run on the 1000-camera world at >= 3x over 16 sequential
+    single-query runs, bit-identical per-query summaries, and the
+    admission on/off recovery split."""
+    with open(BENCH_JSON) as f:
+        data = json.load(f)
+    recs = {
+        (r["case"], r.get("mode", "full")): r
+        for r in data["records"]
+        if r["bench"] == "queries"
+    }
+    d16 = dict(
+        kv.split("=", 1)
+        for kv in recs[("fused_N16", "full")]["derived"].split(";")
+        if "=" in kv
+    )
+    assert float(d16["speedup_x"]) >= 3.0
+    assert d16["bit_identical"] == "True"
+    for mode in ("full", "smoke"):
+        on = dict(
+            kv.split("=", 1)
+            for kv in recs[("admission_on", mode)]["derived"].split(";")
+            if "=" in kv
+        )
+        off = dict(
+            kv.split("=", 1)
+            for kv in recs[("admission_off", mode)]["derived"].split(";")
+            if "=" in kv
+        )
+        assert float(on["beta_recovery"]) >= 0.9
+        assert float(off["beta_recovery"]) < 0.9
+
+
 def test_compare_gate_passes_against_fresh_records(tmp_path):
     out = tmp_path / "base.json"
     assert _run(["--only", "pipeline", "--smoke", "--mode", "serial",

@@ -176,3 +176,28 @@ def test_scenario_reid_path_counts_matches():
         tl="base", batching="static", static_batch=10,
     )
     assert TrackingScenario(cfg0).run().reid_matched == 0
+
+
+def test_reid_multi_buckets_and_compile_accounting():
+    """The query-major kernel obeys the same dispatch contracts as the
+    single-query one: power-of-two bucket padding on BOTH axes, call/shape
+    stats, and at most one jit compile per bucket shape."""
+    rng = np.random.default_rng(9)
+    D = 40  # private to this test, like the single-query compile test
+    before = dispatch.stats()["reid_multi_calls"]
+    dispatch.reid_match_multi(rng.normal(size=(2, D)).astype(np.float32),
+                              rng.normal(size=(1, D)).astype(np.float32))
+    base = dispatch.jit_cache_sizes()["reid_multi"]
+    # Gallery 1..8 and queries 1..8 share one (8, 8, D) bucket shape.
+    for N, Q in ((1, 1), (3, 2), (8, 8), (5, 7)):
+        g = rng.normal(size=(N, D)).astype(np.float32)
+        q = rng.normal(size=(Q, D)).astype(np.float32)
+        scores, matched = dispatch.reid_match_multi(g, q)
+        assert np.asarray(scores).shape == (N, Q)
+        assert np.asarray(matched).shape == (N, Q)
+    assert dispatch.jit_cache_sizes()["reid_multi"] == base
+    # A new bucket (Q > 8) costs exactly one more compile.
+    dispatch.reid_match_multi(rng.normal(size=(2, D)).astype(np.float32),
+                              rng.normal(size=(9, D)).astype(np.float32))
+    assert dispatch.jit_cache_sizes()["reid_multi"] == base + 1
+    assert dispatch.stats()["reid_multi_calls"] == before + 6

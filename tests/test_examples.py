@@ -41,6 +41,8 @@ def test_quickstart_runs_composed_app_end_to_end():
     assert "OK: all events within gamma" in out
     # The dynamism epilogue: perturbed run with budget recovery + quality.
     assert "OK: budget recovered after the collapse." in out
+    # The multi-query epilogue: two queries fused, one cancelled mid-run.
+    assert "OK: multi-query tenancy" in out
 
 
 def test_apps_executes_all_four_table1_apps():

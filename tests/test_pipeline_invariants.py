@@ -45,9 +45,9 @@ def test_no_execution_after_drop_and_probes_reach_sink(tl, monkeypatch):
     orig_drop = Task._on_drop
     orig_finish = Task._finish_batch
 
-    def logging_drop(self, ev, epsilon, downstream=""):
+    def logging_drop(self, ev, epsilon, downstream="", point=0):
         dropped_at[ev.header.event_id] = next(seq)
-        return orig_drop(self, ev, epsilon, downstream=downstream)
+        return orig_drop(self, ev, epsilon, downstream=downstream, point=point)
 
     def logging_finish(self, batch, exec_start, exec_dur):
         s = next(seq)

@@ -1,0 +1,488 @@
+"""Multi-query tenancy plane (tentpole of the query-plane PR).
+
+The correctness anchor is the **bit-exactness harness**: with interference
+disabled (admission off; identical queries submitted at t=0, so the union
+spotlight equals each query's own and no query perturbs another's event
+stream), a fused N-query run's *per-query* summaries must be bit-identical
+to N independent single-query ``TrackingScenario`` runs at seed 0 — drops
+off AND drops on.  The solo summaries are frozen below as goldens (mirroring
+``tests/test_dynamism.py``), so a drift in either the solo engine or the
+fused plane fails loudly.
+
+Also covered: lifecycle (submit/cancel/ttl + orphan accounting), per-query
+drop charging through the pipeline drop hook, the kernel union-spotlight
+path, the query-major re-id dispatch, admission control, per-query
+telemetry rows, and the QueryCase sweep integration.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.query import (
+    AdmissionController,
+    AdmissionPolicy,
+    MultiQueryScenario,
+    QueryRegistry,
+    QuerySpec,
+    run_queries_serial,
+)
+from repro.sim import QueryCase, ScenarioConfig, SweepRunner, TrackingScenario
+
+# --------------------------------------------------------------------- #
+# Frozen goldens: the solo summaries every fused per-query view must     #
+# reproduce bit-for-bit (seed 0, 300 cameras, 150 s, TL-BFS, dynamic).   #
+# --------------------------------------------------------------------- #
+GOLDEN_NODROP = {
+    "source_events": 1662, "on_time": 1662, "delayed": 0, "dropped": 0,
+    "delayed_frac": 0.0, "dropped_frac": 0.0, "median_latency_s": 0.157,
+    "p99_latency_s": 0.517, "peak_active": 25,
+    "positives_generated": 31, "positives_completed": 23,
+}
+GOLDEN_DROPS = {
+    "source_events": 3355, "on_time": 2564, "delayed": 0, "dropped": 791,
+    "delayed_frac": 0.0, "dropped_frac": 0.2358, "median_latency_s": 4.669,
+    "p99_latency_s": 14.082, "peak_active": 63,
+    "positives_generated": 31, "positives_completed": 23,
+}
+
+
+def _cfg(**kw):
+    base = dict(num_cameras=300, duration_s=150.0, seed=0, tl="bfs",
+                batching="dynamic", m_max=25)
+    base.update(kw)
+    return ScenarioConfig(**base)
+
+
+def _drops_cfg():
+    return _cfg(tl_peak_speed=7.0, num_va=5, num_cr=5,
+                drops_enabled=True, avoid_drop_positives=True)
+
+
+# --------------------------------------------------------------------- #
+# Bit-exactness harness                                                  #
+# --------------------------------------------------------------------- #
+def test_fused_nodrop_bit_identical_to_solo_golden():
+    cfg = _cfg()
+    assert TrackingScenario(cfg).run().summary() == GOLDEN_NODROP
+    res = MultiQueryScenario(cfg, 3).run()
+    for qid in res.per_query:
+        assert res.per_query_summary(qid) == GOLDEN_NODROP
+    # The shared pipeline ran the workload once: global == per-query view.
+    assert res.result.summary() == GOLDEN_NODROP
+    assert res.summary()["per_query_sourced_sum"] == 3 * GOLDEN_NODROP["source_events"]
+
+
+def test_fused_drops_bit_identical_to_solo_golden():
+    """Per-query drop charging (the compiled app's drop hook) reconciles
+    bit-for-bit with the solo run's task-level drop accounting."""
+    cfg = _drops_cfg()
+    assert TrackingScenario(cfg).run().summary() == GOLDEN_DROPS
+    res = MultiQueryScenario(cfg, 2).run()
+    for qid in res.per_query:
+        assert res.per_query_summary(qid) == GOLDEN_DROPS
+    # Every drop was charged to every (identical) query at some drop point.
+    for st in res.registry.states.values():
+        assert st.dp[1] + st.dp[2] + st.dp[3] == GOLDEN_DROPS["dropped"]
+
+
+def test_fused_matches_fresh_serial_baseline():
+    """Beyond the frozen dict: the fused per-query views equal freshly-run
+    independent single-query scenarios, the per-query-serial baseline."""
+    cfg = _cfg(duration_s=60.0)
+    serial, _wall = run_queries_serial(cfg, 2)
+    res = MultiQueryScenario(cfg, 2).run()
+    for i, qid in enumerate(sorted(res.per_query)):
+        assert res.per_query_summary(qid) == serial[i].summary()
+
+
+def test_serial_baseline_honours_coverage_and_warm_start_overrides():
+    """run_queries_serial must run the SAME query the fused plane does —
+    including the overrides ScenarioConfig cannot express (coverage,
+    last_seen_camera warm start): a single-spec fused run stays
+    bit-identical to its serial baseline for each of them."""
+    cfg = ScenarioConfig(num_cameras=150, duration_s=40.0, seed=0, tl="prob")
+    for spec in (
+        QuerySpec(coverage=0.5),
+        QuerySpec(tl="wbfs", last_seen_camera=100),
+    ):
+        serial, _ = run_queries_serial(cfg, [spec])
+        res = MultiQueryScenario(cfg, [spec]).run()
+        assert res.per_query_summary(0) == serial[0].summary(), spec
+
+
+def test_trace_peak_queue_ignores_per_query_rows():
+    """A Q:<id> row's 'queue' is that query's whole-pipeline in-flight
+    count; it must not leak into the trace summary's task-queue peak."""
+    from repro.sim import ComputeSlowdown, DynamismSpec
+
+    spec = DynamismSpec((ComputeSlowdown(10.0, 20.0, 4.0, hosts=("node",)),))
+    cfg = ScenarioConfig(num_cameras=100, duration_s=40.0, seed=0, tl="bfs",
+                         drops_enabled=True, dynamism=spec)
+    tr = MultiQueryScenario(cfg, 2).run().result.trace
+    task_peak = max(
+        max(row["queue"])
+        for name, row in tr.series.items()
+        if not name.startswith("Q:")
+    )
+    q_peak = max(max(tr.series[n]["queue"]) for n in tr.tasks("Q:"))
+    assert q_peak > task_peak  # the pollution the fix guards against
+    assert tr.summary()["peak_queue"] == task_peak
+
+
+def test_union_dedup_sources_once_per_camera():
+    """N queries, one pipeline: global source_events equals the solo count
+    (each union camera sources one frame per tick), while per-query sourced
+    counters see the full per-query stream."""
+    cfg = _cfg(duration_s=60.0)
+    solo_events = TrackingScenario(cfg).run().summary()["source_events"]
+    res = MultiQueryScenario(cfg, 4).run()
+    assert res.result.source_events == solo_events
+    for st in res.registry.states.values():
+        assert st.sourced == solo_events
+
+
+# --------------------------------------------------------------------- #
+# Lifecycle: submit / cancel / ttl, orphan accounting                    #
+# --------------------------------------------------------------------- #
+def test_lifecycle_submit_cancel_ttl():
+    cfg = ScenarioConfig(num_cameras=200, duration_s=50.0, seed=0, tl="wbfs")
+    specs = [
+        QuerySpec(submit_at=0.0),
+        QuerySpec(submit_at=10.0, cancel_at=30.0),
+        QuerySpec(submit_at=20.0, ttl_s=5.0, tl_peak_speed=2.0,
+                  last_seen_camera=150),
+    ]
+    res = MultiQueryScenario(cfg, specs).run()
+    assert res.states == {0: "found", 1: "cancelled", 2: "expired"}
+    reg = res.registry
+    st1 = reg.get(1)
+    assert st1.scoped_at == pytest.approx(10.0)
+    assert st1.ended_at == pytest.approx(30.0)
+    # A cancelled query keeps no cameras: its applied set drained.
+    assert st1.applied == set()
+    # Full reconciliation: nothing unaccounted after the drain window.
+    for qid, row in reg.reconcile().items():
+        assert row["unaccounted"] == 0, (qid, row)
+    # No event is attributed to a query after it ended (orphans only).
+    assert all(t <= 30.0 for t, _ in st1.latencies)
+    # found is a one-way transition with a timestamp.
+    assert reg.get(0).found_at is not None
+    assert reg.get(0).found_at <= reg.get(0).latencies[-1][0]
+
+
+def test_found_queries_survive_ttl():
+    """ttl bounds the *search*: a query that found its entity keeps going."""
+    cfg = _cfg(duration_s=40.0)
+    res = MultiQueryScenario(cfg, [QuerySpec(ttl_s=20.0)]).run()
+    assert res.states[0] == "found"
+    assert res.registry.get(0).ended_at is None
+
+
+def test_late_submission_seeds_from_entity_position():
+    """A query submitted mid-run starts its spotlight at the entity's
+    current neighborhood and still converges to found."""
+    cfg = _cfg(duration_s=80.0)
+    res = MultiQueryScenario(cfg, [QuerySpec(), QuerySpec(submit_at=40.0)]).run()
+    assert res.states == {0: "found", 1: "found"}
+    st = res.registry.get(1)
+    assert st.scoped_at == pytest.approx(40.0)
+    assert st.sourced > 0
+    assert all(t >= 40.0 for t, _ in st.latencies)
+
+
+# --------------------------------------------------------------------- #
+# Union spotlight: kernel mode == per-query mode                         #
+# --------------------------------------------------------------------- #
+def test_kernel_spotlight_mode_bit_equal_for_wbfs():
+    cfg = ScenarioConfig(num_cameras=200, duration_s=50.0, seed=0, tl="wbfs")
+    specs = [QuerySpec(), QuerySpec(submit_at=10.0, tl_peak_speed=6.0,
+                                    last_seen_camera=120)]
+    a = MultiQueryScenario(cfg, specs).run()
+    b = MultiQueryScenario(cfg, specs, spotlight_mode="kernel").run()
+    assert a.result.summary() == b.result.summary()
+    for qid in a.per_query:
+        assert a.per_query_summary(qid) == b.per_query_summary(qid)
+
+
+def test_kernel_spotlight_mode_rejects_hop_ball_tls():
+    cfg = _cfg(tl="bfs")
+    with pytest.raises(ValueError, match="weighted-ball"):
+        MultiQueryScenario(cfg, 1, spotlight_mode="kernel")
+    with pytest.raises(ValueError, match="spotlight_mode"):
+        MultiQueryScenario(cfg, 1, spotlight_mode="warp")
+
+
+def test_kernel_spotlight_mode_with_probabilistic_coverage_groups():
+    """Mixed wbfs + prob queries in kernel mode: the blind-spot balls group
+    by coverage, each group one multi-source dispatch, and the prob query's
+    active sets match its own per-query-mode run."""
+    cfg = ScenarioConfig(num_cameras=150, duration_s=40.0, seed=0, tl="prob")
+    specs = [QuerySpec(), QuerySpec(tl="wbfs", tl_peak_speed=6.0,
+                                    last_seen_camera=100),
+             QuerySpec(coverage=0.8, last_seen_camera=50)]
+    a = MultiQueryScenario(cfg, specs).run()
+    b = MultiQueryScenario(cfg, specs, spotlight_mode="kernel").run()
+    assert a.result.summary() == b.result.summary()
+    for qid in a.per_query:
+        assert a.per_query_summary(qid) == b.per_query_summary(qid)
+
+
+def test_programmatic_cancel_mid_run():
+    """scenario.cancel(qid) is the API surface QuerySpec.cancel_at rides:
+    calling it from a scheduled event ends the query identically."""
+    cfg = _cfg(duration_s=40.0)
+    scenario = MultiQueryScenario(cfg, 2)
+    scenario.sim.schedule_at(15.0, scenario.cancel, 1, "user-abort")
+    res = scenario.run()
+    assert res.states == {0: "found", 1: "cancelled"}
+    st = res.registry.get(1)
+    assert st.reason == "user-abort"
+    assert st.ended_at == pytest.approx(15.0)
+    # Double-cancel and double-submit are idempotent no-ops.
+    scenario.cancel(1)
+    scenario._submit_query(0)
+    assert res.registry.get(0).live
+
+
+def test_probabilistic_shares_multi_source_ball_implementation():
+    """The cleanup contract: TLProbabilistic.spotlight_multi's kernel path
+    and the query plane's union spotlight run through ONE shared
+    multi-source implementation, and it matches the incremental path."""
+    from repro.core.roadnet import make_road_network
+    from repro.core.tracking import TLProbabilistic, multi_source_spotlight
+
+    net = make_road_network(num_vertices=150, target_edges=423, seed=3)
+    cams = {c: c for c in range(0, 150, 2)}
+    tl = TLProbabilistic(net, cams, entity_speed=4.0, coverage=0.9)
+    for i in range(5):
+        tl.track(f"e{i}", camera_id=(i * 31) % 150 // 2 * 2, timestamp=float(i))
+    py = tl.spotlight_multi(40.0)
+    tl._entity_searches.clear()
+    kern = tl.spotlight_multi(40.0, use_kernel=True)
+    assert py == kern
+    # coverage=None returns the full ball - every camera the per-source
+    # coverage sets could have chosen is inside it.
+    items = list(tl.entities.items())
+    full = multi_source_spotlight(
+        net, cams,
+        [v for _, (v, _) in items],
+        [tl._entity_radius(t, 40.0) for _, (_, t) in items],
+    )
+    assert kern <= set().union(*full)
+
+
+# --------------------------------------------------------------------- #
+# Query-major fused re-ID                                                #
+# --------------------------------------------------------------------- #
+def test_reid_match_multi_bit_exact_vs_per_query_serial():
+    from repro.kernels import dispatch
+
+    rng = np.random.default_rng(7)
+    g = rng.normal(size=(13, 32)).astype(np.float32)
+    q = rng.normal(size=(5, 32)).astype(np.float32)
+    mask = rng.uniform(size=(13, 5)) < 0.7
+    s_f, m_f = dispatch.reid_match_multi(g, q, mask=mask, threshold=0.3)
+    s_f, m_f = np.asarray(s_f), np.asarray(m_f)
+    for j in range(5):
+        rows = np.nonzero(mask[:, j])[0]
+        if not len(rows):
+            continue
+        s1, m1 = dispatch.reid_match_multi(g[rows], q[j : j + 1], threshold=0.3)
+        assert np.array_equal(np.asarray(s1)[:, 0], s_f[rows, j])
+        assert np.array_equal(np.asarray(m1)[:, 0], m_f[rows, j])
+    # Tenancy mask: pairs outside it can never match.
+    assert np.all(np.isneginf(s_f[~mask]))
+    assert not m_f[~mask].any()
+
+
+def test_reid_match_multi_validates_shapes():
+    from repro.kernels import dispatch
+
+    with pytest.raises(ValueError, match="gallery"):
+        dispatch.reid_match_multi(np.zeros(4), np.zeros((1, 4)))
+    with pytest.raises(ValueError, match="queries"):
+        dispatch.reid_match_multi(np.zeros((2, 4)), np.zeros((1, 5)))
+    with pytest.raises(ValueError, match="mask"):
+        dispatch.reid_match_multi(
+            np.zeros((2, 4)), np.zeros((1, 4)), mask=np.ones((3, 1), bool)
+        )
+
+
+def test_fused_embed_path_counts_per_query_matches():
+    """embed_dim > 0: one reid_match_multi dispatch per VA batch serves all
+    live queries; the true-embedding query reproduces the solo matcher's
+    count bit-for-bit, per-query counts stay separate."""
+    from repro.kernels import dispatch
+
+    cfg = _cfg(duration_s=40.0, embed_dim=16)
+    solo = TrackingScenario(cfg).run()
+    scenario = MultiQueryScenario(
+        cfg, [QuerySpec(), QuerySpec(embedding_seed=99)]
+    )
+    dispatch.reset_stats()
+    res = scenario.run()
+    assert res.per_query_summary(0) == solo.summary()
+    assert res.per_query[0].reid_matched == solo.reid_matched
+    assert res.registry.get(1).embedding is not None
+    # The live-query block stays device-resident across VA batches (the
+    # registry caches one stacked array per live set).
+    stats = dispatch.stats()
+    assert stats["reid_multi_calls"] > 2
+    assert stats["device_cache_hits"] > stats["device_cache_misses"]
+
+
+# --------------------------------------------------------------------- #
+# Admission control                                                      #
+# --------------------------------------------------------------------- #
+def test_admission_max_live_caps_and_queues():
+    cfg = _cfg(duration_s=60.0)
+    specs = [QuerySpec(submit_at=float(i)) for i in range(6)]
+    res = MultiQueryScenario(
+        cfg, specs, admission=AdmissionPolicy(max_live=2)
+    ).run()
+    assert res.summary()["queries_live_end"] == 2
+    assert res.summary()["adm_queued"] == 4
+    assert res.summary()["adm_queue_left"] == 4  # cap never frees up
+
+
+def test_admission_hard_reject_mode():
+    cfg = _cfg(duration_s=30.0)
+    specs = [QuerySpec(submit_at=float(i)) for i in range(4)]
+    res = MultiQueryScenario(
+        cfg, specs,
+        admission=AdmissionPolicy(max_live=1, queue_rejected=False),
+    ).run()
+    assert res.summary()["adm_rejected"] == 3
+    rejected = [s for s in res.registry.states.values()
+                if s.state == "cancelled"]
+    assert len(rejected) == 3
+    assert all(s.reason == "admission-rejected" for s in rejected)
+
+
+def test_admission_beta_floor_blocks_and_recovers():
+    """A degraded CR-tier budget queues submissions; once it recovers the
+    queue drains on the control cadence."""
+
+    class _Scenario:  # minimal duck type for the controller
+        class app:
+            gamma = 15.0
+
+        _trace = None
+
+        class compiled:
+            va_tasks: list = []
+            cr_tasks: list = []
+
+    ctrl = AdmissionController(AdmissionPolicy(beta_floor=1.0))
+    # No budget evidence (inf) -> admit.
+    assert ctrl.decide(_Scenario, 0) == "admit"
+
+    class _Budget:
+        def __init__(self, v):
+            self.v = v
+
+        def min_budget(self):
+            return self.v
+
+    class _Task:
+        name = "VA-0"
+
+        def __init__(self, v):
+            self.budget = _Budget(v)
+
+    _Scenario.compiled.va_tasks = [_Task(0.2)]
+    assert ctrl.decide(_Scenario, 0) == "queue"
+    _Scenario.compiled.va_tasks = [_Task(5.0)]
+    assert ctrl.admittable(_Scenario, 0)
+    assert ctrl.decide(_Scenario, 0) == "admit"
+    assert ctrl.decisions == {"admit": 2, "queue": 1, "reject": 0}
+
+
+# --------------------------------------------------------------------- #
+# Per-query telemetry + quality                                          #
+# --------------------------------------------------------------------- #
+def test_trace_gains_per_query_rows_and_quality():
+    from repro.sim import ComputeSlowdown, DynamismSpec
+
+    spec = DynamismSpec((ComputeSlowdown(20.0, 30.0, 4.0, hosts=("node",)),))
+    cfg = _cfg(duration_s=60.0, drops_enabled=True,
+               avoid_drop_positives=True, dynamism=spec)
+    res = MultiQueryScenario(cfg, [QuerySpec(), QuerySpec(submit_at=25.0)]).run()
+    trace = res.result.trace
+    rows = trace.tasks("Q:")
+    assert rows == ["Q:0", "Q:1"]
+    from repro.sim.dynamism import TRACE_FIELDS
+
+    n = len(trace.times)
+    for name in rows:
+        for f in TRACE_FIELDS:
+            assert len(trace.series[name][f]) == n, (name, f)
+    # Q:1 existed only from t=25: its earlier beta samples are backfilled inf.
+    assert math.isinf(trace.series["Q:1"]["beta"][0])
+    # executed is cumulative per query and reconciles with the registry.
+    assert trace.series["Q:0"]["executed"][-1] == res.registry.get(0).completed
+    # Per-query ground-truth quality rides each per-query result.
+    q0 = res.per_query[0].quality
+    assert set(q0) == {"truth_events", "track_recall", "track_precision"}
+    assert 0.0 <= q0["track_recall"] <= 1.0
+
+
+def test_per_query_quality_matches_solo_for_identical_queries():
+    from repro.sim import DynamismSpec
+
+    spec = DynamismSpec(())  # no perturbation: telemetry + quality only
+    cfg = _cfg(duration_s=60.0, dynamism=spec)
+    solo = TrackingScenario(cfg).run()
+    res = MultiQueryScenario(cfg, 2).run()
+    for qid in res.per_query:
+        assert res.per_query[qid].quality == solo.quality
+
+
+# --------------------------------------------------------------------- #
+# Sweep + registry mechanics                                             #
+# --------------------------------------------------------------------- #
+def test_query_case_runs_through_sweep_runner():
+    cfg = _cfg(duration_s=40.0)
+    grid = [
+        ("solo", cfg),
+        ("fused4", QueryCase(queries=4, workload=cfg)),
+    ]
+    res = SweepRunner(mode="serial").run(grid)
+    by_name = {r.name: r for r in res.records}
+    assert by_name["fused4"].summary["queries"] == 4
+    assert (
+        by_name["fused4"].summary["source_events"]
+        == by_name["solo"].summary["source_events"]
+    )
+
+
+def test_registry_bits_are_never_reused():
+    reg = QueryRegistry()
+    a = reg.register(QuerySpec())
+    reg.mark(a, "cancelled", 0.0)
+    b = reg.register(QuerySpec())
+    assert a.bit != b.bit
+    assert [s.query_id for s in reg.for_mask(a.bit | b.bit)] == [0, 1]
+
+
+def test_registry_rejects_duplicate_ids_and_bad_states():
+    reg = QueryRegistry()
+    reg.register(QuerySpec(query_id=7))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(QuerySpec(query_id=7))
+    with pytest.raises(ValueError, match="unknown query state"):
+        reg.mark(reg.get(7), "bogus", 0.0)
+
+
+def test_normalize_queries_validation():
+    from repro.query import normalize_queries
+
+    assert len(normalize_queries(3)) == 3
+    with pytest.raises(ValueError):
+        normalize_queries(0)
+    with pytest.raises(ValueError):
+        normalize_queries([])
+    with pytest.raises(TypeError):
+        normalize_queries(["nope"])

@@ -1,0 +1,130 @@
+"""Property tests for the multi-query tenancy plane.
+
+Requires the optional ``hypothesis`` test dependency (skipped cleanly when
+missing, like the other ``*_props`` modules).
+
+Over random query submit/cancel schedules the fused driver must keep its
+books: masks only ever tag queries that are live at source time (so no
+event *executes for* an expired/cancelled query — anything in flight when a
+query ends is orphan-accounted, never attributed), and every per-query
+counter reconciles exactly with the shared pipeline's ``ScenarioResult``
+after the drain window.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.query import MultiQueryScenario, QuerySpec
+from repro.sim import ScenarioConfig
+
+DURATION = 40.0
+
+# One world key for every example: the process-wide world cache makes each
+# hypothesis example pay scenario construction only, not geometry builds.
+def _cfg():
+    return ScenarioConfig(num_cameras=100, duration_s=DURATION, seed=0,
+                          tl="bfs", batching="dynamic", m_max=25)
+
+
+@st.composite
+def schedules(draw):
+    n = draw(st.integers(1, 5))
+    specs = []
+    for i in range(n):
+        submit = draw(st.floats(0.0, DURATION * 0.75, allow_nan=False))
+        if draw(st.booleans()):
+            cancel = draw(
+                st.floats(submit + 0.5, DURATION + 5.0, allow_nan=False)
+            )
+        else:
+            cancel = None
+        specs.append(
+            QuerySpec(
+                submit_at=submit,
+                cancel_at=cancel,
+                tl_peak_speed=draw(st.sampled_from([3.0, 4.0, 6.0])),
+                last_seen_camera=draw(
+                    st.one_of(st.none(), st.integers(0, 99))
+                ),
+            )
+        )
+    return specs
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(specs=schedules())
+def test_random_schedules_keep_the_books(specs):
+    res = MultiQueryScenario(_cfg(), specs).run()
+    reg = res.registry
+    base = res.result
+
+    # Global sink accounting is untouched by the tenancy plane.
+    assert base.on_time + base.delayed == len(base.latencies)
+
+    total_attr_completed = 0
+    for qid, st_q in reg.states.items():
+        # Reconciliation: after the drain window (duration + 3 gamma, drops
+        # off) every sourced event either completed or orphaned.
+        assert st_q.dropped == 0
+        assert (
+            st_q.sourced
+            == st_q.completed + st_q.orphan_completed
+        ), (qid, reg.reconcile())
+        total_attr_completed += st_q.completed
+
+        spec = st_q.spec
+        # Lifecycle windows: nothing attributed before activation or after
+        # the end — "no event executes for an expired query".
+        if st_q.scoped_at is not None:
+            assert all(t >= st_q.scoped_at for t, _ in st_q.latencies)
+        else:
+            assert st_q.sourced == 0 and st_q.completed == 0
+        if st_q.ended_at is not None:
+            assert all(t <= st_q.ended_at for t, _ in st_q.latencies)
+            assert st_q.applied == set() or st_q.state == "found"
+        # found_at implies at least one positive attribution.
+        if st_q.found_at is not None:
+            assert st_q.positives_completed > 0
+
+    # Every completion the queries claim happened at the shared sink; an
+    # event tagged for k queries is attributed (up to) k times.
+    assert total_attr_completed <= len(base.latencies) * max(len(specs), 1)
+    # Each event was sourced for at least one query, so the per-query sum
+    # bounds the global count from above.
+    per_q_sourced = sum(s.sourced for s in reg.states.values())
+    assert base.source_events <= per_q_sourced or base.source_events == 0
+
+    # Terminal states are only ever the declared lifecycle states.
+    assert all(
+        s.state in ("submitted", "scoped", "found", "expired", "cancelled")
+        for s in reg.states.values()
+    )
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(
+    n=st.integers(1, 4),
+    cancel_at=st.floats(5.0, 35.0, allow_nan=False),
+)
+def test_cancel_mid_run_frees_cameras_and_masks(n, cancel_at):
+    """After a cancellation no new events are tagged for the dead query:
+    its sourced counter freezes at (completed + orphans), and the camera
+    mask map carries no live bit for it."""
+    specs = [QuerySpec()] + [
+        QuerySpec(submit_at=1.0 * i, cancel_at=cancel_at) for i in range(n)
+    ]
+    scenario = MultiQueryScenario(_cfg(), specs)
+    res = scenario.run()
+    for qid, st_q in res.registry.states.items():
+        if st_q.state == "cancelled":
+            assert st_q.sourced == st_q.completed + st_q.orphan_completed
+            # The mask map holds no live bit for a dead query.
+            assert all(
+                not (mask & st_q.bit)
+                for mask in scenario._mask_of.values()
+            ) or st_q.applied == set()
+    # The always-live query ran to the end.
+    assert res.registry.get(0).state in ("scoped", "found")

@@ -120,6 +120,70 @@ class TestServedStage:
         assert t2["accepts"] == 1 and t2["rejects"] == 1
         assert t2["beta"] == stage.budget.min_budget()
 
+    def test_telemetry_query_id_dimension(self):
+        """Multi-query serving: per-query rows share the sim plane's
+        TRACE_FIELDS shape, counters split by StageRequest.query_id, and
+        drops are charged to the owning query."""
+        from repro.sim.dynamism import TRACE_FIELDS
+
+        stage = self.make_stage(drops=False)
+        for qid in (7, 7, 9, None):
+            res = stage.submit(
+                StageRequest(
+                    np.zeros(64, np.float32),
+                    source_time=stage.clock(),
+                    query_id=qid,
+                )
+            )
+        stage.flush()
+        assert stage.query_ids() == [7, 9]
+        t7, t9 = stage.telemetry(7), stage.telemetry(9)
+        assert set(t7) == set(TRACE_FIELDS)
+        assert t7["executed"] == 2 and t9["executed"] == 1
+        # The stage-wide row still counts everything (incl. untagged).
+        assert stage.telemetry()["executed"] == 4
+        # A DP1 drop lands in the owning query's row only.
+        stage2 = self.make_stage()
+        stage2.budget.set_budget(0.01)
+        stage2.submit(
+            StageRequest(
+                np.zeros(64, np.float32),
+                source_time=stage2.clock() - 10.0,
+                query_id=3,
+            )
+        )
+        assert stage2.telemetry(3)["dp1"] == 1
+        assert stage2.telemetry(4)["dp1"] == 0
+
+    def test_query_major_bucket_padding(self):
+        """set_queries pads the live-query block to a power-of-two bucket
+        and the step runs query-major: one device call serves every query,
+        and growing within the bucket never changes the padded shape."""
+        shapes = []
+
+        def step(x, qblock, nq):
+            shapes.append((x.shape, tuple(qblock.shape), int(nq)))
+            return jnp.asarray(x)
+
+        stage = ServedStage(
+            "VA", step, lambda b: 0.0001 * b, gamma=5.0, m_max=4,
+            buckets=(1, 4), drops_enabled=False,
+        )
+        stage.set_queries(np.ones((3, 16), np.float32))
+        stage.submit(StageRequest(np.zeros(16, np.float32),
+                                  source_time=stage.clock()))
+        stage.flush()
+        assert shapes and shapes[-1][1] == (8, 16)  # 3 -> bucket(3) == 8
+        assert shapes[-1][2] == 3
+        stage.set_queries(np.ones((5, 16), np.float32))
+        stage.submit(StageRequest(np.zeros(16, np.float32),
+                                  source_time=stage.clock()))
+        stage.flush()
+        assert shapes[-1][1] == (8, 16) and shapes[-1][2] == 5
+        # Empty block falls back to the single-query step signature.
+        stage.set_queries(np.zeros((0, 16), np.float32))
+        assert stage._query_block is None
+
 
 def test_reid_match_pipeline():
     tower = init_reid_tower(jax.random.PRNGKey(2), d_in=32, d_embed=16)
