@@ -18,9 +18,10 @@ records in both full and smoke modes).  ``us_per_event`` is computed from
 ``run()`` wall-time only; construction is reported separately as ``build_s``.
 
 ``--compare PATH`` re-times the comparable benchmark families recorded in
-PATH (pipeline + the fused multi-query cases, matching the current
-``--smoke`` mode) and exits non-zero when any ``us_per_event`` regressed by
-more than ``--compare-tolerance`` (default 35%).  Families absent from a
+PATH (pipeline, the fused multi-query cases, and the journaled fault-crash
+runs, matching the current ``--smoke`` mode) and exits non-zero when any
+``us_per_event`` regressed by more than ``--compare-tolerance`` (default
+35%).  Families absent from a
 frozen baseline are tolerated, so old baselines keep gating after new
 benchmark families land.
 
@@ -314,6 +315,57 @@ def _retime_queries(ctx, cases) -> Dict[str, Tuple[float, float, float]]:
     return out
 
 
+def _faults_shape(smoke: bool) -> Tuple[int, float, float, float, float, float]:
+    """(cams, duration_s, crash_t0, outage_s, t_kill, snapshot_period_s).
+
+    The crash window closes well before the horizon so post-heal budget
+    recovery is measurable, and the driver is killed after at least one
+    snapshot past the heal so the replay covers the whole fault."""
+    if smoke:
+        return 300, 150.0, 50.0, 40.0, 120.0, 30.0
+    return 1000, 600.0, 300.0, 120.0, 500.0, 60.0
+
+
+def _faults_cfg(cams: int, dur: float, crash_t0: float, outage_s: float,
+                batcher_kw: Dict) -> ScenarioConfig:
+    from repro.sim import HostCrash
+
+    return ScenarioConfig(
+        num_cameras=cams, duration_s=dur, seed=0, tl="bfs",
+        drops_enabled=True, avoid_drop_positives=True,
+        dynamism=DynamismSpec((HostCrash(("node0",), t_start=crash_t0,
+                                         outage_s=outage_s),)),
+        **batcher_kw,
+    )
+
+
+def _retime_faults(ctx, cases) -> Dict[str, Tuple[float, float, float]]:
+    """Re-time the uninterrupted journaled crash runs (the recorded
+    ``us_per_event`` basis); the kill/restore cycle is derived-only."""
+    from repro.query import MultiQueryScenario
+    from repro.serving.journal import Journal
+    from repro.sim import WorldKey, get_world
+
+    cams, dur, crash_t0, outage_s, _t_kill, period = _faults_shape(ctx.smoke)
+    out: Dict[str, Tuple[float, float, float]] = {}
+    for bname, bkw in DYNAMISM_BATCHERS[:2]:
+        name = f"crash_{bname}"
+        if name not in cases:
+            continue
+        cfg = _faults_cfg(cams, dur, crash_t0, outage_s, bkw)
+        get_world(WorldKey.from_config(cfg))
+        for _ in range(2 if ctx.smoke else 1):
+            t0 = time.perf_counter()
+            scenario = MultiQueryScenario(cfg, 2, journal=Journal(period))
+            res = scenario.run()
+            wall = time.perf_counter() - t0
+            events = max(res.result.source_events, 1)
+            prev = out.get(name)
+            if prev is None or wall < prev[1]:
+                out[name] = (wall * 1e6 / events, wall, scenario.build_seconds)
+    return out
+
+
 #: Benchmark families the --compare gate knows how to re-time.  Families
 #: present in the baseline but unknown here — or known here but absent from
 #: a frozen baseline recorded before the family existed — are skipped with
@@ -321,6 +373,7 @@ def _retime_queries(ctx, cases) -> Dict[str, Tuple[float, float, float]]:
 COMPARABLE_FAMILIES = {
     "pipeline": _retime_pipeline,
     "queries": _retime_queries,
+    "faults": _retime_faults,
 }
 
 
@@ -592,6 +645,66 @@ def bench_queries(ctx) -> None:
         print(f"{name},{wall * 1e6 / max(s['source_events'], 1):.1f},{derived}")
 
 
+# --------------------------------------------------------------------- #
+# Fault tolerance — mid-run host crash under DB vs SB: journaled          #
+# kill/restore/replay cycle (recovery time, bit-identity) + post-heal     #
+# budget recovery.                                                        #
+# --------------------------------------------------------------------- #
+def bench_faults(ctx) -> None:
+    from repro.query import MultiQueryScenario
+    from repro.serving.journal import Journal
+    from repro.sim import WorldKey, get_world
+
+    print(f"{SEP}\n# Fault tolerance — host crash, journaled restore, DB vs SB")
+    cams, dur, crash_t0, outage_s, t_kill, period = _faults_shape(ctx.smoke)
+    heal = crash_t0 + outage_s
+    for bname, bkw in DYNAMISM_BATCHERS[:2]:  # DB vs SB (the ISSUE pairing)
+        cfg = _faults_cfg(cams, dur, crash_t0, outage_s, bkw)
+        get_world(WorldKey.from_config(cfg))  # warm: baselines are warm too
+
+        # Reference: the uninterrupted journaled run (us_per_event basis).
+        t0 = time.perf_counter()
+        ref = MultiQueryScenario(cfg, 2, journal=Journal(period))
+        ref_res = ref.run()
+        wall = time.perf_counter() - t0
+
+        # Kill the driver at t_kill; only its journal (WAL) survives.
+        crashed = MultiQueryScenario(cfg, 2, journal=Journal(period))
+        crashed.run_until(t_kill)
+        wal = crashed.journal
+        restore_to = wal.last_snapshot()["time"]
+
+        # Recovery = build a fresh scenario + replay to the last snapshot
+        # (bit-verified against the WAL's frontier), then serve to the end.
+        t0 = time.perf_counter()
+        recovered = MultiQueryScenario(cfg, 2, journal=Journal(period))
+        recovered.restore(wal)
+        recovery_s = time.perf_counter() - t0
+        rec_res = recovered.run()
+
+        bit_identical = (
+            all(rec_res.per_query_summary(q) == ref_res.per_query_summary(q)
+                for q in ref_res.per_query)
+            and recovered.journal.digest() == ref.journal.digest()
+        )
+        s = ref_res.summary()
+        events = max(s["source_events"], 1)
+        brec = ref_res.result.trace.budget_recovery("VA", until=dur)
+        fault_drops = ref.sim.faults.fault_drops
+        derived = (
+            f"crash=node0@[{crash_t0:g},{heal:g});t_kill={t_kill:g};"
+            f"snap_period_s={period:g};restore_to={restore_to:g};"
+            f"recovery_s={recovery_s:.3f};bit_identical={bit_identical};"
+            f"dp_fault={fault_drops};retries={ref.sim.faults.retries};"
+            f"beta_pre={brec['pre']:.3f};beta_post={brec['post']:.3f};"
+            f"beta_recovery={brec['recovery']:.3f};"
+            f"dropped_frac={s['dropped_frac']};events={s['source_events']}"
+        )
+        record("faults", f"crash_{bname}", wall * 1e6 / events, derived,
+               run_s=round(wall, 4), mode=_mode_label(ctx))
+        print(f"crash_{bname},{wall * 1e6 / events:.1f},{derived}")
+
+
 def bench_scale_fig13(ctx) -> None:
     _run_grid("fig13", ctx)
     # Multi-entity probabilistic spotlight: bucket-batched CSR relaxation
@@ -752,6 +865,7 @@ BENCHES = {
     "apps": bench_apps,
     "dynamism": bench_dynamism,
     "queries": bench_queries,
+    "faults": bench_faults,
     "fig567": bench_batching_fig567,
     "fig10": bench_tracking_fig10,
     "fig11": bench_dropping_fig11,

@@ -659,6 +659,61 @@ class CompiledApp:
     def all_tasks(self) -> List[Task]:
         return list(self.va_tasks) + list(self.cr_tasks) + list(self.fc_tasks.values())
 
+    # ------------------------------------------------------------------ #
+    # Serving-plane durability (repro.serving.journal)                    #
+    # ------------------------------------------------------------------ #
+    _SNAP_STATS = (
+        "arrived",
+        "dropped_dp1",
+        "dropped_dp2",
+        "dropped_dp3",
+        "dropped_fault",
+        "executed",
+        "batches",
+        "probes",
+        "accepts_rx",
+        "rejects_rx",
+    )
+
+    def snapshot(self) -> Dict[str, float]:
+        """Flat ``str -> float`` frontier of the compiled pipeline: every
+        task's cumulative counters + its min completion budget, plus the
+        sink's ledger.  Keys are deterministic for a deterministic run —
+        lazily-materialized FCs appear exactly when a replay would
+        materialize them — so two bit-identical runs produce bit-identical
+        snapshots (the journal's restore contract)."""
+        snap: Dict[str, float] = {}
+        for t in self.all_tasks():
+            s, p = t.stats, f"task::{t.name}"
+            for name in self._SNAP_STATS:
+                snap[f"{p}::{name}"] = float(getattr(s, name))
+            snap[f"{p}::beta"] = float(t.budget.min_budget())
+        sink = self.sink
+        snap["sink::arrived"] = float(sink.stats.arrived)
+        snap["sink::on_time"] = float(sink.on_time)
+        snap["sink::delayed"] = float(sink.delayed)
+        snap["sink::probes_seen"] = float(sink.probes_seen)
+        snap["query_pushes"] = float(self.query_pushes)
+        return snap
+
+    def restore(self, snap: Dict[str, float]) -> "CompiledApp":
+        """Verify this app's replayed state bit-matches ``snap``.
+
+        The simulation is deterministic in (config, spec, seed), so restore
+        is replay-based: the scenario rebuilds from inputs and re-runs to
+        the snapshot's timestamp — this gate then proves the reconstructed
+        frontier equals the journalled one exactly (``RestoreMismatch``
+        lists every differing key otherwise) rather than silently trusting
+        the replay."""
+        from repro.serving.journal import RestoreMismatch, diff_snapshots
+
+        diff = diff_snapshots(snap, self.snapshot())
+        if diff:
+            raise RestoreMismatch(
+                "compiled app does not match snapshot:\n  " + "\n  ".join(diff)
+            )
+        return self
+
     def drops_by_task(self) -> Dict[str, int]:
         return {t.name: t.stats.dropped for t in self.all_tasks() if t.stats.dropped}
 

@@ -51,7 +51,13 @@ from .events import (
     release_header,
 )
 
-__all__ = ["Task", "SinkTask", "PipelineStats", "STAT_FIELDS", "Scheduler"]
+__all__ = ["Task", "SinkTask", "PipelineStats", "STAT_FIELDS", "Scheduler", "DP_FAULT"]
+
+#: Drop-point index for fault losses (crashed host, exhausted retries across
+#: a partition) — the fourth drop class next to DP1/DP2/DP3.  Charged through
+#: the same ``on_drop_hook`` so per-query accounting reconciles exactly, but
+#: it is *not* a §4.3 deadline decision: no reject signal, no probe.
+DP_FAULT = 4
 
 UserLogic = Callable[[List[Event], Dict[str, Any]], List[Event]]
 Partitioner = Callable[[Event], str]
@@ -89,11 +95,21 @@ class PipelineStats:
     probes: int = 0
     accepts_rx: int = 0
     rejects_rx: int = 0
+    # Fault losses (DP_FAULT): events lost to a crashed host or to retries
+    # exhausted across a partition.  Deliberately *not* in STAT_FIELDS — the
+    # dynamism trace digests its columns, and fault losses are a different
+    # phenomenon from the §4.3 deadline drops it tracks.
+    dropped_fault: int = 0
     batch_sizes: List[int] = field(default_factory=list)
 
     @property
     def dropped(self) -> int:
-        return self.dropped_dp1 + self.dropped_dp2 + self.dropped_dp3
+        return (
+            self.dropped_dp1
+            + self.dropped_dp2
+            + self.dropped_dp3
+            + self.dropped_fault
+        )
 
 
 #: Telemetry field -> PipelineStats attribute for the cumulative counters a
@@ -174,6 +190,11 @@ class Task:
         # batching decisions use — stragglers are unannounced).  None in
         # every undisturbed run: the hot path pays one attribute test.
         self._xi_mult = getattr(sim, "xi_multiplier", None)
+        # Fault plane (repro.sim.dynamism.FaultPlane) snapshotted like the
+        # xi multiplier: None in every undisturbed run, so healthy transmits
+        # pay one attribute test.  When present, every inter-task send goes
+        # through the fault-checked `_send` path (timeout + retry + loss).
+        self._faults = getattr(sim, "faults", None)
         # Fused streaming (opt-in, see ``fuse_streaming``): collapse the
         # execute->transmit pair into a single scheduled downstream arrival.
         self.fuse_streaming = False
@@ -524,7 +545,7 @@ class Task:
                     break
         keep_records = self.drops_enabled
         budget_record = self.budget.record
-        if paired and not keep_records and self.downstream:
+        if paired and not keep_records and self.downstream and self._faults is None:
             # Drops-off fast path: no DP3, no records, and every output to
             # the same destination shares one transit — deliver each
             # destination's events with a single scheduled callback instead
@@ -636,6 +657,12 @@ class Task:
                 self.stats.dropped_dp3 += 1
                 self._on_drop(ev, epsilon=u + pi - beta, downstream=dst_name, point=3)
                 return
+        if self._faults is not None:
+            # Fault plane installed: every inter-task send is fault-checked
+            # (src/dst liveness, partition, timeout + retry).  fuse_streaming
+            # is never compiled in under faults, so depart_at is None here.
+            self._send(dst, ev)
+            return
         static = getattr(self.sim, "transit_is_static", False)
         delay = self._transit_memo.get(dst_name) if static else None
         if delay is None:
@@ -651,6 +678,62 @@ class Task:
             # time (depart_at + delay) matches the unfused two-hop float
             # arithmetic exactly.
             self.sim.schedule_at(depart_at + delay, dst.on_arrival, ev)
+
+    # ------------------------------------------------------------------ #
+    # Fault-checked transmit (fault plane)                               #
+    # ------------------------------------------------------------------ #
+    def _send(self, dst: "Task", ev: Event, attempt: int = 0) -> None:
+        """Transmit under a fault plane: a dead sender loses its output
+        outright; a dead destination or a partitioned link times out and
+        retries with seeded capped exponential backoff until
+        ``max_retries``, after which the event is charged as ``dp_fault``."""
+        fp = self._faults
+        sim = self.sim
+        now = sim.time
+        if fp.host_down(self.node, now):
+            # The sending host is inside a crash window: anything it was
+            # holding (including a just-finished batch's outputs) is lost.
+            self._fault_drop(ev)
+            return
+        if fp.send_blocked(self.node, dst.node, now):
+            if attempt >= fp.retry.max_retries:
+                self._fault_drop(ev)
+                return
+            fp.sends_blocked += 1
+            fp.retries += 1
+            sim.schedule(fp.retry_delay(attempt), self._send, dst, ev, attempt + 1)
+            return
+        delay = sim.transit_delay(self.node, dst.node, self.output_event_bytes)
+        sim.schedule(delay, self._arrive_checked, dst, ev)
+
+    def _arrive_checked(self, dst: "Task", ev: Event) -> None:
+        """Delivery completion under a fault plane: a destination that died
+        while the event was in transit loses it (in-flight loss)."""
+        fp = self._faults
+        if fp is not None and fp.host_down(dst.node, self.sim.time):
+            dst._fault_drop(ev)
+            return
+        dst.on_arrival(ev)
+
+    def _fault_drop(self, ev: Event) -> None:
+        """Charge an event lost to a fault (crashed host, partition retries
+        exhausted) as the ``dp_fault`` class.  Unlike the §4.3 drop points
+        this is not a deadline decision: the query-plane hook still fires
+        (point ``DP_FAULT``) so per-query books reconcile exactly, but no
+        reject signal is sent — a fault says nothing about budgets — and no
+        probe is re-injected."""
+        header = ev.header
+        if header is None:
+            return  # already accounted (defensive: double flush)
+        self.stats.dropped_fault += 1
+        fp = self._faults
+        if fp is not None:
+            fp.fault_drops += 1
+        hook = self.on_drop_hook
+        if hook is not None:
+            hook(ev, DP_FAULT, 0.0)
+        ev.header = None  # type: ignore[assignment]
+        release_header(header)
 
     # ------------------------------------------------------------------ #
     # Signals (§4.5)                                                     #

@@ -53,6 +53,11 @@ class AdmissionPolicy:
     max_live: Optional[int] = None
     queue_rejected: bool = True
     signal_prefix: str = "VA"
+    #: Shed new submissions to the queue while a NetworkPartition window is
+    #: open (fault plane, PR 6): a partitioned pipeline cannot honor a new
+    #: query's QoS, and queued queries requeue FIFO on heal via the existing
+    #: control-cadence drain.
+    shed_on_partition: bool = True
 
     def floor(self, gamma: float) -> float:
         if self.beta_frac_of_gamma is not None:
@@ -96,12 +101,24 @@ class AdmissionController:
         ]
         return min((t.budget.min_budget() for t in tasks), default=math.inf)
 
+    def partition_active(self, scenario) -> bool:
+        """True while any ``NetworkPartition`` window of the scenario's fault
+        plane contains the current sim time (duck-typed, like the dynamism
+        plane's own perturbation discovery)."""
+        sim = getattr(scenario, "sim", None)
+        faults = getattr(sim, "faults", None)
+        if faults is None:
+            return False
+        return faults.partition_active(sim.time)
+
     # ------------------------------------------------------------------ #
     def admittable(self, scenario, live_count: int) -> bool:
         """Would a query be admitted right now?  (No decision counted —
         the queue-drain retry loop polls this on the control cadence.)"""
         pol = self.policy
         if pol.max_live is not None and live_count >= pol.max_live:
+            return False
+        if pol.shed_on_partition and self.partition_active(scenario):
             return False
         floor = pol.floor(scenario.app.gamma)
         if floor > 0.0:

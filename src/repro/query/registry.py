@@ -115,7 +115,10 @@ class QueryState:
     on_time: int = 0
     delayed: int = 0
     dropped: int = 0
-    dp: List[int] = field(default_factory=lambda: [0, 0, 0, 0])  # [_, dp1..3]
+    # [_, dp1..3, dp_fault] — slot 4 counts fault losses (crash/partition,
+    # repro.core.pipeline.DP_FAULT); telemetry_row exposes dp1..3 only so the
+    # trace digest stays stable across fault-free runs.
+    dp: List[int] = field(default_factory=lambda: [0, 0, 0, 0, 0])
     orphan_completed: int = 0
     orphan_dropped: int = 0
     reid_matched: int = 0

@@ -41,12 +41,27 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Set,
+    Tuple,
+    Union,
+)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (avoids the jax-heavy
+    # repro.serving package import at module load)
+    from repro.serving.journal import Journal
 
 import numpy as np
 
 from repro.core.budget import TaskBudget
 from repro.core.events import Event
+from repro.core.pipeline import DP_FAULT
 from repro.core.tracking import TLProbabilistic, TLWBFS, multi_source_spotlight
 from repro.sim.scenario import ScenarioConfig, ScenarioResult, TrackingScenario
 
@@ -145,10 +160,17 @@ class MultiQueryScenario(TrackingScenario):
         spotlight_mode: str = "per-query",
         app: Any = None,
         deployment: Any = None,
+        journal: Optional["Journal"] = None,
     ) -> None:
         if spotlight_mode not in ("per-query", "kernel"):
             raise ValueError(f"unknown spotlight_mode {spotlight_mode!r}")
         self._spotlight_mode = spotlight_mode
+        #: Optional append-only journal + snapshot ring
+        #: (:class:`repro.serving.journal.Journal`): the accounting hooks
+        #: record the observable event stream, and a periodic tick appends
+        #: frontier snapshots for crash recovery.  None costs one attribute
+        #: test per hook invocation.
+        self.journal = journal
         self.registry = QueryRegistry()
         if isinstance(admission, AdmissionPolicy):
             admission = AdmissionController(admission)
@@ -451,6 +473,8 @@ class MultiQueryScenario(TrackingScenario):
     # Per-query accounting hooks                                          #
     # ------------------------------------------------------------------ #
     def _on_sourced(self, frames, t: float) -> None:
+        if self.journal is not None:
+            self.journal.append("source", t, len(frames))
         mask_of = self._mask_of
         for_mask = self.registry.for_mask
         # Aggregate per distinct mask first: N identical queries share one
@@ -472,6 +496,8 @@ class MultiQueryScenario(TrackingScenario):
         super()._on_sink_event(ev, now)
         self._pending_masks.append(mask)
         det = self._pending_detections[-1]
+        if self.journal is not None:
+            self.journal.append("sink", now, mask, 1.0 if det.positive else 0.0)
         h = ev.header
         u = now - h.source_arrival
         gamma = self.app.gamma
@@ -506,6 +532,8 @@ class MultiQueryScenario(TrackingScenario):
 
     def _on_pipeline_drop(self, ev: Event, point: int, epsilon: float) -> None:
         mask = ev.query_mask
+        if self.journal is not None:
+            self.journal.append("drop", self.sim.time, point, mask)
         if not mask:
             return
         h = ev.header
@@ -514,7 +542,11 @@ class MultiQueryScenario(TrackingScenario):
             if st.live:
                 st.dropped += 1
                 st.dp[point] += 1
-                st.record_drop(h.event_id, u, h.q_bar, h.xi_bar, epsilon)
+                if point != DP_FAULT:
+                    # A fault loss is not a §4.3 deadline reject: it carries
+                    # no information about the query's budget, so it must not
+                    # drive the per-query beta down.
+                    st.record_drop(h.event_id, u, h.q_bar, h.xi_bar, epsilon)
             else:
                 st.orphan_dropped += 1
 
@@ -580,6 +612,120 @@ class MultiQueryScenario(TrackingScenario):
         }
 
     # ------------------------------------------------------------------ #
+    # Durability: journal ticks + snapshot/restore (repro.serving.journal) #
+    # ------------------------------------------------------------------ #
+    _STATE_INDEX = ("submitted", "scoped", "found", "cancelled", "expired")
+
+    def _schedule_ticks(self) -> None:  # overrides TrackingScenario
+        if self._ticks_scheduled:
+            return
+        super()._schedule_ticks()
+        j = self.journal
+        if j is not None and j.snapshot_period_s > 0:
+            # First snapshot one period in (t=0 state is the constructor's).
+            self.sim.schedule(j.snapshot_period_s, self._journal_tick)
+
+    def _journal_tick(self) -> None:
+        j = self.journal
+        j.snapshots.append(self.snapshot())
+        if self.sim.time + j.snapshot_period_s <= self._horizon:
+            self.sim.schedule(j.snapshot_period_s, self._journal_tick)
+
+    def run_until(self, t: float) -> None:  # overrides TrackingScenario
+        # Mark started *before* events fire so mid-run submissions take the
+        # control-latency path, exactly as in an uninterrupted run().
+        self._started = True
+        super().run_until(t)
+
+    def snapshot(self) -> Dict[str, float]:
+        """The serving frontier as a flat ``str -> float`` dict: global
+        counters, the compiled pipeline's per-task counters/budgets, every
+        query's registry ledger, and the admission queue.  Bit-comparable
+        between a replayed and an uninterrupted run (and npz-persistable via
+        :mod:`repro.training.checkpoint`)."""
+        snap: Dict[str, float] = {
+            "time": float(self.sim.time),
+            "source_events": float(self._source_events),
+            "positives_generated": float(self._positives_generated),
+            "positives_completed": float(self._positives_completed),
+            "reid_matched": float(self._reid_matched),
+        }
+        snap.update(self.compiled.snapshot())
+        for qid, st in sorted(self.registry.states.items()):
+            p = f"q{qid}"
+            try:
+                state_ix = self._STATE_INDEX.index(st.state)
+            except ValueError:
+                state_ix = -1
+            snap[f"{p}::state"] = float(state_ix)
+            for k in (
+                "sourced",
+                "completed",
+                "dropped",
+                "on_time",
+                "delayed",
+                "orphan_completed",
+                "orphan_dropped",
+                "positives_generated",
+                "positives_completed",
+                "detections_on_time",
+                "reid_matched",
+                "accepts",
+                "rejects",
+            ):
+                snap[f"{p}::{k}"] = float(getattr(st, k))
+            for i in (1, 2, 3, 4):
+                snap[f"{p}::dp{i}"] = float(st.dp[i])
+            snap[f"{p}::beta"] = float(st.beta())
+        ctrl = self.admission
+        if ctrl is not None:
+            snap["adm::queue_len"] = float(len(ctrl.queue))
+            snap["adm::requeued"] = float(ctrl.requeued)
+            for k, v in ctrl.decisions.items():
+                snap[f"adm::{k}"] = float(v)
+        return snap
+
+    def restore(self, source: Any) -> "MultiQueryScenario":
+        """Recover a crashed driver: replay this (freshly built) scenario to
+        the snapshot's timestamp and verify the reconstructed frontier is
+        bit-identical to it.
+
+        ``source`` is a snapshot dict or a :class:`~repro.serving.journal.
+        Journal` (its last snapshot is used).  The simulation is
+        deterministic in (config, spec, seed), so replaying the same inputs
+        reconstructs the exact pre-crash state; the bit-compare is the gate
+        that proves it (``RestoreMismatch`` lists every differing key).
+        After restore, ``run()`` continues to the horizon and the final
+        per-query summaries equal an uninterrupted run's exactly."""
+        from repro.serving.journal import RestoreMismatch, diff_snapshots
+
+        snap = source.last_snapshot() if hasattr(source, "last_snapshot") else source
+        if self.sim.time > 0.0:
+            raise RuntimeError(
+                "restore() replays from t=0 and needs a freshly built "
+                f"scenario; this one already ran to t={self.sim.time}"
+            )
+        self.run_until(snap["time"])
+        if self.journal is not None and self.journal.snapshots:
+            # Aligned compare: the replay's own journal tick fires at the
+            # *identical position in the event order* as the original's
+            # (same seeds, same schedule seqs), so its latest snapshot is
+            # the exact frontier the stored one captured — even when other
+            # events share the snapshot's timestamp.
+            mine = self.journal.snapshots[-1]
+        else:
+            # No journal on the replay: compare the end-of-timestamp
+            # frontier (exact only when the snapshot time falls between
+            # event timestamps — prefer restoring with a journal).
+            mine = self.snapshot()
+        diff = diff_snapshots(snap, mine)
+        if diff:
+            raise RestoreMismatch(
+                "replayed state does not match snapshot:\n  " + "\n  ".join(diff)
+            )
+        return self
+
+    # ------------------------------------------------------------------ #
     def run(self) -> MultiQueryResult:  # type: ignore[override]
         self._started = True
         base = super().run()
@@ -595,7 +741,8 @@ class MultiQueryScenario(TrackingScenario):
                 source_events=st.sourced,
                 dropped=st.dropped,
                 drops_by_task={
-                    f"dp{i}": st.dp[i] for i in (1, 2, 3) if st.dp[i]
+                    **{f"dp{i}": st.dp[i] for i in (1, 2, 3) if st.dp[i]},
+                    **({"dp_fault": st.dp[4]} if st.dp[4] else {}),
                 },
                 batch_sizes={},
                 positives_generated=st.positives_generated,

@@ -1,6 +1,7 @@
 """Serving: jit'd prefill/decode engine + Anveshak-scheduled stages."""
 
 from .engine import Generator, bucket_for, make_prefill_step, make_serve_step
+from .journal import Journal, RestoreMismatch, diff_snapshots
 from .reid import embed_frames, init_reid_tower, match
 from .sampling import sample_tokens
 from .scheduler import (
@@ -13,8 +14,8 @@ from .scheduler import (
 )
 
 __all__ = [
-    "Generator", "ServedStage", "StageRequest", "StageResult", "bucket_for",
-    "calibrate_xi", "embed_frames", "init_reid_tower", "lower_app_stages",
-    "lower_stage", "make_prefill_step", "make_serve_step", "match",
-    "sample_tokens",
+    "Generator", "Journal", "RestoreMismatch", "ServedStage", "StageRequest",
+    "StageResult", "bucket_for", "calibrate_xi", "diff_snapshots",
+    "embed_frames", "init_reid_tower", "lower_app_stages", "lower_stage",
+    "make_prefill_step", "make_serve_step", "match", "sample_tokens",
 ]

@@ -1,0 +1,150 @@
+"""Append-only event journal + periodic state snapshots (fault tolerance).
+
+The serving plane's durability story follows EventFlow's replay contract:
+the simulation is **deterministic in (config, dynamism spec, seed)**, so a
+crashed driver process does not need to serialize the discrete-event heap —
+it needs (1) the inputs (config + query specs + fault schedule, all already
+value-typed), (2) an append-only journal of the observable event stream
+(sourced / sink / drop records), and (3) periodic **snapshots** of the
+serving frontier: global counters, per-task pipeline counters and budgets,
+per-query registry state, and the admission queue.  Recovery rebuilds the
+scenario from the inputs, replays to the last snapshot's timestamp, and
+verifies the reconstructed frontier is **bit-identical** to the snapshot
+(`RestoreMismatch` otherwise) before continuing to the horizon — so a run
+that crashes at tick T and restores produces per-query summaries
+bit-identical to a run that was never interrupted (frozen as goldens in
+``tests/test_faults.py``).
+
+Snapshots are flat ``str -> float`` dicts, which makes them a pytree the
+training plane's checkpoint round-trip (:mod:`repro.training.checkpoint`)
+can persist to npz with its key/shape/dtype validation — missing *and*
+unexpected keys both fail loudly on load.  ``jax`` is imported lazily so a
+journal in a pure-sim process costs nothing.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["Journal", "RestoreMismatch", "diff_snapshots"]
+
+
+class RestoreMismatch(ValueError):
+    """Replayed state does not bit-match the snapshot it restores from."""
+
+
+def diff_snapshots(
+    expected: Dict[str, float], got: Dict[str, float]
+) -> List[str]:
+    """Human-readable list of differing/missing keys (empty == bit-equal).
+
+    Comparison is exact (``!=`` on floats): the replay contract is
+    bit-identity, not tolerance.
+    """
+    out = []
+    for k in sorted(expected.keys() | got.keys()):
+        if k not in got:
+            out.append(f"{k}: missing in replayed state")
+        elif k not in expected:
+            out.append(f"{k}: unexpected in replayed state")
+        elif got[k] != expected[k]:
+            out.append(f"{k}: snapshot {expected[k]!r} != replayed {got[k]!r}")
+    return out
+
+
+class Journal:
+    """Append-only record stream + snapshot ring for one serving run.
+
+    Records are ``(kind, t, a, b)`` tuples with ``kind`` one of ``source``
+    (a = frames sourced this tick), ``sink`` (a = query mask, b = positive
+    flag) or ``drop`` (a = drop point, b = query mask) — the full observable
+    event stream of a run, appended by the scenario's accounting hooks.
+    ``snapshot_period_s`` sets the cadence at which the owning scenario
+    appends a frontier snapshot (0 disables periodic snapshots; the journal
+    still records the event stream).
+    """
+
+    _KINDS = ("source", "sink", "drop")
+
+    def __init__(self, snapshot_period_s: float = 30.0) -> None:
+        if snapshot_period_s < 0:
+            raise ValueError(f"snapshot_period_s must be >= 0, got {snapshot_period_s}")
+        self.snapshot_period_s = float(snapshot_period_s)
+        self.records: List[Tuple[str, float, float, float]] = []
+        self.snapshots: List[Dict[str, float]] = []
+
+    # -- event stream --------------------------------------------------- #
+    def append(self, kind: str, t: float, a: float = 0.0, b: float = 0.0) -> None:
+        self.records.append((kind, float(t), float(a), float(b)))
+
+    def counts(self) -> Dict[str, int]:
+        """Records by kind — the lose/duplicate-free invariant the property
+        tests compare between an original run and its replay."""
+        out = {k: 0 for k in self._KINDS}
+        for kind, _, _, _ in self.records:
+            out[kind] = out.get(kind, 0) + 1
+        return out
+
+    def last_snapshot(self) -> Dict[str, float]:
+        if not self.snapshots:
+            raise RestoreMismatch("journal holds no snapshot to restore from")
+        return self.snapshots[-1]
+
+    def digest(self) -> str:
+        """sha256 over the full record stream + snapshots (CI golden gate)."""
+        h = hashlib.sha256()
+        for rec in self.records:
+            h.update(repr(rec).encode())
+        for snap in self.snapshots:
+            for k in sorted(snap):
+                h.update(f"{k}={snap[k]!r};".encode())
+        return h.hexdigest()
+
+    # -- persistence (training-plane npz round trip) -------------------- #
+    def _tree(self) -> Dict[str, Any]:
+        import numpy as np
+
+        kinds = np.array(
+            [self._KINDS.index(k) for k, _, _, _ in self.records], dtype=np.int64
+        )
+        cols = np.array(
+            [(t, a, b) for _, t, a, b in self.records], dtype=np.float64
+        ).reshape(len(self.records), 3)
+        # Snapshot values as 0-d float64 leaves: the checkpoint round trip
+        # validates shape/dtype per leaf, which plain Python floats lack.
+        snaps = [
+            {k: np.float64(v) for k, v in snap.items()} for snap in self.snapshots
+        ]
+        return {"records": {"kind": kinds, "tab": cols}, "snapshots": snaps}
+
+    def save(self, path: str) -> None:
+        """Persist via the training plane's flat-key checkpoint writer."""
+        from repro.training.checkpoint import save_checkpoint
+
+        save_checkpoint(
+            path,
+            self._tree(),
+            metadata={
+                "snapshot_period_s": self.snapshot_period_s,
+                "digest": self.digest(),
+            },
+        )
+
+    def load(self, path: str) -> "Journal":
+        """Restore this journal's contents from ``path`` (round trip of
+        :meth:`save`, validated against the *current* structure: the
+        checkpoint loader rejects missing and unexpected keys alike)."""
+        from repro.training.checkpoint import load_checkpoint
+
+        tree = load_checkpoint(path, like=self._tree())
+        kinds = tree["records"]["kind"]
+        cols = tree["records"]["tab"]
+        self.records = [
+            (self._KINDS[int(k)], float(t), float(a), float(b))
+            for k, (t, a, b) in zip(kinds, cols)
+        ]
+        self.snapshots = [
+            {k: float(v) for k, v in snap.items()} for snap in tree["snapshots"]
+        ]
+        return self

@@ -7,7 +7,11 @@ from .dynamism import (
     ComputeSlowdown,
     DynamismSpec,
     DynamismTrace,
+    FaultPlane,
+    HostCrash,
     InputRateSpike,
+    NetworkPartition,
+    RetryPolicy,
     fig9_collapse,
 )
 from .scenario import (
@@ -49,8 +53,9 @@ __all__ = [
     "AdmissionController", "AdmissionPolicy", "AppCase", "BandwidthCollapse",
     "CameraChurn", "CameraNetwork", "CaseRecord", "ComputeSlowdown",
     "DiscreteEventSimulator", "DynamismSpec", "DynamismTrace", "EntityWalk",
-    "Frame", "InputRateSpike", "MultiQueryResult", "MultiQueryScenario",
-    "NetworkModel", "QueryCase", "QueryRegistry", "QuerySpec",
+    "FaultPlane", "Frame", "HostCrash", "InputRateSpike", "MultiQueryResult",
+    "MultiQueryScenario", "NetworkModel", "NetworkPartition", "QueryCase",
+    "QueryRegistry", "QuerySpec", "RetryPolicy",
     "ScenarioConfig", "ScenarioResult", "SweepResult", "SweepRunner",
     "TrackingScenario", "WorldBundle", "WorldKey", "clear_world_cache",
     "fig9_collapse", "get_world", "linear_xi", "make_scenario_cr",

@@ -55,6 +55,10 @@ __all__ = [
     "ComputeSlowdown",
     "InputRateSpike",
     "CameraChurn",
+    "HostCrash",
+    "NetworkPartition",
+    "RetryPolicy",
+    "FaultPlane",
     "DynamismSpec",
     "DynamismTrace",
     "fig9_collapse",
@@ -177,6 +181,166 @@ class CameraChurn:
         return (self.t_start, self.t_end)
 
 
+@dataclass(frozen=True)
+class HostCrash:
+    """Hosts matching ``hosts`` die over ``[t_start, t_start + outage_s)``
+    and restart afterwards (fail-recover, WatchDog-style edge failures).
+
+    While a host is down it accepts no deliveries: its queued and batching
+    events are lost at crash onset (the scenario flushes them through the
+    ``dp_fault`` drop class), outputs of an execution finishing during the
+    outage are lost, and inter-host sends targeting it time out and retry
+    with seeded backoff (see :class:`RetryPolicy`) — surviving if the host
+    restarts within the retry horizon, charged as ``dp_fault`` otherwise.
+    Prefix-matched like :class:`ComputeSlowdown`: ``("node0",)`` kills one
+    compute node, ``("edge",)`` the whole edge tier.
+    """
+
+    hosts: Tuple[str, ...] = ("node0",)
+    t_start: float = 300.0
+    outage_s: float = 30.0
+
+    def __post_init__(self) -> None:
+        if not self.hosts:
+            raise ValueError("hosts must name at least one host prefix")
+        if not self.outage_s > 0.0:
+            raise ValueError(f"outage_s must be > 0, got {self.outage_s!r}")
+
+    def host_down(self, host: str, t: float) -> bool:
+        return host.startswith(self.hosts) and _in_window(
+            t, self.t_start, self.t_start + self.outage_s
+        )
+
+    def matches(self, host: str) -> bool:
+        return host.startswith(self.hosts)
+
+    def window(self) -> Tuple[float, float]:
+        return (self.t_start, self.t_start + self.outage_s)
+
+
+@dataclass(frozen=True)
+class NetworkPartition:
+    """LAN/MAN transits *between* the two host groups fail over
+    ``[t_start, t_end)`` (both directions); transits within a group — and
+    same-host IPC — are unaffected.  The default splits the compute cluster
+    from the edge tier, the paper's wide-area failure mode."""
+
+    group_a: Tuple[str, ...] = ("node", "head")
+    group_b: Tuple[str, ...] = ("edge",)
+    t_start: float = 300.0
+    t_end: float = math.inf
+
+    def __post_init__(self) -> None:
+        if not self.group_a or not self.group_b:
+            raise ValueError("both partition groups must be non-empty")
+        if not self.t_end > self.t_start:
+            raise ValueError(
+                f"t_end must be > t_start, got [{self.t_start!r}, {self.t_end!r})"
+            )
+
+    def link_blocked(self, src_host: str, dst_host: str, t: float) -> bool:
+        if src_host == dst_host or not _in_window(t, self.t_start, self.t_end):
+            return False
+        a, b = self.group_a, self.group_b
+        return (src_host.startswith(a) and dst_host.startswith(b)) or (
+            src_host.startswith(b) and dst_host.startswith(a)
+        )
+
+    def window(self) -> Tuple[float, float]:
+        return (self.t_start, self.t_end)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Inter-host send timeout + capped exponential backoff with seeded
+    jitter.  Attempt ``k`` (0-based) that finds the link/host down waits
+    ``timeout_s + min(cap_s, base_s * 2**k) * (1 + jitter * u)`` with
+    ``u ~ U[0, 1)`` from the fault plane's seeded RNG, then retries; after
+    ``max_retries`` failed attempts the event is charged as ``dp_fault``."""
+
+    timeout_s: float = 0.05
+    base_s: float = 0.1
+    cap_s: float = 2.0
+    jitter: float = 0.5
+    max_retries: int = 5
+
+    def __post_init__(self) -> None:
+        if self.timeout_s < 0.0 or self.base_s <= 0.0 or self.cap_s <= 0.0:
+            raise ValueError("timeout_s must be >= 0 and backoff terms > 0")
+        if not 0.0 <= self.jitter:
+            raise ValueError(f"jitter must be >= 0, got {self.jitter!r}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries!r}")
+
+
+class FaultPlane:
+    """Runtime fault state the engine and tasks consult: the composed
+    host-down / link-blocked predicates of a spec's :class:`HostCrash` /
+    :class:`NetworkPartition` perturbations plus the seeded retry schedule.
+
+    Installed on the simulator (``sim.faults``) *before* the pipeline is
+    built — tasks snapshot it at construction, like ``xi_multiplier`` — and
+    its presence makes ``transit_is_static`` False, so every transit goes
+    through the fault-aware send path (no fused/memoized shortcuts).
+
+    Everything is deterministic in (spec, seed): the windows are pure
+    functions of time and the jitter RNG is seeded and consumed in event
+    order, so a faulted run replays bit-identically.
+    """
+
+    def __init__(
+        self,
+        crashes: Sequence[HostCrash],
+        partitions: Sequence[NetworkPartition],
+        retry: Optional[RetryPolicy] = None,
+        seed: int = 0,
+    ) -> None:
+        import numpy as np
+
+        self.crashes: Tuple[HostCrash, ...] = tuple(crashes)
+        self.partitions: Tuple[NetworkPartition, ...] = tuple(partitions)
+        self.retry = retry or RetryPolicy()
+        self._rng = np.random.default_rng(seed + 0x5EED)
+        # Fault-plane counters (cold path: only blocked sends touch them).
+        self.sends_blocked = 0
+        self.retries = 0
+        self.fault_drops = 0
+
+    # -- predicates ------------------------------------------------------ #
+    def host_down(self, host: str, t: float) -> bool:
+        for c in self.crashes:
+            if c.host_down(host, t):
+                return True
+        return False
+
+    def link_blocked(self, src_host: str, dst_host: str, t: float) -> bool:
+        for p in self.partitions:
+            if p.link_blocked(src_host, dst_host, t):
+                return True
+        return False
+
+    def send_blocked(self, src_host: str, dst_host: str, t: float) -> bool:
+        """Would a send attempted now fail?  (Destination dead, or the
+        inter-group link partitioned — the *source* being dead is handled
+        separately: a dead sender's outputs are lost, not retried.)"""
+        return self.host_down(dst_host, t) or self.link_blocked(
+            src_host, dst_host, t
+        )
+
+    def partition_active(self, t: float) -> bool:
+        for p in self.partitions:
+            s, e = p.window()
+            if s <= t < e:
+                return True
+        return False
+
+    # -- retry schedule -------------------------------------------------- #
+    def retry_delay(self, attempt: int) -> float:
+        r = self.retry
+        backoff = min(r.cap_s, r.base_s * (2.0 ** attempt))
+        return r.timeout_s + backoff * (1.0 + r.jitter * float(self._rng.uniform()))
+
+
 # --------------------------------------------------------------------- #
 # The composed spec                                                      #
 # --------------------------------------------------------------------- #
@@ -197,6 +361,10 @@ class DynamismSpec:
     #: FOV test over *all* cameras per source tick — off by default only
     #: when you need raw engine throughput).
     quality: bool = True
+    #: Retry schedule for inter-host sends while a fault perturbation holds
+    #: (only consulted when the spec carries HostCrash/NetworkPartition;
+    #: None uses the RetryPolicy defaults).
+    retry: Optional[RetryPolicy] = None
 
     # -- composition ---------------------------------------------------- #
     def _with(self, method: str) -> List:
@@ -252,6 +420,23 @@ class DynamismSpec:
 
     def churns(self) -> Tuple[CameraChurn, ...]:
         return tuple(p for p in self.perturbations if isinstance(p, CameraChurn))
+
+    def crashes(self) -> Tuple[HostCrash, ...]:
+        return tuple(p for p in self.perturbations if isinstance(p, HostCrash))
+
+    def partitions(self) -> Tuple[NetworkPartition, ...]:
+        return tuple(
+            p for p in self.perturbations if isinstance(p, NetworkPartition)
+        )
+
+    def fault_plane(self, seed: int = 0) -> Optional[FaultPlane]:
+        """The composed runtime :class:`FaultPlane`, or None when the spec
+        carries no fault perturbation (the hot path then keeps every
+        fused/memoized fast path)."""
+        crashes, partitions = self.crashes(), self.partitions()
+        if not crashes and not partitions:
+            return None
+        return FaultPlane(crashes, partitions, retry=self.retry, seed=seed)
 
     def windows(self) -> List[Tuple[float, float]]:
         """Perturbation windows, sorted by start (used by the recovery

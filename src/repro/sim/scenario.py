@@ -436,6 +436,11 @@ class TrackingScenario:
         # compiler's fusion decisions) sees the dynamic-xi regime.
         if spec is not None:
             self.sim.xi_multiplier = spec.xi_multiplier()
+            # Fault plane (HostCrash / NetworkPartition): like the xi
+            # multiplier it must exist before compile_app — tasks snapshot
+            # it at construction, and its presence turns off the static
+            # transit fast paths so every send is fault-checked.
+            self.sim.faults = spec.fault_plane(config.seed)
         self._rate_mult = spec.rate_multiplier() if spec is not None else None
         # Rate-window edges: a slowdown (factor < 1) stretches the tick
         # interval, and an unclamped interval computed just before a window
@@ -482,6 +487,7 @@ class TrackingScenario:
         #: Simulation horizon: generation stops at duration_s; in-flight
         #: events (and telemetry) drain until here.
         self._horizon = config.duration_s + 3.0 * self.app.gamma
+        self._ticks_scheduled = False
         self._stats_active: List[Tuple[float, int]] = []
         self._positives_generated = 0
         self._positives_completed = 0
@@ -742,8 +748,30 @@ class TrackingScenario:
             "track_precision": round(tp / len(detected), 4) if detected else 1.0,
         }
 
-    # ------------------------------------------------------------------ #
-    def run(self) -> ScenarioResult:
+    def _crash_flush(self, crash) -> None:
+        """Crash onset: events queued or batching on the dying host are lost
+        — they live in process memory, which the crash wipes.  An executing
+        batch is allowed to finish (the GPU kernel ran), but its outputs hit
+        the sender-down check in ``Task._send`` and are lost there too."""
+        for t in self.sim.tasks.values():
+            if not crash.matches(t.node):
+                continue
+            batcher = t.batcher
+            if batcher._current:
+                for pe in batcher.take():
+                    t._fault_drop(pe.event)
+            rq = t._run_queue
+            while rq:
+                for pe in rq.popleft():
+                    t._fault_drop(pe.event)
+
+    def _schedule_ticks(self) -> None:
+        """Arm the periodic drivers (sources, TL, telemetry, churn, crash
+        flushes).  Idempotent so ``run_until`` segments and a final ``run``
+        over the same scenario never double-schedule a tick chain."""
+        if self._ticks_scheduled:
+            return
+        self._ticks_scheduled = True
         cfg = self.cfg
         self.sim.schedule(0.0, self._frame_tick)
         self.sim.schedule(cfg.tl_update_period, self._tl_tick)
@@ -754,6 +782,22 @@ class TrackingScenario:
             # windows shorter than period_s still perturb and the trace's
             # pre/during split lines up with the first dropout.
             self.sim.schedule_at(ch.t_start, self._churn_tick, idx)
+        spec = cfg.dynamism
+        if spec is not None:
+            for crash in spec.crashes():
+                self.sim.schedule_at(crash.t_start, self._crash_flush, crash)
+
+    def run_until(self, t: float) -> None:
+        """Advance the simulation to ``t`` (capped at the drain horizon)
+        without finalizing — the serving plane uses this to model a driver
+        process that is killed mid-run, and ``run()`` continues from here."""
+        self._schedule_ticks()
+        self.sim.run(until=min(t, self._horizon))
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> ScenarioResult:
+        cfg = self.cfg
+        self._schedule_ticks()
         # Allow in-flight events to drain past the generation horizon.
         self.sim.run(until=self._horizon)
 

@@ -81,6 +81,12 @@ class DiscreteEventSimulator(Scheduler):
         # (drop decisions, batch deadlines) stay unscaled — a straggler is
         # unannounced and the budget protocol must adapt through signals.
         self._xi_multiplier: Optional[Callable[[str, float], float]] = None
+        # Optional fault plane (repro.sim.dynamism.FaultPlane) installed by
+        # the scenario before the pipeline is built: host-down / link-blocked
+        # predicates + the seeded retry schedule.  Tasks snapshot it at
+        # construction (like the xi multiplier), and its presence disables
+        # the static-transit fast paths so every send is fault-checked.
+        self._faults: Optional[Any] = None
         # (src, dst) -> (fixed latency, charged over the network?).  Host
         # assignment is static once the pipeline is built, so the
         # classification (IPC vs LAN vs MAN) never changes.  A caller may
@@ -109,8 +115,29 @@ class DiscreteEventSimulator(Scheduler):
     @property
     def transit_is_static(self) -> bool:
         """True when node-to-node delays cannot vary over time, letting tasks
-        memoize their per-destination transit delay."""
-        return self.network.bandwidth_schedule is _default_bandwidth_schedule
+        memoize their per-destination transit delay.  A fault plane makes
+        delivery itself conditional (crashed hosts, partitioned links), so
+        it forces the dynamic path too."""
+        return (
+            self.network.bandwidth_schedule is _default_bandwidth_schedule
+            and self._faults is None
+        )
+
+    @property
+    def faults(self) -> Optional[Any]:
+        return self._faults
+
+    @faults.setter
+    def faults(self, plane: Optional[Any]) -> None:
+        # Same contract as xi_multiplier: tasks snapshot the plane at
+        # construction, so installing one after the pipeline is built would
+        # leave every existing task fault-blind — refuse loudly.
+        if plane is not None and self.tasks and self.tasks is not Scheduler.tasks:
+            raise RuntimeError(
+                "install faults before building tasks on this simulator — "
+                "tasks snapshot the fault plane at construction"
+            )
+        self._faults = plane
 
     @property
     def xi_is_static(self) -> bool:

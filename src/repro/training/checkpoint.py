@@ -39,18 +39,26 @@ def save_checkpoint(path: str, tree: Any, metadata: Dict[str, Any] | None = None
 
 
 def load_checkpoint(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    """Restore into the structure of ``like`` (keys/shapes/dtypes validated:
+    missing *and* unexpected checkpoint keys both fail loudly)."""
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
     paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
+    expected = set()
     for path_elems, leaf in paths_and_leaves:
         key = _SEP.join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems
         )
+        expected.add(key)
         if key not in npz:
             raise KeyError(f"checkpoint missing {key!r}")
         arr = npz[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
         leaves.append(arr.astype(leaf.dtype))
+    extra = sorted(set(npz.files) - expected)
+    if extra:
+        # A silently-ignored surplus key usually means the checkpoint was
+        # written against a different structure (renamed field, stale file).
+        raise KeyError(f"checkpoint has unexpected keys: {extra}")
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -43,6 +43,9 @@ def test_quickstart_runs_composed_app_end_to_end():
     assert "OK: budget recovered after the collapse." in out
     # The multi-query epilogue: two queries fused, one cancelled mid-run.
     assert "OK: multi-query tenancy" in out
+    # The fault-tolerance epilogue: host crash + journaled restore, with the
+    # recovered run bit-identical to the uninterrupted one.
+    assert "OK: crash-and-restore" in out
 
 
 def test_apps_executes_all_four_table1_apps():

@@ -1,0 +1,131 @@
+"""Property tests for the fault plane (PR 6).
+
+Requires the optional ``hypothesis`` test dependency (skipped cleanly when
+missing, like the other ``*_props`` modules).
+
+Over random crash/partition schedules the serving plane must keep its
+recovery guarantees: the journalled event stream is deterministic in the
+inputs (a replay neither loses nor duplicates an event — record counts and
+digests match exactly), no event is ever attributed to a dead query, every
+per-query ledger reconciles exactly with ``dp_fault`` included, and traffic
+converges again after the fault window heals.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.query import MultiQueryScenario, QuerySpec
+from repro.serving.journal import Journal
+from repro.sim import ScenarioConfig
+from repro.sim.dynamism import DynamismSpec, HostCrash, NetworkPartition
+
+DURATION = 40.0
+
+# One world key for every example: the process-wide world cache makes each
+# hypothesis example pay scenario construction only, not geometry builds.
+def _cfg(spec):
+    return ScenarioConfig(num_cameras=100, duration_s=DURATION, seed=0,
+                          tl="bfs", batching="dynamic", m_max=25,
+                          dynamism=spec)
+
+
+@st.composite
+def fault_specs(draw):
+    """0-2 crashes + 0-1 partitions, at least one perturbation, windows
+    inside the run so retries can drain before the horizon."""
+    perts = []
+    for _ in range(draw(st.integers(0, 2))):
+        t0 = draw(st.floats(5.0, 22.0, allow_nan=False))
+        perts.append(
+            HostCrash(
+                hosts=(draw(st.sampled_from(["node0", "edge1", "edge2"])),),
+                t_start=t0,
+                outage_s=draw(st.floats(2.0, 8.0, allow_nan=False)),
+            )
+        )
+    if draw(st.booleans()) or not perts:
+        t0 = draw(st.floats(5.0, 22.0, allow_nan=False))
+        perts.append(
+            NetworkPartition(
+                group_a=("node", "head"),
+                group_b=("edge",),
+                t_start=t0,
+                t_end=t0 + draw(st.floats(2.0, 8.0, allow_nan=False)),
+            )
+        )
+    return DynamismSpec(perturbations=tuple(perts))
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(spec=fault_specs())
+def test_replay_never_loses_or_duplicates_events(spec):
+    """Two builds from the same inputs journal the identical event stream:
+    same record counts per kind (no loss, no duplication) and the same
+    digest (same order, same payloads)."""
+    a = MultiQueryScenario(_cfg(spec), 2, journal=Journal(10.0))
+    a.run()
+    b = MultiQueryScenario(_cfg(spec), 2, journal=Journal(10.0))
+    b.run()
+    assert a.journal.counts() == b.journal.counts()
+    assert a.journal.digest() == b.journal.digest()
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(
+    spec=fault_specs(),
+    cancel_at=st.floats(8.0, 30.0, allow_nan=False),
+)
+def test_faults_never_attribute_to_dead_queries(spec, cancel_at):
+    """Fault losses respect the lifecycle: a dead query's counters freeze —
+    late completions AND late fault drops are orphan-accounted — and every
+    ledger reconciles exactly with ``dp_fault`` in the books."""
+    specs = [QuerySpec(), QuerySpec(submit_at=2.0, cancel_at=cancel_at)]
+    res = MultiQueryScenario(_cfg(spec), specs).run()
+    for qid, st_q in res.registry.states.items():
+        assert (
+            st_q.sourced
+            == st_q.completed
+            + st_q.dropped
+            + st_q.orphan_completed
+            + st_q.orphan_dropped
+        ), (qid, spec)
+        assert st_q.dropped == sum(st_q.dp[1:])
+        if st_q.ended_at is not None:
+            # Nothing attributed after death (orphans are the overflow).
+            assert all(t <= st_q.ended_at for t, _ in st_q.latencies)
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(t0=st.floats(8.0, 16.0, allow_nan=False))
+def test_traffic_converges_after_heal(t0):
+    """After a partition heals, the pipeline drains and completes again:
+    the live query sees sink completions past the window's end, and the
+    fault plane stops charging losses."""
+    heal = t0 + 6.0
+    spec = DynamismSpec(
+        perturbations=(
+            NetworkPartition(
+                group_a=("node", "head"), group_b=("edge",),
+                t_start=t0, t_end=heal,
+            ),
+        )
+    )
+    sc = MultiQueryScenario(_cfg(spec), 1, journal=Journal(10.0))
+    res = sc.run()
+    st_q = res.registry.get(0)
+    assert any(t > heal for t, _ in st_q.latencies), "no post-heal completions"
+    # Fault losses only happen while a window is open (plus the retry tail):
+    # drop records past heal + the longest possible retry chain would mean
+    # the plane kept charging after recovery.
+    fp = sc.sim.faults
+    tail = heal + fp.retry.max_retries * (
+        fp.retry.timeout_s + fp.retry.cap_s * (1.0 + fp.retry.jitter)
+    )
+    late = [
+        t for kind, t, a, _ in sc.journal.records
+        if kind == "drop" and a == 4.0 and t > tail
+    ]
+    assert late == [], late

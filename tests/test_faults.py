@@ -1,0 +1,370 @@
+"""Fault-tolerant serving plane: crash/partition injection + journaled
+checkpoint-restore (PR 6).
+
+The headline goldens freeze the exact-recovery contract: a run whose driver
+is killed at t=100 (after the t=90 snapshot), restored from the journal's
+last snapshot, and replayed produces per-query summaries — and the full
+journal digest — **bit-identical** to an uninterrupted seed-0 run, with
+drops off AND on.  Fault losses are charged as the ``dp_fault`` class
+through the same drop hook as DP1-3, so ``sourced == completed + dropped``
+still reconciles exactly.
+"""
+
+import math
+import os
+
+import pytest
+
+from repro.core.pipeline import DP_FAULT
+from repro.query import MultiQueryScenario
+from repro.serving.journal import Journal, RestoreMismatch, diff_snapshots
+from repro.sim import ScenarioConfig, TrackingScenario
+from repro.sim.dynamism import (
+    DynamismSpec,
+    FaultPlane,
+    HostCrash,
+    NetworkPartition,
+    RetryPolicy,
+)
+
+CRASH = HostCrash(hosts=("node0",), t_start=60.0, outage_s=20.0)
+PARTITION = NetworkPartition(
+    group_a=("node", "head"), group_b=("edge",), t_start=60.0, t_end=80.0
+)
+T_KILL = 100.0  # driver killed here — after the t=90 snapshot
+SNAP_PERIOD = 30.0
+
+
+def _cfg(perturbation, drops: bool) -> ScenarioConfig:
+    kw = dict(
+        num_cameras=100,
+        duration_s=120.0,
+        seed=0,
+        dynamism=DynamismSpec(perturbations=(perturbation,)),
+    )
+    if drops:
+        kw.update(
+            drops_enabled=True,
+            avoid_drop_positives=True,
+            tl_peak_speed=7.0,
+            num_va=5,
+            num_cr=5,
+        )
+    return ScenarioConfig(**kw)
+
+
+# --------------------------------------------------------------------- #
+# Frozen goldens (the CI fault smoke gates on these digests)             #
+# --------------------------------------------------------------------- #
+GOLDEN_CRASH_OFF = {
+    "source_events": 1416,
+    "on_time": 1394,
+    "delayed": 0,
+    "dropped": 22,
+    "delayed_frac": 0.0,
+    "dropped_frac": 0.0155,
+    "median_latency_s": 0.157,
+    "p99_latency_s": 0.517,
+    "peak_active": 25,
+    "positives_generated": 19,
+    "positives_completed": 14,
+    "truth_events": 19,
+    "track_recall": 0.7368,
+    "track_precision": 1.0,
+}
+GOLDEN_CRASH_OFF_DROPS = {"dp_fault": 22}
+GOLDEN_CRASH_OFF_DIGEST = (
+    "19293594d747e4bea7af178ca3f8d508fff6421719cd475f4095b9cac59f8ea7"
+)
+
+GOLDEN_CRASH_ON = {
+    "source_events": 2843,
+    "on_time": 2054,
+    "delayed": 0,
+    "dropped": 789,
+    "delayed_frac": 0.0,
+    "dropped_frac": 0.2775,
+    "median_latency_s": 4.669,
+    "p99_latency_s": 13.79,
+    "peak_active": 63,
+    "positives_generated": 19,
+    "positives_completed": 14,
+    "truth_events": 19,
+    "track_recall": 0.7368,
+    "track_precision": 1.0,
+}
+GOLDEN_CRASH_ON_DROPS = {"dp1": 4, "dp2": 649, "dp_fault": 136}
+GOLDEN_CRASH_ON_DIGEST = (
+    "98c2d7f22e96e8ae71f495054dee57c06db24500f377f3c526fba51aaaca6132"
+)
+
+
+# --------------------------------------------------------------------- #
+# Fault injection: reconciliation under crash and partition              #
+# --------------------------------------------------------------------- #
+def test_host_crash_reconciles_exactly():
+    sc = TrackingScenario(_cfg(CRASH, drops=False))
+    res = sc.run()
+    fp = sc.sim.faults
+    assert fp is not None and fp.fault_drops > 0
+    # Every sourced event is accounted: completed at the sink or lost to
+    # the fault plane — nothing leaks, nothing is double-counted.
+    assert res.source_events == res.on_time + res.delayed + res.dropped
+    assert res.dropped == fp.fault_drops  # drops off: only fault losses
+    assert sum(res.drops_by_task.values()) == fp.fault_drops
+
+
+def test_partition_retries_then_drops_and_heals():
+    sc = TrackingScenario(_cfg(PARTITION, drops=False))
+    res = sc.run()
+    fp = sc.sim.faults
+    # Blocked sends were retried (seeded backoff) before being charged.
+    assert fp.retries > 0 and fp.sends_blocked > 0
+    assert fp.fault_drops > 0
+    assert res.source_events == res.on_time + res.delayed + res.dropped
+    # After the window heals, traffic flows again: completions outnumber
+    # losses by a wide margin on a 20 s partition in a 120 s run.
+    assert res.on_time > res.dropped
+
+
+def test_fault_free_run_is_untouched():
+    cfg = ScenarioConfig(num_cameras=100, duration_s=120.0, seed=0)
+    sc = TrackingScenario(cfg)
+    assert sc.sim.faults is None
+    assert sc.sim.transit_is_static  # fast paths stay on without faults
+    res = sc.run()
+    assert res.dropped == 0
+    assert res.source_events == res.on_time + res.delayed
+
+
+def test_faults_must_install_before_build():
+    sc = TrackingScenario(ScenarioConfig(num_cameras=100, duration_s=10.0, seed=0))
+    with pytest.raises(RuntimeError, match="before building tasks"):
+        sc.sim.faults = FaultPlane((CRASH,), ())
+
+
+def test_fault_plane_predicates_and_retry_schedule():
+    fp = FaultPlane((CRASH,), (PARTITION,), seed=0)
+    assert fp.host_down("node0", 70.0)
+    assert fp.host_down("node0", 60.0)  # closed start
+    assert not fp.host_down("node0", 80.0)  # open end
+    assert not fp.host_down("node1", 70.0)
+    assert fp.link_blocked("edge3", "node0", 70.0)
+    assert fp.link_blocked("node0", "edge3", 70.0)  # both directions
+    assert not fp.link_blocked("node0", "head", 70.0)  # same side
+    assert not fp.link_blocked("edge3", "node0", 90.0)  # healed
+    assert fp.partition_active(70.0) and not fp.partition_active(90.0)
+    # Retry delays: deterministic in the seed, capped exponential + jitter.
+    r = RetryPolicy()
+    delays = [fp.retry_delay(a) for a in range(8)]
+    assert all(d >= r.timeout_s for d in delays)
+    assert max(delays) <= r.timeout_s + r.cap_s * (1.0 + r.jitter)
+    fp2 = FaultPlane((CRASH,), (PARTITION,), seed=0)
+    assert [fp2.retry_delay(a) for a in range(8)] == delays
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        HostCrash(hosts=(), t_start=1.0)
+    with pytest.raises(ValueError):
+        HostCrash(outage_s=0.0)
+    with pytest.raises(ValueError):
+        NetworkPartition(group_a=())
+    with pytest.raises(ValueError):
+        NetworkPartition(t_start=10.0, t_end=5.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    # Crash/partition windows feed the spec's window discovery (so
+    # budget_recovery splits pre/during/post automatically).
+    spec = DynamismSpec(perturbations=(CRASH, PARTITION))
+    assert (60.0, 80.0) in spec.windows()
+    assert spec.fault_plane(seed=0) is not None
+    assert DynamismSpec().fault_plane(seed=0) is None
+
+
+# --------------------------------------------------------------------- #
+# Headline goldens: crash at T, restore, replay => bit-identical         #
+# --------------------------------------------------------------------- #
+def _crash_restore_run(drops: bool):
+    # Uninterrupted reference.
+    ref = MultiQueryScenario(_cfg(CRASH, drops), 3, journal=Journal(SNAP_PERIOD))
+    ref_res = ref.run()
+    # Crashed driver: killed at T_KILL; only its journal survives.
+    crashed = MultiQueryScenario(_cfg(CRASH, drops), 3, journal=Journal(SNAP_PERIOD))
+    crashed.run_until(T_KILL)
+    wal = crashed.journal
+    assert wal.last_snapshot()["time"] == 90.0
+    del crashed
+    # Recovery: fresh build, replay to the snapshot, verify, continue.
+    rec = MultiQueryScenario(_cfg(CRASH, drops), 3, journal=Journal(SNAP_PERIOD))
+    rec.restore(wal)
+    assert rec.sim.time == 90.0
+    rec_res = rec.run()
+    return ref, ref_res, rec, rec_res
+
+
+@pytest.mark.parametrize(
+    "drops,golden,golden_drops,golden_digest",
+    [
+        (False, GOLDEN_CRASH_OFF, GOLDEN_CRASH_OFF_DROPS, GOLDEN_CRASH_OFF_DIGEST),
+        (True, GOLDEN_CRASH_ON, GOLDEN_CRASH_ON_DROPS, GOLDEN_CRASH_ON_DIGEST),
+    ],
+    ids=["drops-off", "drops-on"],
+)
+def test_golden_crash_restore_bit_identical(drops, golden, golden_drops, golden_digest):
+    ref, ref_res, rec, rec_res = _crash_restore_run(drops)
+    # The recovered run equals the uninterrupted one, query by query.
+    for qid in ref_res.per_query:
+        assert rec_res.per_query_summary(qid) == ref_res.per_query_summary(qid)
+        assert (
+            rec_res.per_query[qid].drops_by_task
+            == ref_res.per_query[qid].drops_by_task
+        )
+    # The full observable event stream matches too, not just the summaries.
+    assert rec.journal.digest() == ref.journal.digest()
+    # And both match the frozen golden (identical queries share one view).
+    assert ref_res.per_query_summary(0) == golden
+    assert ref_res.per_query[0].drops_by_task == golden_drops
+    assert ref.journal.digest() == golden_digest
+    # Per-query books reconcile exactly, dp_fault included.
+    for st in ref_res.registry.states.values():
+        assert st.sourced == st.completed + st.dropped + st.orphan_completed
+        assert st.dropped == sum(st.dp[1:])
+        if not drops:
+            assert st.dp[1] == st.dp[2] == st.dp[3] == 0  # only dp_fault
+
+
+def test_restore_rejects_diverged_snapshot():
+    sc = MultiQueryScenario(_cfg(CRASH, False), 3, journal=Journal(SNAP_PERIOD))
+    sc.run_until(T_KILL)
+    snap = dict(sc.journal.last_snapshot())
+    snap["source_events"] += 1.0  # corrupt one counter
+    rec = MultiQueryScenario(_cfg(CRASH, False), 3, journal=Journal(SNAP_PERIOD))
+    with pytest.raises(RestoreMismatch, match="source_events"):
+        rec.restore(snap)
+
+
+def test_restore_requires_fresh_scenario():
+    sc = MultiQueryScenario(_cfg(CRASH, False), 3, journal=Journal(SNAP_PERIOD))
+    sc.run_until(50.0)
+    with pytest.raises(RuntimeError, match="freshly built"):
+        sc.restore({"time": 30.0})
+
+
+def test_journal_npz_round_trip(tmp_path):
+    sc = MultiQueryScenario(_cfg(CRASH, False), 3, journal=Journal(SNAP_PERIOD))
+    sc.run_until(T_KILL)
+    wal = sc.journal
+    path = os.path.join(str(tmp_path), "wal")
+    wal.save(path)
+    # Same-shape journal restores bit-exactly through the training-plane
+    # checkpoint validation (missing AND unexpected keys fail loudly).
+    clone = Journal(SNAP_PERIOD)
+    clone.records = list(wal.records)
+    clone.snapshots = [dict(s) for s in wal.snapshots]
+    clone.load(path)
+    assert clone.digest() == wal.digest()
+    assert clone.counts() == wal.counts()
+    # A journal with a different shape is rejected, not silently truncated.
+    short = Journal(SNAP_PERIOD)
+    short.records = list(wal.records)[:-1]
+    short.snapshots = [dict(s) for s in wal.snapshots]
+    with pytest.raises((KeyError, ValueError)):
+        short.load(path)
+
+
+def test_compiled_app_snapshot_restore_gate():
+    sc = MultiQueryScenario(_cfg(CRASH, False), 3)
+    sc.run_until(T_KILL)
+    snap = sc.compiled.snapshot()
+    assert sc.compiled.restore(snap) is sc.compiled  # self-match passes
+    bad = dict(snap)
+    key = next(k for k in bad if k.endswith("::arrived"))
+    bad[key] += 1.0
+    with pytest.raises(RestoreMismatch):
+        sc.compiled.restore(bad)
+
+
+def test_diff_snapshots_reports_all_kinds():
+    a = {"x": 1.0, "y": 2.0}
+    b = {"x": 1.0, "z": 3.0}
+    diff = diff_snapshots(a, b)
+    assert any("y" in d and "missing" in d for d in diff)
+    assert any("z" in d and "unexpected" in d for d in diff)
+    assert diff_snapshots(a, dict(a)) == []
+
+
+# --------------------------------------------------------------------- #
+# Admission: shed to queue while partitioned, requeue FIFO on heal       #
+# --------------------------------------------------------------------- #
+def test_admission_sheds_during_partition_and_requeues_on_heal():
+    from repro.query import AdmissionPolicy, QuerySpec
+
+    part = NetworkPartition(
+        group_a=("node", "head"), group_b=("edge",), t_start=30.0, t_end=60.0
+    )
+    cfg = ScenarioConfig(
+        num_cameras=100,
+        duration_s=120.0,
+        seed=0,
+        dynamism=DynamismSpec(perturbations=(part,)),
+    )
+    specs = [QuerySpec(), QuerySpec(submit_at=40.0), QuerySpec(submit_at=45.0)]
+    sc = MultiQueryScenario(cfg, specs, admission=AdmissionPolicy())
+    res = sc.run()
+    stats = res.admission.stats()
+    # Mid-partition submissions were shed to the queue, not admitted...
+    assert stats["adm_queued"] == 2
+    # ...and requeued FIFO once the window healed (TL control cadence).
+    assert stats["adm_requeued"] == 2
+    assert stats["adm_queue_left"] == 0
+    assert stats["adm_rejected"] == 0
+    for qid in (1, 2):
+        st = res.registry.get(qid)
+        assert st.scoped_at is not None and st.scoped_at >= 60.0
+
+
+def test_admission_partition_shedding_can_be_disabled():
+    from repro.query import AdmissionController, AdmissionPolicy
+
+    class _Sim:
+        faults = FaultPlane((), (PARTITION,))
+        time = 70.0  # inside the partition window
+
+    class _Scenario:
+        sim = _Sim()
+
+        class app:
+            gamma = 15.0
+
+    on = AdmissionController(AdmissionPolicy())
+    off = AdmissionController(AdmissionPolicy(shed_on_partition=False))
+    assert not on.admittable(_Scenario, 0)
+    assert off.admittable(_Scenario, 0)
+    _Sim.time = 90.0  # healed
+    assert on.admittable(_Scenario, 0)
+
+
+# --------------------------------------------------------------------- #
+# dp_fault plumbing                                                      #
+# --------------------------------------------------------------------- #
+def test_dp_fault_constant_and_stats_sum():
+    from repro.core.pipeline import PipelineStats
+
+    assert DP_FAULT == 4
+    s = PipelineStats(dropped_dp1=1, dropped_dp2=2, dropped_dp3=3, dropped_fault=4)
+    assert s.dropped == 10
+
+
+def test_crash_restart_resumes_host():
+    """After the outage the crashed host serves again: a later window sees
+    completions from tasks on node0."""
+    crash = HostCrash(hosts=("node0",), t_start=30.0, outage_s=10.0)
+    assert crash.host_down("node0", 35.0)
+    assert not crash.host_down("node0", 45.0)  # restarted
+    assert crash.window() == (30.0, 40.0)
+    sc = TrackingScenario(_cfg(crash, drops=False))
+    res = sc.run()
+    # Post-restart the pipeline drains normally — the run still completes
+    # the overwhelming majority of its events.
+    assert res.on_time > 0.9 * res.source_events
