@@ -17,13 +17,22 @@ RECORDS: List[Dict] = []
 def record(
     bench: str, case: str, us_per_event: float, derived: str = "", **extra
 ) -> Dict:
+    """One benchmark row.  Every record carries an ``xfer_s`` column —
+    the host<->device transfer wall, split out of ``run_s`` so device
+    engines report compute and data movement separately.  Families that
+    do no device transfer record ``None`` (JSON ``null``), and old
+    baselines recorded before the column existed are backfilled with
+    ``None`` by the ``--compare`` loader."""
     rec = {
         "bench": bench,
         "case": case,
         "us_per_event": round(float(us_per_event), 2),
         "derived": derived,
+        "xfer_s": None,
     }
     rec.update(extra)
+    if rec["xfer_s"] is not None:
+        rec["xfer_s"] = round(float(rec["xfer_s"]), 4)
     RECORDS.append(rec)
     return rec
 

@@ -77,30 +77,54 @@ def multi_source_spotlight(
     indptr, indices, weights = network.csr()
     src = np.asarray(sources, dtype=np.int32)
     rad = np.asarray(radii, dtype=np.float32)
+    # Dedupe (source, radius) pairs before dispatch: queries sharing a
+    # blind-spot camera would otherwise pad duplicate rows into the kernel
+    # call (inflating the bucket).  Rows are independent under min-plus
+    # relaxation, so collapsing duplicates is result-invariant.
+    row_of_pair: Dict[Tuple[int, float], int] = {}
+    row_of = np.empty(len(src), dtype=np.int64)
+    for qi, pair in enumerate(zip(src.tolist(), rad.tolist())):
+        row = row_of_pair.get(pair)
+        if row is None:
+            row = row_of_pair[pair] = len(row_of_pair)
+        row_of[qi] = row
+    uniq_src = np.fromiter(
+        (p[0] for p in row_of_pair), dtype=np.int32, count=len(row_of_pair)
+    )
+    uniq_rad = np.fromiter(
+        (p[1] for p in row_of_pair), dtype=np.float32, count=len(row_of_pair)
+    )
     dists = np.asarray(
-        dispatch.spotlight_ball(indptr, indices, weights, src, rad)
-    )  # (Q, V); inf outside each ball
+        dispatch.spotlight_ball(indptr, indices, weights, uniq_src, uniq_rad)
+    )  # (unique rows, V); inf outside each ball
     cam_ids = np.fromiter(camera_vertices.keys(), dtype=np.int64)
     cam_verts = np.fromiter(camera_vertices.values(), dtype=np.int64)
     degrees = np.diff(indptr).astype(np.float64)
+    row_sets: Dict[int, Set[int]] = {}
     out: List[Set[int]] = []
     for qi in range(len(src)):
-        d = dists[qi, cam_verts]
+        row = int(row_of[qi])
+        cached = row_sets.get(row)
+        if cached is not None:
+            out.append(set(cached))
+            continue
+        d = dists[row, cam_verts]
         inside = np.isfinite(d)
         if not inside.any():
-            out.append(set())
-            continue
-        if coverage is None:
-            out.append({int(c) for c in cam_ids[inside]})
-            continue
-        radius = float(rad[qi])
-        scale = max(radius, 1.0)
-        deg = np.maximum(degrees[cam_verts[inside]], 1.0)
-        mass = np.exp(-2.0 * d[inside].astype(np.float64) / scale) / deg
-        order = np.argsort(-mass, kind="stable")
-        csum = np.cumsum(mass[order])
-        cut = int(np.searchsorted(csum, coverage * csum[-1])) + 1
-        out.append({int(c) for c in cam_ids[inside][order[:cut]]})
+            chosen: Set[int] = set()
+        elif coverage is None:
+            chosen = {int(c) for c in cam_ids[inside]}
+        else:
+            radius = float(rad[qi])
+            scale = max(radius, 1.0)
+            deg = np.maximum(degrees[cam_verts[inside]], 1.0)
+            mass = np.exp(-2.0 * d[inside].astype(np.float64) / scale) / deg
+            order = np.argsort(-mass, kind="stable")
+            csum = np.cumsum(mass[order])
+            cut = int(np.searchsorted(csum, coverage * csum[-1])) + 1
+            chosen = {int(c) for c in cam_ids[inside][order[:cut]]}
+        row_sets[row] = chosen
+        out.append(set(chosen))
     return out
 
 

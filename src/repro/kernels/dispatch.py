@@ -32,12 +32,14 @@ from __future__ import annotations
 import functools
 import os
 import weakref
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 __all__ = [
     "BUCKET_MIN",
+    "MAX_JIT_SHAPES",
     "bucket",
     "spotlight_ball",
     "reid_match",
@@ -45,9 +47,18 @@ __all__ = [
     "stats",
     "reset_stats",
     "jit_cache_sizes",
+    "bound_jit_cache",
 ]
 
 BUCKET_MIN = 8
+
+# Upper bound on compiled specializations retained per padded kernel.  A
+# sweep grid that walks many (bucket, dtype) shapes would otherwise grow
+# each kernel's jit cache without bound; jit caches cannot evict single
+# entries, so on overflow the kernel's whole cache is dropped and the next
+# dispatch recompiles (LRU bookkeeping keeps that rare: only a sweep
+# cycling through > MAX_JIT_SHAPES live shapes ever pays it).
+MAX_JIT_SHAPES = 32
 
 _STATS = {
     "reid_calls": 0,
@@ -81,6 +92,35 @@ def _note_shape(key: Tuple) -> None:
     if key not in _SHAPES:
         _SHAPES.add(key)
         _STATS["bucket_shapes"] += 1
+
+
+# Per-kernel LRU of live bucket shapes, bounding the jit caches.
+_JIT_LRU: Dict[str, "OrderedDict[Tuple, None]"] = {}
+
+
+def bound_jit_cache(name: str, fn, key: Tuple, cap: Optional[int] = None) -> None:
+    """Record that ``fn`` (a jitted kernel) is about to be dispatched with
+    bucket-shape ``key``; when more than ``cap`` distinct shapes are live,
+    drop the kernel's compile cache so it is rebuilt for the working set.
+
+    Shared by every padded kernel here and by the mega-step engine's
+    per-(bucket, K) compile cache, so "jit caches stay bounded" is one
+    invariant with one implementation.
+    """
+    if cap is None:
+        cap = MAX_JIT_SHAPES  # read at call time so tests can shrink it
+    lru = _JIT_LRU.setdefault(name, OrderedDict())
+    if key in lru:
+        lru.move_to_end(key)
+        return
+    lru[key] = None
+    if len(lru) > cap:
+        try:
+            fn.clear_cache()
+        except AttributeError:
+            pass
+        lru.clear()
+        lru[key] = None
 
 
 def _use_pallas() -> bool:
@@ -229,7 +269,9 @@ def spotlight_ball(indptr, indices, weights, sources, radii, *, dtype=np.float32
     interpret = jax.default_backend() != "tpu"
     if _BALL_PADDED is None:
         _BALL_PADDED = _make_ball_padded()
-    _note_shape(("ball", int(W.shape[0]), qb, np.dtype(dtype).str, use_pallas))
+    key = ("ball", int(W.shape[0]), qb, np.dtype(dtype).str, use_pallas)
+    _note_shape(key)
+    bound_jit_cache("ball", _BALL_PADDED, key)
     out = _BALL_PADDED(
         W,
         jnp.asarray(src_pad),
@@ -317,7 +359,9 @@ def reid_match(gallery, queries, *, threshold: float = 0.5):
 
     if _REID_PADDED is None:
         _REID_PADDED = _make_reid_padded()
-    _note_shape(("reid", nb, qb, D))
+    key = ("reid", nb, qb, D)
+    _note_shape(key)
+    bound_jit_cache("reid", _REID_PADDED, key)
     scores, best, matched = _REID_PADDED(
         jnp.asarray(g_pad), q_dev, jnp.int32(Q), jnp.float32(threshold)
     )
@@ -410,7 +454,9 @@ def reid_match_multi(gallery, queries, *, mask=None, threshold: float = 0.5):
 
     if _REID_MULTI_PADDED is None:
         _REID_MULTI_PADDED = _make_reid_multi_padded()
-    _note_shape(("reid_multi", nb, qb, D))
+    key = ("reid_multi", nb, qb, D)
+    _note_shape(key)
+    bound_jit_cache("reid_multi", _REID_MULTI_PADDED, key)
     scores, matched = _REID_MULTI_PADDED(
         jnp.asarray(g_pad), q_dev, jnp.asarray(m_pad),
         jnp.float32(threshold),
@@ -421,11 +467,18 @@ def reid_match_multi(gallery, queries, *, mask=None, threshold: float = 0.5):
 def jit_cache_sizes() -> Dict[str, int]:
     """Number of distinct compilations held by each padded kernel (0 when
     the kernel has not been dispatched yet)."""
+    try:  # the mega-step scan shares the bounded-jit-cache contract
+        from .megastep import ops as _mega_ops
+
+        mega_fn = _mega_ops._CHUNK_FN
+    except Exception:
+        mega_fn = None
     sizes = {}
     for name, fn in (
         ("ball", _BALL_PADDED),
         ("reid", _REID_PADDED),
         ("reid_multi", _REID_MULTI_PADDED),
+        ("megastep", mega_fn),
     ):
         if fn is None:
             sizes[name] = 0

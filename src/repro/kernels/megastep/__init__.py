@@ -1,0 +1,29 @@
+"""Fused mega-step tick engine (kernel/ops/ref triple).
+
+The mega-step collapses the interpreted per-tick hot loop — source frames,
+VA pass-through, CR verdicts, sink latency rows and the TL spotlight — into
+one engine invocation per run instead of one scheduler event per pipeline
+hop.  Three implementations share the exact event semantics of the
+discrete-event pipeline (`repro.core.pipeline`) for drops-off streaming
+configs:
+
+* :mod:`.ref` — numpy reference: a per-lane busy-chain state machine in
+  python floats plus a table-driven TL update.  The bit-exactness oracle
+  for the device paths and the host backend for TL strategies that cannot
+  be lowered to table lookups (probabilistic coverage, kernel spotlight
+  mode).
+* :mod:`.ops` — jax ``lax.scan`` over ticks with an inner scan over padded
+  lane slots; runs in x64 and returns the same rows bit-for-bit.
+* :mod:`.kernel` — the Pallas per-lane chain step (grid over lanes), used
+  by :mod:`.ops` when enabled and validated in interpret mode against the
+  jnp reference step.
+
+Drivers never call these directly; `repro.core.megastep` owns eligibility,
+the host-precomputed plan (tick chains, visibility table, spotlight
+distance/hop planes, radius tables, the shared CR uniform stream) and the
+result assembly.
+"""
+
+from . import ref  # noqa: F401
+
+__all__ = ["ref"]

@@ -728,6 +728,17 @@ class MultiQueryScenario(TrackingScenario):
     # ------------------------------------------------------------------ #
     def run(self) -> MultiQueryResult:  # type: ignore[override]
         self._started = True
+        self.engine_used = "interpreted"
+        self.engine_fallback_reason = "engine=interpreted"
+        self.engine_xfer_s = 0.0  # device->host pull wall (device backend)
+        if getattr(self.cfg, "engine", "interpreted") == "megastep":
+            from repro.core.megastep import try_run_megastep
+
+            fused = try_run_megastep(self)
+            if fused is not None:
+                return fused
+            # None: either ineligible (interpreted fallback) or the drops-on
+            # backend primed its tick chain — both continue below.
         base = super().run()
         per_query: Dict[int, ScenarioResult] = {}
         for qid, st in sorted(self.registry.states.items()):

@@ -204,6 +204,14 @@ class ScenarioConfig:
     # plus per-task telemetry + ground-truth tracking quality.  None keeps
     # the scenario bit-identical to its undisturbed trajectory.
     dynamism: Optional[DynamismSpec] = None
+    # Execution engine for the per-tick hot loop.  "interpreted" drives the
+    # discrete-event pipeline tick by tick (the reference semantics);
+    # "megastep" lowers eligible configs to the fused device-resident tick
+    # engine (`repro.core.megastep`), which executes frames -> VA -> CR ->
+    # TL spotlight -> budget update for all queries and K ticks per dispatch
+    # and must be bit-identical.  Ineligible configs (faults, dynamism,
+    # non-static xi, ...) silently fall back to the interpreted pipeline.
+    engine: str = "interpreted"
 
     # ------------------------------------------------------------------ #
     # App-compiler factories: the config is a preset-app description      #

@@ -201,3 +201,22 @@ def test_reid_multi_buckets_and_compile_accounting():
                               rng.normal(size=(9, D)).astype(np.float32))
     assert dispatch.jit_cache_sizes()["reid_multi"] == base + 1
     assert dispatch.stats()["reid_multi_calls"] == before + 6
+
+
+def test_jit_cache_is_bounded(monkeypatch):
+    """Sweeping more distinct bucket shapes than MAX_JIT_SHAPES must not
+    grow a kernel's compile cache without bound: the LRU drops the cache on
+    overflow and rebuilds it for the working set."""
+    monkeypatch.setattr(dispatch, "MAX_JIT_SHAPES", 4)
+    rng = np.random.default_rng(6)
+    # Each feature width D is its own bucket shape for the reid kernel.
+    for D in (52, 56, 60, 64, 68, 72, 76):
+        dispatch.reid_match(rng.normal(size=(2, D)).astype(np.float32),
+                            rng.normal(size=(1, D)).astype(np.float32))
+        assert dispatch.jit_cache_sizes()["reid"] <= 4
+        assert len(dispatch._JIT_LRU["reid"]) <= 4
+    # A shape inside the live working set does not recompile.
+    size = dispatch.jit_cache_sizes()["reid"]
+    dispatch.reid_match(rng.normal(size=(2, 76)).astype(np.float32),
+                        rng.normal(size=(1, 76)).astype(np.float32))
+    assert dispatch.jit_cache_sizes()["reid"] == size

@@ -119,6 +119,37 @@ def test_wbfs_incremental_across_episodes(road):
             assert incremental.update([], now) == fresh.update([], now)
 
 
+def test_multi_source_spotlight_dedupes_duplicate_sources():
+    """Two queries sharing a blind-spot camera used to pad duplicate rows
+    into the kernel call; duplicates must now collapse before dispatch
+    (9 rows / 2 unique pairs -> the minimum bucket, never 16) while the
+    returned per-query sets stay equal to independent singleton calls."""
+    pytest.importorskip("jax")
+    from repro.core.tracking import multi_source_spotlight
+    from repro.kernels import dispatch
+
+    net = make_road_network(num_vertices=160, target_edges=440, seed=11)
+    cams = {c: c for c in range(net.num_vertices)}
+    sources = [5, 5, 5, 80, 80, 5, 80, 5, 5]
+    radii = [300.0] * len(sources)
+    for coverage in (None, 0.9):
+        out = multi_source_spotlight(net, cams, sources, radii, coverage=coverage)
+        solo = {
+            s: multi_source_spotlight(net, cams, [s], [300.0], coverage=coverage)[0]
+            for s in (5, 80)
+        }
+        assert len(out) == len(sources)
+        for s, got in zip(sources, out):
+            assert got == solo[s] and got
+    # Distinct set objects per row: mutating one must not leak into others.
+    out[0].add(-1)
+    assert -1 not in out[5]
+    # Bucket accounting: this network only ever dispatched the minimum
+    # bucket (2 unique pairs), never the bucket for 9 raw rows.
+    shapes = {s for s in dispatch._SHAPES if s[0] == "ball" and s[1] == net.num_vertices}
+    assert shapes and all(s[2] == dispatch.BUCKET_MIN for s in shapes)
+
+
 def test_multi_entity_python_vs_kernel(road):
     pytest.importorskip("jax")
     cams = {c: c for c in range(road.num_vertices)}
