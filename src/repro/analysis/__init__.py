@@ -1,0 +1,47 @@
+"""Replay-safety analyzer: determinism, JAX-hygiene, and kernel-contract
+static analysis for the tracking platform.
+
+The dynamic gates (seed-0 goldens, journal digests, mega-step bit-identity
+tests) catch a determinism violation *after* it lands; this package checks
+the underlying invariants at review time:
+
+* ``python -m repro.analysis src/repro`` — scan the tree (rule families
+  DET/JAX/EXC/KRN), honoring ``# repro: noqa[RULE]`` suppressions and the
+  checked-in ``ANALYSIS_BASELINE.json`` so CI gates *new* violations.
+* :mod:`repro.analysis.graphcheck` — the compile-time dataflow-graph
+  verifier (GRF rules), wired into ``compile_app(..., verify=True)``.
+
+See ``ANALYSIS.md`` at the repo root for the rule catalog.
+"""
+
+from .engine import (
+    Finding,
+    SourceModule,
+    filter_baselined,
+    load_baseline,
+    rule_catalog,
+    save_baseline,
+    scan_paths,
+    scan_source,
+)
+from .graphcheck import (
+    GraphContractError,
+    check_compiled,
+    verify_compiled,
+    verify_megastep,
+)
+
+__all__ = [
+    "Finding",
+    "SourceModule",
+    "GraphContractError",
+    "check_compiled",
+    "filter_baselined",
+    "load_baseline",
+    "rule_catalog",
+    "save_baseline",
+    "scan_paths",
+    "scan_source",
+    "verify_compiled",
+    "verify_megastep",
+]

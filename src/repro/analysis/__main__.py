@@ -1,0 +1,108 @@
+"""CLI front door: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 = clean (modulo baseline), 1 = new findings, 2 = usage /
+baseline error.  ``--write-baseline`` snapshots the current findings as
+the new baseline (every entry then needs a human-written justification —
+``load_baseline`` rejects entries without one).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List, Optional
+
+from .engine import (
+    filter_baselined,
+    iter_py_files,
+    load_baseline,
+    rule_catalog,
+    save_baseline,
+    scan_paths,
+)
+
+DEFAULT_BASELINE = "ANALYSIS_BASELINE.json"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Replay-safety static analyzer (DET/JAX/EXC/KRN rules).",
+    )
+    parser.add_argument("paths", nargs="*", default=["src/repro"],
+                        help="files or trees to scan (default: src/repro)")
+    parser.add_argument("--baseline", default=None,
+                        help=f"baseline JSON (default: {DEFAULT_BASELINE} "
+                             "when it exists)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="snapshot current findings as the baseline")
+    parser.add_argument("--select", default=None,
+                        help="comma-separated rule ids to run (e.g. "
+                             "DET002,EXC001)")
+    parser.add_argument("--tests", default="tests",
+                        help="test tree for the KRN004 reference check")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rid, desc in rule_catalog().items():
+            print(f"{rid}  {desc}")
+        return 0
+
+    paths = args.paths or ["src/repro"]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path {p!r}", file=sys.stderr)
+            return 2
+
+    select = (
+        {r.strip() for r in args.select.split(",") if r.strip()}
+        if args.select
+        else None
+    )
+    tests_dir = args.tests if os.path.isdir(args.tests) else None
+
+    t0 = time.perf_counter()
+    findings = scan_paths(paths, select=select, tests_dir=tests_dir)
+    wall = time.perf_counter() - t0
+
+    baseline_path = args.baseline or (
+        DEFAULT_BASELINE if os.path.exists(DEFAULT_BASELINE) else None
+    )
+    if args.write_baseline:
+        out = args.baseline or DEFAULT_BASELINE
+        save_baseline(out, findings)
+        print(f"wrote {len(findings)} finding(s) to {out} "
+              "(add a justification to every entry)")
+        return 0
+
+    baseline: List[dict] = []
+    if baseline_path:
+        try:
+            baseline = load_baseline(baseline_path)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+
+    new, stale = filter_baselined(findings, baseline)
+    for f in new:
+        print(f.render())
+    n_files = sum(1 for root in paths for _ in iter_py_files(root))
+    suppressed = len(findings) - len(new)
+    print(
+        f"[repro.analysis] {n_files} files, {len(new)} new finding(s)"
+        + (f", {suppressed} baselined" if suppressed else "")
+        + (f", {len(stale)} stale baseline entr"
+           f"{'y' if len(stale) == 1 else 'ies'} (prune them)" if stale else "")
+        + f" in {wall:.2f}s"
+    )
+    for e in stale:
+        print(f"  stale: {e['rule']} {e['path']}:{e['line']}")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

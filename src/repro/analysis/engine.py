@@ -1,0 +1,304 @@
+"""Rule engine for the replay-safety analyzer.
+
+Every guarantee the platform ships — seed-0 bit-identical goldens, the
+journal's exact-recovery contract, the mega-step engine's bit-identity to
+the interpreted pipeline — rests on determinism and device-hygiene
+invariants that the golden digests only catch *after* a violation lands.
+This module is the static half of that contract: an AST-based scanner with
+
+* a rule registry (``DET``/``JAX``/``EXC`` per-file families plus the
+  ``KRN`` kernel-contract tree checks in :mod:`.rules_krn`),
+* ``# repro: noqa[RULE]`` line suppressions (same line, or an immediately
+  preceding pure-comment line, so a justification can sit above the code),
+* a checked-in JSON baseline so CI gates *new* violations only.
+
+The CLI front door is :mod:`repro.analysis.__main__`; the compile-time
+dataflow-graph verifier lives in :mod:`repro.analysis.graphcheck`.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding",
+    "SourceModule",
+    "register",
+    "rule_catalog",
+    "scan_source",
+    "scan_paths",
+    "load_baseline",
+    "save_baseline",
+    "filter_baselined",
+]
+
+
+# --------------------------------------------------------------------- #
+# Findings                                                               #
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str          # e.g. "DET002"
+    path: str          # path as scanned (posix separators)
+    line: int          # 1-based physical line
+    message: str
+
+    def key(self) -> Tuple[str, str, int]:
+        return (self.rule, self.path, self.line)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclass
+class SourceModule:
+    """A parsed source file plus everything rules need to scope themselves."""
+
+    path: str           # as given to the scanner (posix)
+    pkgpath: str        # path relative to the `repro` package root ("" if outside)
+    text: str
+    tree: ast.AST
+    lines: List[str] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.lines:
+            self.lines = self.text.splitlines()
+
+    def in_packages(self, *prefixes: str) -> bool:
+        """True when the module lives under any ``repro/<prefix>`` subtree
+        (``prefixes`` are posix, e.g. ``"core/"`` or ``"kernels/megastep/"``
+        or an exact file like ``"core/megastep.py"``)."""
+        return any(
+            self.pkgpath == p or self.pkgpath.startswith(p) for p in prefixes
+        )
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(rule, self.path, int(line), message)
+
+
+# --------------------------------------------------------------------- #
+# Rule registry                                                          #
+# --------------------------------------------------------------------- #
+#: rule id -> (one-line description, per-module check)
+_RULES: Dict[str, Tuple[str, Callable[[SourceModule], Iterable[Finding]]]] = {}
+
+
+def register(rule_id: str, description: str):
+    """Decorator: register a per-module check under ``rule_id``.  A check
+    receives a :class:`SourceModule` and yields :class:`Finding`\\ s; it is
+    free to yield findings for related sub-ids (``KRN00x``) too."""
+
+    def wrap(fn):
+        _RULES[rule_id] = (description, fn)
+        return fn
+
+    return wrap
+
+
+def rule_catalog() -> Dict[str, str]:
+    """rule id -> description, for ``--list-rules`` and the docs test."""
+    _load_rule_modules()
+    return {rid: desc for rid, (desc, _) in sorted(_RULES.items())}
+
+
+_LOADED = False
+
+
+def _load_rule_modules() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    # Import for side effect: each module registers its rules.
+    from . import rules_det, rules_exc, rules_jax, rules_krn  # noqa: F401
+
+    _LOADED = True
+
+
+# --------------------------------------------------------------------- #
+# Suppressions                                                           #
+# --------------------------------------------------------------------- #
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\[([A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)\]")
+
+
+def _suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """line (1-based) -> rule ids suppressed on that line.
+
+    A ``# repro: noqa[RULE]`` on a pure-comment line also covers the next
+    line, so a justification comment can sit directly above the flagged
+    statement.
+    """
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _NOQA_RE.search(line)
+        if not m:
+            continue
+        ids = {r.strip() for r in m.group(1).split(",")}
+        out.setdefault(i, set()).update(ids)
+        if line.lstrip().startswith("#"):  # pure comment: covers the code below
+            out.setdefault(i + 1, set()).update(ids)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Scanning                                                               #
+# --------------------------------------------------------------------- #
+def _pkgpath(path: str) -> str:
+    """Path relative to the last ``repro`` package component (posix)."""
+    parts = path.replace(os.sep, "/").split("/")
+    for i in range(len(parts) - 1, -1, -1):
+        if parts[i] == "repro":
+            return "/".join(parts[i + 1 :])
+    # No package root in the path: treat the whole (relative) path as the
+    # package path so fixture snippets can scope themselves directly.
+    return "/".join(parts).lstrip("/")
+
+
+def scan_source(
+    text: str,
+    path: str = "<string>",
+    *,
+    pkgpath: Optional[str] = None,
+    select: Optional[Set[str]] = None,
+) -> List[Finding]:
+    """Scan one source string; the unit the fixture tests drive."""
+    _load_rule_modules()
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding("PAR001", path, int(e.lineno or 1), f"syntax error: {e.msg}")]
+    mod = SourceModule(
+        path=path.replace(os.sep, "/"),
+        pkgpath=pkgpath if pkgpath is not None else _pkgpath(path),
+        text=text,
+        tree=tree,
+    )
+    noqa = _suppressions(mod.lines)
+    findings: List[Finding] = []
+    for rid, (_desc, check) in sorted(_RULES.items()):
+        if select and rid not in select:
+            continue
+        for f in check(mod):
+            if f.rule in noqa.get(f.line, ()):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def iter_py_files(root: str) -> Iterator[str]:
+    if os.path.isfile(root):
+        yield root
+        return
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(
+            d for d in dirnames if d not in ("__pycache__", ".git")
+        )
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                yield os.path.join(dirpath, name)
+
+
+def scan_paths(
+    paths: Sequence[str],
+    *,
+    select: Optional[Set[str]] = None,
+    tests_dir: Optional[str] = None,
+) -> List[Finding]:
+    """Scan files/trees; also runs the KRN tree checks for any scanned
+    ``kernels/`` package root."""
+    _load_rule_modules()
+    findings: List[Finding] = []
+    kernel_roots: List[str] = []
+    for root in paths:
+        for fp in iter_py_files(root):
+            with open(fp, "r", encoding="utf-8") as fh:
+                text = fh.read()
+            findings.extend(scan_source(text, fp, select=select))
+        # Tree-level kernel-contract checks need the directory layout.
+        if os.path.isdir(root):
+            cand = (
+                root
+                if os.path.basename(root.rstrip("/")) == "kernels"
+                else os.path.join(root, "kernels")
+            )
+            if os.path.isdir(cand):
+                kernel_roots.append(cand)
+    from .rules_krn import check_kernel_tree
+
+    for kroot in kernel_roots:
+        for f in check_kernel_tree(kroot, tests_dir=tests_dir):
+            if select and f.rule not in select:
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+# --------------------------------------------------------------------- #
+# Baseline                                                               #
+# --------------------------------------------------------------------- #
+def load_baseline(path: str) -> List[dict]:
+    """A baseline is a JSON list of ``{rule, path, line, justification}``
+    entries; every entry MUST carry a non-empty justification — the
+    baseline exists to grandfather *known* debt, not to hide findings."""
+    if not os.path.exists(path):
+        return []
+    with open(path, "r", encoding="utf-8") as fh:
+        entries = json.load(fh)
+    if not isinstance(entries, list):
+        raise ValueError(f"baseline {path}: expected a JSON list")
+    for e in entries:
+        if not isinstance(e, dict) or not {"rule", "path", "line"} <= set(e):
+            raise ValueError(f"baseline {path}: malformed entry {e!r}")
+        just = str(e.get("justification", "")).strip()
+        if not just or just.upper().startswith("TODO"):
+            raise ValueError(
+                f"baseline {path}: entry {e['rule']} @ {e['path']}:{e['line']} "
+                "has no justification (snapshot entries stay rejected until "
+                "a human replaces the TODO)"
+            )
+    return entries
+
+
+def save_baseline(path: str, findings: Sequence[Finding]) -> None:
+    entries = [
+        {
+            "rule": f.rule,
+            "path": f.path,
+            "line": f.line,
+            "message": f.message,
+            "justification": "TODO: justify or fix",
+        }
+        for f in findings
+    ]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(entries, fh, indent=2)
+        fh.write("\n")
+
+
+def filter_baselined(
+    findings: Sequence[Finding], baseline: Sequence[dict]
+) -> Tuple[List[Finding], List[dict]]:
+    """Split findings into (new, stale-baseline-entries).
+
+    A finding matches a baseline entry on (rule, path, line).  Entries that
+    no longer match anything are returned so the CLI can nag about pruning
+    the baseline (stale entries are informational, not a failure).
+    """
+    keyed = {(e["rule"], e["path"].replace(os.sep, "/"), int(e["line"])) for e in baseline}
+    new = [f for f in findings if f.key() not in keyed]
+    found = {f.key() for f in findings}
+    stale = [
+        e
+        for e in baseline
+        if (e["rule"], e["path"].replace(os.sep, "/"), int(e["line"])) not in found
+    ]
+    return new, stale

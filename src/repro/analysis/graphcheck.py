@@ -1,0 +1,320 @@
+"""Compile-time dataflow-graph verifier (GRF rules).
+
+The compiler (:mod:`repro.core.compile`) lowers a ``TrackingApp`` onto the
+task DAG; this module *verifies* the lowered graph before a single event
+runs, so a miswired app fails at compile time with a readable diagnostic
+instead of at replay time with a digest mismatch:
+
+* GRF001 — **edge compatibility**: VA tasks feed exactly the CR stage, CR
+  feeds exactly the UV sink, no stage dangles, and every routing-table
+  destination exists.
+* GRF002 — **undeclared feedback**: the task graph must be acyclic.  The
+  only sanctioned loop closure is the QF→VA/CR query-push control edge,
+  which is a *state* push (not a ``downstream`` edge) — any cycle in the
+  event-edge graph is an undeclared feedback loop.
+* GRF003 — **fusion-gate consistency**: ``fuse_streaming``/``fuse_fc`` are
+  only sound when drops are off and the sim's transit *and* xi are static
+  (`xi_is_static`); a fused task under a dynamic-xi sim replays
+  differently than it runs.
+* GRF004 — **spec sanity**: unknown module names in ``app.specs``,
+  non-callable logics, a TL without the TrackingLogic surface.
+* GRF005 — **mega-step totality**: a config that *requests*
+  ``engine="megastep"`` must classify to a backend or carry a recorded
+  ``engine_fallback_reason`` — "no backend, no reason" is the unobservable
+  state the engine contract forbids.
+
+Entry points: :func:`verify_compiled` returns findings,
+:func:`check_compiled` raises :class:`GraphContractError` with all of them
+(used by ``compile_app(..., verify=True)`` and the
+``REPRO_ANALYSIS_VERIFY=1`` env hook); :func:`verify_megastep` covers
+GRF005 pre- and post-run.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Set
+
+from .engine import Finding
+
+__all__ = [
+    "GraphContractError",
+    "verify_compiled",
+    "check_compiled",
+    "verify_megastep",
+]
+
+
+class GraphContractError(Exception):
+    """A compiled app violates the dataflow-graph contract; ``findings``
+    holds every violation, the message renders all of them."""
+
+    def __init__(self, findings: List[Finding]):
+        self.findings = findings
+        lines = [f"compiled app violates the dataflow-graph contract "
+                 f"({len(findings)} finding{'s' if len(findings) != 1 else ''}):"]
+        lines += [f"  - {f.rule}: {f.message}" for f in findings]
+        super().__init__("\n".join(lines))
+
+
+def _f(rule: str, app_name: str, message: str) -> Finding:
+    return Finding(rule, f"<app:{app_name}>", 0, message)
+
+
+# --------------------------------------------------------------------- #
+# GRF001/GRF002: edges and cycles                                        #
+# --------------------------------------------------------------------- #
+def _check_edges(compiled, name: str) -> List[Finding]:
+    out: List[Finding] = []
+    cr_names = {t.name for t in compiled.cr_tasks}
+    sink = compiled.sink
+    sink_name = sink.name if sink is not None else None
+    if sink is None:
+        out.append(_f("GRF001", name, "compiled app has no UV sink"))
+        return out
+    for va in compiled.va_tasks:
+        dst = set(va.downstream)
+        if not dst:
+            out.append(_f("GRF001", name, f"{va.name} has no downstream: "
+                          "the VA stage dangles (events die on the floor)"))
+        elif dst != cr_names:
+            out.append(_f(
+                "GRF001", name,
+                f"{va.name} feeds {sorted(dst)} but the CR stage is "
+                f"{sorted(cr_names)}: VA must feed exactly the CR tasks",
+            ))
+    for cr in compiled.cr_tasks:
+        dst = set(cr.downstream)
+        if dst != {sink_name}:
+            out.append(_f(
+                "GRF001", name,
+                f"{cr.name} feeds {sorted(dst)}: CR must feed exactly the "
+                f"UV sink ({sink_name!r})",
+            ))
+    for fc in compiled.fc_tasks.values():
+        dst = set(fc.downstream)
+        va_names = {t.name for t in compiled.va_tasks}
+        if not dst <= va_names or not dst:
+            out.append(_f(
+                "GRF001", name,
+                f"{fc.name} feeds {sorted(dst)}: FC must feed the VA stage "
+                f"({sorted(va_names)})",
+            ))
+    if set(sink.downstream):
+        out.append(_f(
+            "GRF001", name,
+            f"sink {sink_name} has downstream edges "
+            f"{sorted(sink.downstream)}: the sink terminates the graph "
+            "(feedback goes through the QF control edge, not an event edge)",
+        ))
+    # Routing tables must resolve inside the edge set.
+    route = getattr(compiled, "_cr_route", None)
+    if route:
+        bad = sorted(set(route.values()) - cr_names)
+        if bad:
+            out.append(_f(
+                "GRF001", name,
+                f"VA->CR routing table targets missing tasks {bad}: every "
+                "routed destination must exist",
+            ))
+    return out
+
+
+def _find_cycle(tasks) -> Optional[List[str]]:
+    graph: Dict[str, List[str]] = {
+        t.name: sorted(t.downstream) for t in tasks
+    }
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    stack: List[str] = []
+
+    def dfs(n: str) -> Optional[List[str]]:
+        color[n] = GREY
+        stack.append(n)
+        for m in graph.get(n, ()):
+            if color.get(m, BLACK) == GREY:
+                return stack[stack.index(m):] + [m]
+            if color.get(m, BLACK) == WHITE:
+                cyc = dfs(m)
+                if cyc:
+                    return cyc
+        stack.pop()
+        color[n] = BLACK
+        return None
+
+    for n in sorted(graph):
+        if color[n] == WHITE:
+            cyc = dfs(n)
+            if cyc:
+                return cyc
+    return None
+
+
+def _check_cycles(compiled, name: str) -> List[Finding]:
+    tasks = list(compiled.all_tasks())
+    if compiled.sink is not None:
+        tasks.append(compiled.sink)
+    cyc = _find_cycle(tasks)
+    if cyc:
+        return [_f(
+            "GRF002", name,
+            "undeclared feedback cycle " + " -> ".join(cyc) + ": only the "
+            "QF->VA/CR query-push control edge may close a loop, and it is "
+            "a state push, never an event edge",
+        )]
+    return []
+
+
+# --------------------------------------------------------------------- #
+# GRF003: fusion gates                                                   #
+# --------------------------------------------------------------------- #
+def _check_fusion(compiled, name: str) -> List[Finding]:
+    out: List[Finding] = []
+    sim = compiled.sim
+    drops = compiled.deployment.drops_enabled
+    transit_static = getattr(sim, "transit_is_static", False)
+    xi_static = getattr(sim, "xi_is_static", True)
+    fuse_ok = transit_static and xi_static
+    for t in compiled.all_tasks():
+        if getattr(t, "fuse_streaming", False) and (drops or not fuse_ok):
+            why = (
+                "drops are enabled" if drops
+                else "xi is dynamic" if not xi_static
+                else "transit is dynamic"
+            )
+            out.append(_f(
+                "GRF003", name,
+                f"{t.name} has fuse_streaming=True but {why}: fused "
+                "execute+transmit is only sound with drops off and static "
+                "transit/xi (xi_is_static)",
+            ))
+    if getattr(compiled, "fuse_fc", False):
+        from ..core.dataflow import fc_is_active
+
+        if compiled.app.fc is not fc_is_active:
+            out.append(_f(
+                "GRF003", name,
+                "fuse_fc=True with a stateful FC logic: only the stateless "
+                "fc_is_active gate may be fused into the source",
+            ))
+        if drops or not fuse_ok:
+            out.append(_f(
+                "GRF003", name,
+                "fuse_fc=True under drops or dynamic transit/xi: the fused "
+                "source plane precomputes transits and xi",
+            ))
+        if compiled.fps <= 0 or 1.0 / compiled.fps <= compiled.fc_xi1:
+            out.append(_f(
+                "GRF003", name,
+                "fuse_fc=True but the frame period does not exceed "
+                "xi_fc(1): the fused source would reorder FC completions",
+            ))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# GRF004: spec sanity                                                    #
+# --------------------------------------------------------------------- #
+def _check_specs(app, name: str) -> List[Finding]:
+    from ..core.compile import MODULES
+
+    out: List[Finding] = []
+    for module in getattr(app, "specs", {}):
+        if module not in MODULES:
+            out.append(_f(
+                "GRF004", name,
+                f"app.specs names unknown module {module!r}: the module "
+                f"universe is {MODULES}",
+            ))
+    for logic_name in ("fc", "va", "cr"):
+        logic = getattr(app, logic_name, None)
+        if not callable(logic):
+            out.append(_f(
+                "GRF004", name,
+                f"app.{logic_name} is not callable ({logic!r}): FC/VA/CR "
+                "logics are required",
+            ))
+    qf = getattr(app, "qf", None)
+    if qf is not None and not callable(qf):
+        out.append(_f("GRF004", name, f"app.qf is not callable ({qf!r})"))
+    tl = getattr(app, "tl", None)
+    for attr in ("active", "last_seen_camera", "cameras_in_vertices"):
+        if not hasattr(tl, attr):
+            out.append(_f(
+                "GRF004", name,
+                f"app.tl lacks the TrackingLogic surface (missing "
+                f"{attr!r}): the control plane cannot drive it",
+            ))
+            break
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Public API                                                             #
+# --------------------------------------------------------------------- #
+def verify_compiled(compiled) -> List[Finding]:
+    """All GRF001-GRF004 findings for a :class:`CompiledApp` (empty =
+    contract holds)."""
+    name = getattr(compiled.app, "name", "?")
+    findings = _check_specs(compiled.app, name)
+    findings += _check_edges(compiled, name)
+    findings += _check_cycles(compiled, name)
+    findings += _check_fusion(compiled, name)
+    return findings
+
+
+def check_compiled(compiled) -> None:
+    """Raise :class:`GraphContractError` when the compiled graph is
+    miswired; the hook behind ``compile_app(..., verify=True)`` and
+    ``REPRO_ANALYSIS_VERIFY=1``."""
+    findings = verify_compiled(compiled)
+    if findings:
+        raise GraphContractError(findings)
+
+
+def verify_megastep(scn, *, post_run: bool = False) -> List[Finding]:
+    """GRF005: a scenario that requests ``engine="megastep"`` must map to a
+    backend or record why not.
+
+    Pre-run (default): classify via :func:`repro.core.megastep.
+    megastep_backend` and reject the unobservable "no backend, no reason"
+    state.  ``post_run=True`` additionally checks the recorded outcome
+    (``engine_used`` / ``engine_fallback_reason``) after the run.
+    """
+    name = getattr(getattr(scn, "cfg", None), "engine", "?")
+    out: List[Finding] = []
+    cfg = getattr(scn, "cfg", None)
+    if getattr(cfg, "engine", "interpreted") != "megastep":
+        return out
+    from ..core.megastep import megastep_backend
+
+    backend, reason = megastep_backend(scn)
+    if backend is None and not reason:
+        out.append(_f(
+            "GRF005", str(name),
+            "megastep config maps to no backend and no recorded "
+            "engine_fallback_reason: the engine contract requires every "
+            "fallback to be observable",
+        ))
+    if post_run:
+        used = getattr(scn, "engine_used", "")
+        known = {"interpreted", "megastep-device", "megastep-host", "megastep-des"}
+        if used not in known:
+            out.append(_f(
+                "GRF005", str(name),
+                f"engine_used={used!r} after a megastep run: expected one "
+                f"of {sorted(known)}",
+            ))
+        if used == "interpreted" and not getattr(scn, "engine_fallback_reason", ""):
+            out.append(_f(
+                "GRF005", str(name),
+                "megastep was requested, the interpreted pipeline ran, and "
+                "no engine_fallback_reason was recorded",
+            ))
+    return out
+
+
+def verify_env_enabled() -> bool:
+    """True when the ``REPRO_ANALYSIS_VERIFY`` env hook asks the compiler
+    to verify every lowered app (tests + CI debugging aid)."""
+    return os.environ.get("REPRO_ANALYSIS_VERIFY", "") == "1"

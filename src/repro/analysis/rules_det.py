@@ -1,0 +1,271 @@
+"""DET — determinism rules.
+
+The platform's replay contract (seed-0 goldens, journal exact-recovery,
+mega-step bit-identity) dies the moment event order or float accumulation
+order depends on anything but the seed.  These rules catch the classic
+order/entropy leaks at review time:
+
+* DET001 — iteration over a *syntactically unordered* collection (a set
+  display, ``set()``/``frozenset()`` call, set comprehension, or a union of
+  them) feeding event scheduling or float accumulation, in the scheduling
+  planes (``core/``, ``sim/``, ``query/``).  Python sets iterate in hash
+  order, which varies across runs/processes for str keys — dicts are
+  insertion-ordered and fine.
+* DET002 — wall-clock reads (``time.time``, ``datetime.now``, ...).  All
+  timing goes through :func:`repro.core.clock.monotonic`; simulation time
+  comes from the DES.  Benchmark-legit call sites carry explicit
+  suppressions.
+* DET003 — unseeded *global* RNG (``random.random()``,
+  ``np.random.rand()``, ``np.random.seed``): process-global entropy that no
+  ``seed=`` config reaches.  Seeded generator objects
+  (``random.Random(s)``, ``np.random.default_rng(s)``) are the sanctioned
+  pattern.
+* DET004 — ``id()``/``hash()`` used as a sort key: CPython ``id`` is an
+  address and str ``hash`` is salted per process, so the resulting order is
+  not replayable.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set, Tuple
+
+from .engine import Finding, SourceModule, register
+
+#: Packages whose iteration order feeds the event calendar / accounting.
+_DET001_SCOPE = ("core/", "sim/", "query/")
+
+#: Calls that put work on the event calendar (scheduling sinks).
+_SCHEDULE_FNS = {"schedule", "heappush", "push_event", "submit", "arrive"}
+
+#: Module-level wall-clock reads: (module, attr).
+_WALL_FNS = {
+    ("time", "time"),
+    ("time", "time_ns"),
+    ("time", "ctime"),
+    ("time", "localtime"),
+    ("time", "gmtime"),
+    ("datetime", "now"),
+    ("datetime", "utcnow"),
+    ("datetime", "today"),
+    ("date", "today"),
+}
+
+#: np.random.<attr> calls that are NOT the global RNG (constructors of
+#: explicitly-seeded generators and bit generators).
+_NP_RANDOM_OK = {
+    "default_rng",
+    "Generator",
+    "RandomState",
+    "SeedSequence",
+    "PCG64",
+    "PCG64DXSM",
+    "Philox",
+    "MT19937",
+    "SFC64",
+    "BitGenerator",
+}
+
+#: random.<attr> that construct an independent, seedable generator.
+_PY_RANDOM_OK = {"Random", "SystemRandom", "getstate", "setstate"}
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    """True for expressions that are unordered by construction."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None
+        )
+        if name in ("set", "frozenset", "union", "intersection", "difference",
+                    "symmetric_difference"):
+            return True
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+    ):
+        return _is_set_expr(node.left) or _is_set_expr(node.right)
+    return False
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _body_sinks(nodes) -> Iterator[Tuple[ast.AST, str]]:
+    """Yield (node, kind) for scheduling calls / float accumulation inside a
+    loop body."""
+    for stmt in nodes:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name in _SCHEDULE_FNS:
+                    yield node, f"schedules events ({name})"
+                elif name == "sum":
+                    yield node, "accumulates (sum)"
+            elif isinstance(node, ast.AugAssign) and isinstance(
+                node.op, (ast.Add, ast.Sub)
+            ):
+                yield node, "accumulates (+=)"
+
+
+@register(
+    "DET001",
+    "unordered set iteration feeding event scheduling or float accumulation",
+)
+def det001(mod: SourceModule) -> Iterator[Finding]:
+    if not mod.in_packages(*_DET001_SCOPE):
+        return
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)) and _is_set_expr(node.iter):
+            for _sink, kind in _body_sinks(node.body):
+                yield mod.finding(
+                    "DET001",
+                    node,
+                    f"loop over an unordered set {kind}: set iteration order "
+                    "is not replayable — sort it or keep an ordered dict",
+                )
+                break
+        # sum(<genexp over a set>) — accumulation order is the hash order.
+        if isinstance(node, ast.Call) and _call_name(node) == "sum":
+            for arg in node.args[:1]:
+                if isinstance(arg, (ast.GeneratorExp, ast.ListComp)) and any(
+                    _is_set_expr(gen.iter) for gen in arg.generators
+                ):
+                    yield mod.finding(
+                        "DET001",
+                        node,
+                        "float accumulation over an unordered set: reduction "
+                        "order is not replayable — sort the iterable",
+                    )
+
+
+def _import_aliases(tree: ast.AST) -> Dict[str, Tuple[str, str]]:
+    """local name -> (module, attr) for `from X import Y [as Z]`; attr '' for
+    plain `import X [as Z]`."""
+    out: Dict[str, Tuple[str, str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (a.name, "")
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = (node.module, a.name)
+    return out
+
+
+@register("DET002", "wall-clock read outside the monotonic clock helper")
+def det002(mod: SourceModule) -> Iterator[Finding]:
+    aliases = _import_aliases(mod.tree)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        hit: Optional[Tuple[str, str]] = None
+        if isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name):
+            base = aliases.get(fn.value.id, (fn.value.id, ""))[0].split(".")[-1]
+            if (base, fn.attr) in _WALL_FNS:
+                hit = (base, fn.attr)
+        elif isinstance(fn, ast.Name) and fn.id in aliases:
+            module, attr = aliases[fn.id]
+            if (module.split(".")[-1], attr) in _WALL_FNS:
+                hit = (module.split(".")[-1], attr)
+        if hit:
+            yield mod.finding(
+                "DET002",
+                node,
+                f"wall-clock read {hit[0]}.{hit[1]}(): use "
+                "repro.core.clock.monotonic() for timing (sim time comes "
+                "from the DES)",
+            )
+
+
+@register("DET003", "unseeded global RNG")
+def det003(mod: SourceModule) -> Iterator[Finding]:
+    aliases = _import_aliases(mod.tree)
+    np_names = {
+        local
+        for local, (module, attr) in aliases.items()
+        if module == "numpy" and attr == ""
+    } | {"numpy"}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        # random.<f>() on the module-global RNG
+        if isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name):
+            base_mod = aliases.get(fn.value.id, (None, None))[0]
+            if (
+                (base_mod == "random" or fn.value.id == "random")
+                and fn.attr not in _PY_RANDOM_OK
+            ):
+                yield mod.finding(
+                    "DET003",
+                    node,
+                    f"global RNG random.{fn.attr}(): process-global entropy "
+                    "no seed= reaches — use random.Random(seed)",
+                )
+                continue
+        # np.random.<f>()
+        if (
+            isinstance(fn, ast.Attribute)
+            and isinstance(fn.value, ast.Attribute)
+            and fn.value.attr == "random"
+            and isinstance(fn.value.value, ast.Name)
+            and fn.value.value.id in np_names
+            and fn.attr not in _NP_RANDOM_OK
+        ):
+            yield mod.finding(
+                "DET003",
+                node,
+                f"global RNG np.random.{fn.attr}(): use "
+                "np.random.default_rng(seed)",
+            )
+            continue
+        # from random import random/randint/... ; bare call
+        if isinstance(fn, ast.Name) and fn.id in aliases:
+            module, attr = aliases[fn.id]
+            if module == "random" and attr and attr not in _PY_RANDOM_OK:
+                yield mod.finding(
+                    "DET003",
+                    node,
+                    f"global RNG random.{attr}(): use random.Random(seed)",
+                )
+
+
+def _key_uses_object_hash(key: ast.AST) -> Optional[str]:
+    if isinstance(key, ast.Name) and key.id in ("id", "hash"):
+        return key.id
+    if isinstance(key, ast.Lambda):
+        for node in ast.walk(key.body):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                if node.func.id in ("id", "hash"):
+                    return node.func.id
+    return None
+
+
+@register("DET004", "id()/object-hash sort key")
+def det004(mod: SourceModule) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if name not in ("sorted", "sort", "min", "max", "nsmallest", "nlargest"):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "key":
+                continue
+            used = _key_uses_object_hash(kw.value)
+            if used:
+                yield mod.finding(
+                    "DET004",
+                    node,
+                    f"sort key uses {used}(): object identity/hash order is "
+                    "per-process, not replayable — sort on a stable field",
+                )

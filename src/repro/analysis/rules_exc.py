@@ -1,0 +1,70 @@
+"""EXC — silent exception swallows.
+
+A broad ``except Exception:`` that neither re-raises, records, nor even
+*looks at* the exception turns a real failure (a kernel backend dying, a
+cache write failing, a corrupted plan) into silence — the exact failure
+mode the fault plane exists to surface.  EXC001 flags handlers that catch
+broadly and drop the exception on the floor; a genuinely-intended broad
+catch keeps the behaviour with a ``# repro: noqa[EXC001]`` + justification
+and, ideally, a recorded reason (counter, ``last_error()`` accessor).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .engine import Finding, SourceModule, register
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _catches_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:  # bare except:
+        return True
+    types = t.elts if isinstance(t, ast.Tuple) else [t]
+    for node in types:
+        name = (
+            node.id
+            if isinstance(node, ast.Name)
+            else node.attr
+            if isinstance(node, ast.Attribute)
+            else None
+        )
+        if name in _BROAD:
+            return True
+    return False
+
+
+def _is_silent(handler: ast.ExceptHandler) -> bool:
+    """Silent = no re-raise anywhere in the body AND the bound exception
+    (if any) is never read.  Printing/logging/recording the exception, or
+    ``raise``-ing anything, counts as handling it."""
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return False
+        if (
+            handler.name
+            and isinstance(node, ast.Name)
+            and node.id == handler.name
+            and isinstance(node.ctx, ast.Load)
+        ):
+            return False
+    return True
+
+
+@register("EXC001", "broad except that silently swallows the exception")
+def exc001(mod: SourceModule) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if _catches_broad(node) and _is_silent(node):
+            caught = "bare except" if node.type is None else "except Exception"
+            yield mod.finding(
+                "EXC001",
+                node,
+                f"{caught} swallows the failure silently: narrow the type, "
+                "re-raise, or record the error (noqa + justification if the "
+                "broad catch is genuinely intended)",
+            )

@@ -1,0 +1,248 @@
+"""JAX — device-hygiene rules.
+
+The kernel plane keeps two hard promises: compile caches stay *bounded*
+(every padded kernel and the mega-step scan register their bucket shapes
+with ``repro.kernels.dispatch.bound_jit_cache``), and results stay
+*bit-identical* to the host references (float accounting in the mega-step
+engine is f64 in reference order).  These rules catch the constructions
+that silently break either promise:
+
+* JAX001 — ``jax.jit(...)`` / ``pallas_call(...)`` constructed inside a
+  function body in the hot planes.  A fresh jit object per call means a
+  fresh compile cache per call: unbounded compilation that the
+  ``bound_jit_cache`` LRU never sees.  Module-scope construction
+  (decorators, module-level assignment) is fine; modules that register
+  with ``bound_jit_cache`` own their caching and are exempt, as is
+  ``kernels/<name>/kernel.py`` (the sanctioned Pallas definition site,
+  covered by the KRN interpret-gate contract).
+* JAX002 — implicit host pulls (``.item()``, ``float(x)``,
+  ``np.asarray``/``np.array``, ``jax.device_get``,
+  ``.block_until_ready()``) inside *traced* code: jit-decorated functions,
+  functions handed to ``jax.jit``/``lax.scan``, and their nested helpers.
+  Inside a trace these either fail on tracers or silently fall back to
+  host round-trips per step.
+* JAX003 — f32 accumulation where the mega-step f64 reference-order
+  accounting contract applies (``kernels/megastep/``, ``core/megastep.py``):
+  an f32 dtype on an accumulation constructor or ``.astype`` breaks
+  bit-identity with the interpreted pipeline.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from .engine import Finding, SourceModule, register
+
+_HOT_SCOPE = ("core/", "sim/", "query/", "kernels/", "serving/")
+_F64_SCOPE = ("kernels/megastep/", "core/megastep.py")
+
+#: Accumulation constructors whose dtype fixes the reduction precision.
+_ACC_FNS = {"zeros", "ones", "full", "asarray", "array", "sum", "cumsum",
+            "dot", "einsum", "add", "matmul"}
+
+
+def _is_jit_or_pallas(fn: ast.AST) -> Optional[str]:
+    if isinstance(fn, ast.Attribute):
+        if fn.attr in ("jit", "pallas_call"):
+            return fn.attr
+        return None
+    if isinstance(fn, ast.Name) and fn.id in ("jit", "pallas_call"):
+        return fn.id
+    return None
+
+
+class _JitConstructionVisitor(ast.NodeVisitor):
+    """Collect jit/pallas constructions that happen inside a function body
+    (decorator lists are visited at the *enclosing* depth: a ``@jax.jit``
+    decorator is a one-time module/scope-level construction)."""
+
+    def __init__(self) -> None:
+        self.depth = 0
+        self.hits: List[ast.Call] = []
+
+    def _visit_fn(self, node) -> None:
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self.depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self.depth -= 1
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Call(self, node: ast.Call) -> None:
+        kind = _is_jit_or_pallas(node.func)
+        if kind and self.depth > 0:
+            self.hits.append(node)
+        self.generic_visit(node)
+
+
+@register(
+    "JAX001",
+    "jit/pallas_call constructed outside the bound_jit_cache contract",
+)
+def jax001(mod: SourceModule) -> Iterator[Finding]:
+    if not mod.in_packages(*_HOT_SCOPE):
+        return
+    if "bound_jit_cache" in mod.text:
+        return  # dispatch-contract module: owns its cache registration
+    parts = mod.pkgpath.split("/")
+    if len(parts) == 3 and parts[0] == "kernels" and parts[2] == "kernel.py":
+        return  # sanctioned Pallas definition site (KRN003 gates interpret)
+    visitor = _JitConstructionVisitor()
+    visitor.visit(mod.tree)
+    for call in visitor.hits:
+        kind = _is_jit_or_pallas(call.func)
+        yield mod.finding(
+            "JAX001",
+            call,
+            f"{kind}(...) constructed inside a function body: a fresh "
+            "compile cache per call, invisible to dispatch.bound_jit_cache — "
+            "construct at module scope or register the shape with "
+            "bound_jit_cache",
+        )
+
+
+def _traced_functions(tree: ast.AST) -> Set[ast.AST]:
+    """Function defs that run under a jax trace: jit-decorated, or passed
+    (by name) as the first argument to jit/lax.scan, plus every function
+    nested inside one of those."""
+    by_name = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, node)
+    traced: Set[ast.AST] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                # @jax.jit, @jit, @functools.partial(jax.jit, ...)
+                if _is_jit_or_pallas(target) == "jit":
+                    traced.add(node)
+                elif (
+                    isinstance(dec, ast.Call)
+                    and isinstance(target, ast.Attribute)
+                    and target.attr == "partial"
+                    and dec.args
+                    and _is_jit_or_pallas(dec.args[0]) == "jit"
+                ):
+                    traced.add(node)
+        if isinstance(node, ast.Call):
+            name = (
+                node.func.attr
+                if isinstance(node.func, ast.Attribute)
+                else node.func.id
+                if isinstance(node.func, ast.Name)
+                else None
+            )
+            if name in ("jit", "scan", "fori_loop", "while_loop", "cond"):
+                for arg in node.args:
+                    if isinstance(arg, ast.Name) and arg.id in by_name:
+                        traced.add(by_name[arg.id])
+    # Close over nesting: helpers defined inside a traced fn are traced.
+    closed: Set[ast.AST] = set()
+    for fn in traced:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                closed.add(node)
+    return closed
+
+
+_PULL_ATTRS = {"item", "block_until_ready", "device_get"}
+_NP_PULL_FNS = {"asarray", "array"}
+
+
+@register("JAX002", "implicit host pull in traced (scan-adjacent) code")
+def jax002(mod: SourceModule) -> Iterator[Finding]:
+    if not mod.in_packages(*_HOT_SCOPE):
+        return
+    traced = _traced_functions(mod.tree)
+    seen: Set[int] = set()
+    for fn in traced:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) or id(node) in seen:
+                continue
+            seen.add(id(node))
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in _PULL_ATTRS:
+                # jnp.asarray(...).item() etc.; device_get via jax.device_get
+                yield mod.finding(
+                    "JAX002",
+                    node,
+                    f".{f.attr}() inside traced code pulls to host per "
+                    "step — keep the value on device and pull after the "
+                    "scan/jit boundary",
+                )
+            elif (
+                isinstance(f, ast.Attribute)
+                and f.attr in _NP_PULL_FNS
+                and isinstance(f.value, ast.Name)
+                and f.value.id in ("np", "numpy")
+            ):
+                yield mod.finding(
+                    "JAX002",
+                    node,
+                    f"np.{f.attr}(...) inside traced code forces a host "
+                    "round-trip (or fails on tracers) — use jnp",
+                )
+            elif (
+                isinstance(f, ast.Name)
+                and f.id == "float"
+                and node.args
+                and not isinstance(node.args[0], ast.Constant)
+            ):
+                yield mod.finding(
+                    "JAX002",
+                    node,
+                    "float(x) inside traced code concretizes a tracer "
+                    "(host pull / trace error) — keep it an array",
+                )
+
+
+def _is_f32(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and node.value == "float32":
+        return True
+    if isinstance(node, ast.Attribute) and node.attr == "float32":
+        return True
+    if isinstance(node, ast.Name) and node.id == "float32":
+        return True
+    return False
+
+
+@register(
+    "JAX003",
+    "f32 accumulation where the mega-step f64 reference-order contract applies",
+)
+def jax003(mod: SourceModule) -> Iterator[Finding]:
+    if not mod.in_packages(*_F64_SCOPE):
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr == "astype":
+            if any(_is_f32(a) for a in node.args):
+                yield mod.finding(
+                    "JAX003",
+                    node,
+                    ".astype(float32) in the mega-step plane: float "
+                    "accounting is f64 in reference order (bit-identity "
+                    "contract with the interpreted pipeline)",
+                )
+            continue
+        name = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else None
+        )
+        if name not in _ACC_FNS:
+            continue
+        for kw in node.keywords:
+            if kw.arg == "dtype" and _is_f32(kw.value):
+                yield mod.finding(
+                    "JAX003",
+                    node,
+                    f"{name}(dtype=float32) in the mega-step plane: "
+                    "accumulators must be f64 (reference-order accounting "
+                    "contract)",
+                )

@@ -1,0 +1,167 @@
+"""KRN — kernel-contract checks (tree-level).
+
+Every ``kernels/<name>/`` package follows one contract, and the whole
+bit-exactness story hangs off it:
+
+* KRN001 — the package is a **kernel/ops/ref triple**: ``kernel.py`` (the
+  Pallas kernel), ``ops.py`` (the dispatch wrapper), ``ref.py`` (the pure
+  host reference the kernel is bit-checked against).
+* KRN002 — ``ref.py`` is a *reference*: it parses, defines at least one
+  function, and never imports Pallas (a ref that needs the kernel stack
+  cannot arbitrate the kernel's correctness).
+* KRN003 — ``kernel.py`` is **interpret-gated**: it exposes an
+  ``interpret`` parameter and threads it into ``pallas_call`` so the
+  kernel runs (and is tested) on CPU in interpret mode.
+* KRN004 — the kernel is referenced by at least one test module (the
+  bit-exactness gate actually exists).
+
+These are directory-shape checks, so they run once per scanned
+``kernels/`` root rather than per file; findings anchor on the offending
+file (line 1) and are suppressed via the baseline, not ``noqa``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterator, List, Optional
+
+from .engine import Finding, SourceModule, register
+
+_TRIPLE = ("kernel.py", "ops.py", "ref.py")
+
+
+def _noop(mod: SourceModule):
+    """KRN rules are tree-level; the per-module hook only exists so the ids
+    show up in the rule catalog (see :func:`check_kernel_tree`)."""
+    return ()
+
+
+register("KRN001", "kernels/<name>/ must be a kernel/ops/ref triple")(_noop)
+register("KRN002", "ref.py must be an importable pure-host reference")(_noop)
+register("KRN003", "kernel.py must be interpret-gated for CPU")(_noop)
+register("KRN004", "kernel must be referenced by at least one test")(_noop)
+
+
+def _posix(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _check_ref(path: str) -> Iterator[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        text = fh.read()
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        yield Finding(
+            "KRN002", _posix(path), int(e.lineno or 1),
+            f"ref.py does not parse: {e.msg}",
+        )
+        return
+    has_fn = any(
+        isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        for n in ast.walk(tree)
+    )
+    if not has_fn:
+        yield Finding(
+            "KRN002", _posix(path), 1,
+            "ref.py defines no function: nothing to bit-check the kernel "
+            "against",
+        )
+    for node in ast.walk(tree):
+        names: List[str] = []
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            names = [node.module] + [a.name for a in node.names]
+        if any("pallas" in n for n in names):
+            yield Finding(
+                "KRN002", _posix(path), node.lineno,
+                "ref.py imports pallas: the host reference must not depend "
+                "on the kernel stack it arbitrates",
+            )
+
+
+def _check_kernel(path: str) -> Iterator[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        text = fh.read()
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        yield Finding(
+            "KRN003", _posix(path), int(e.lineno or 1),
+            f"kernel.py does not parse: {e.msg}",
+        )
+        return
+    has_interpret_param = False
+    passes_interpret = False
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            all_args = args.args + args.kwonlyargs + args.posonlyargs
+            if any(a.arg == "interpret" for a in all_args):
+                has_interpret_param = True
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else None
+            )
+            if name == "pallas_call" and any(
+                kw.arg == "interpret" for kw in node.keywords
+            ):
+                passes_interpret = True
+    if not (has_interpret_param and passes_interpret):
+        yield Finding(
+            "KRN003", _posix(path), 1,
+            "kernel.py is not interpret-gated: expose interpret= and thread "
+            "it into pallas_call so the kernel runs on CPU",
+        )
+
+
+def _tests_reference(name: str, tests_dir: str) -> bool:
+    for dirpath, dirnames, filenames in os.walk(tests_dir):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in filenames:
+            if not (fname.startswith("test") and fname.endswith(".py")):
+                continue
+            with open(os.path.join(dirpath, fname), "r", encoding="utf-8") as fh:
+                if name in fh.read():
+                    return True
+    return False
+
+
+def check_kernel_tree(
+    kernels_root: str, *, tests_dir: Optional[str] = None
+) -> Iterator[Finding]:
+    """Run KRN001-KRN004 over one ``kernels/`` package root.
+
+    ``tests_dir`` points at the test tree for KRN004; when it is missing
+    (e.g. scanning an installed package) the reference check is skipped.
+    """
+    root = _posix(kernels_root.rstrip("/"))
+    for entry in sorted(os.listdir(kernels_root)):
+        pkg = os.path.join(kernels_root, entry)
+        if not os.path.isdir(pkg) or entry == "__pycache__":
+            continue
+        if not any(f.endswith(".py") for f in os.listdir(pkg)):
+            continue
+        missing = [f for f in _TRIPLE if not os.path.exists(os.path.join(pkg, f))]
+        if missing:
+            yield Finding(
+                "KRN001", f"{root}/{entry}", 1,
+                f"kernel package is missing {', '.join(missing)}: every "
+                "kernels/<name>/ is a kernel/ops/ref triple",
+            )
+        ref = os.path.join(pkg, "ref.py")
+        if os.path.exists(ref):
+            yield from _check_ref(ref)
+        kern = os.path.join(pkg, "kernel.py")
+        if os.path.exists(kern):
+            yield from _check_kernel(kern)
+        if tests_dir and os.path.isdir(tests_dir):
+            if not _tests_reference(entry, tests_dir):
+                yield Finding(
+                    "KRN004", f"{root}/{entry}", 1,
+                    f"kernel '{entry}' is referenced by no test module: the "
+                    "bit-exactness gate does not exist",
+                )

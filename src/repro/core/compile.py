@@ -42,6 +42,7 @@ jit-compiled :class:`~repro.serving.scheduler.ServedStage`\\ s.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -753,6 +754,7 @@ def compile_app(
     on_detection: Optional[Callable[[Event, float], None]] = None,
     va_batch_hook: Optional[Callable[[List[Event], Dict], None]] = None,
     sink_recycle_headers: bool = False,
+    verify: Optional[bool] = None,
 ) -> CompiledApp:
     """Lower ``app`` onto a pipeline over ``world``'s cameras.
 
@@ -766,6 +768,11 @@ def compile_app(
     ``compile_app`` performs no simulation itself — the returned
     :class:`CompiledApp` is driven by ``TrackingScenario`` (or any caller
     that sources frames and ticks TL).
+
+    ``verify=True`` (or ``REPRO_ANALYSIS_VERIFY=1`` in the environment)
+    runs the replay-safety graph verifier over the lowered DAG and raises
+    :class:`repro.analysis.GraphContractError` on a miswired app — the
+    compile-time half of the bit-exactness contract.
     """
     if sim is None:
         raise ValueError(
@@ -777,7 +784,7 @@ def compile_app(
         raise ValueError("world must expose .cameras (or pass cameras=...)")
     key = getattr(world, "key", None)
     fps = float(getattr(key, "fps", 0.0) or getattr(cams, "fps", 0.0) or 0.0)
-    return CompiledApp(
+    compiled = CompiledApp(
         app,
         deployment,
         sim,
@@ -787,3 +794,11 @@ def compile_app(
         va_batch_hook=va_batch_hook,
         sink_recycle_headers=sink_recycle_headers,
     )
+    if verify is None:
+        # Cheap env probe (no analysis import unless the hook is on).
+        verify = os.environ.get("REPRO_ANALYSIS_VERIFY", "") == "1"
+    if verify:
+        from ..analysis.graphcheck import check_compiled
+
+        check_compiled(compiled)
+    return compiled

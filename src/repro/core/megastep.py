@@ -555,7 +555,10 @@ def try_run_megastep(scn):
     backend, reason = megastep_backend(scn)
     if backend is None:
         scn.engine_used = "interpreted"
-        scn.engine_fallback_reason = reason
+        # Engine contract (verified by repro.analysis.graphcheck GRF005):
+        # a requested-but-skipped megastep is never silent — every fallback
+        # records why, even if a future classifier branch forgets to.
+        scn.engine_fallback_reason = reason or "unclassified"
         return None
     live = scn.registry.live_states()
     plan = build_plan(scn, backend)
@@ -615,7 +618,7 @@ def _run_device(scn, plan: MegastepPlan, seed_applied: np.ndarray):
     diverged beyond the largest bucket)."""
     try:
         from ..kernels.megastep import ops as _ops
-    except Exception:
+    except ImportError:  # jax unavailable: host reference takes over
         return None
     if plan.modes is None:
         return None

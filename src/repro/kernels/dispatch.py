@@ -471,7 +471,7 @@ def jit_cache_sizes() -> Dict[str, int]:
         from .megastep import ops as _mega_ops
 
         mega_fn = _mega_ops._CHUNK_FN
-    except Exception:
+    except ImportError:  # jax/megastep stack absent: report cache size 0
         mega_fn = None
     sizes = {}
     for name, fn in (

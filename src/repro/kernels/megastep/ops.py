@@ -45,10 +45,20 @@ _CHUNK_FN = None
 # per-chunk summary pulls + the final carry).  Benchmarks report this as
 # the separate ``xfer_s`` column so compute and transfer don't blur.
 _LAST_XFER_S = 0.0
+_LAST_DEVICE_ERROR = ""
 
 
 def last_xfer_seconds() -> float:
     return _LAST_XFER_S
+
+
+def last_device_error() -> str:
+    """repr() of the exception that made the most recent
+    :func:`run_chain_device` call hand the run to the host reference
+    ("" when the device path succeeded or was never tried).  The broad
+    catch is intentional — *any* backend failure must fall back, exactness
+    preserved — but it must stay observable, not silent."""
+    return _LAST_DEVICE_ERROR
 
 
 def _build_chunk_fn():
@@ -382,16 +392,17 @@ def _assemble(plan, seed_applied, ys, final_applied, d_vc, d_cu):
 def run_chain_device(plan, seed_applied) -> Optional[_ref.ChainOutput]:
     """Run the fused scan on device; None means "use the host reference"
     (jax unavailable, capacities exceeded, or any backend failure)."""
-    global _CHUNK_FN, _LAST_XFER_S
+    global _CHUNK_FN, _LAST_XFER_S, _LAST_DEVICE_ERROR
     if plan.modes is None:
         return None
     try:
         import jax
         import jax.numpy as jnp
         from jax.experimental import enable_x64
-    except Exception:
+    except ImportError:  # no jax: the caller falls back to the host ref
         return None
     _LAST_XFER_S = 0.0
+    _LAST_DEVICE_ERROR = ""
 
     try:
         with enable_x64():
@@ -502,5 +513,9 @@ def run_chain_device(plan, seed_applied) -> Optional[_ref.ChainOutput]:
                     grew = True
                 if not grew:
                     return None
-    except Exception:
+    except Exception as e:
+        # Intentionally broad: whatever kills the device backend (XLA,
+        # driver, shape divergence), the host reference takes over and the
+        # result stays bit-exact — but the reason is recorded, not dropped.
+        _LAST_DEVICE_ERROR = repr(e)
         return None

@@ -21,7 +21,6 @@ import argparse
 import dataclasses
 import functools
 import json
-import time
 import traceback
 from typing import Any, Dict, Optional, Tuple
 
@@ -30,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import INPUT_SHAPES, get_config
+from repro.core.clock import monotonic
 from repro.config.base import InputShape, ModelConfig
 from repro.configs import ASSIGNED_ARCHS
 from repro.distributed.partitioning import (
@@ -139,7 +139,7 @@ def run_case(
             # Heads don't divide the model axis: row-parallel attention/SSD
             # blocks instead of replicated per-chip intermediates (H1).
             rules.rules["q_seq"] = rules.rules.get("model")
-    t0 = time.time()
+    t0 = monotonic()
 
     with mesh, mesh_rules(rules):
         max_dec_len = max(shape.seq_len + 8, 4096)  # whisper learned positions
@@ -206,10 +206,10 @@ def run_case(
             lowered = jitted.lower(
                 params_struct, b_specs["token"], cache_struct, len_struct, rng_struct
             )
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = monotonic() - t0
+        t0 = monotonic()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = monotonic() - t0
 
     # ---- analyses ------------------------------------------------------ #
     mem = compiled.memory_analysis()
@@ -223,8 +223,8 @@ def run_case(
     ):
         try:
             mem_info[attr] = float(getattr(mem, attr))
-        except Exception:
-            pass
+        except (AttributeError, TypeError, ValueError):
+            pass  # older jaxlibs omit some memory-analysis fields
     peak = (
         mem_info.get("argument_size_in_bytes", 0.0)
         - mem_info.get("alias_size_in_bytes", 0.0)

@@ -68,7 +68,12 @@ class Generator:
         self.params = params
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        # Generator-lifetime jits: constructed once per Generator (a
+        # process builds O(1) of them), never per dispatch, so the compile
+        # caches are bounded without the dispatch LRU.
+        # repro: noqa[JAX001] — one-time generator-lifetime jit.
         self._prefill = jax.jit(make_prefill_step(cfg))
+        # repro: noqa[JAX001] — one-time generator-lifetime jit.
         self._step = jax.jit(make_serve_step(cfg))
 
     def generate(

@@ -59,7 +59,13 @@ WORLD_CACHE_VERSION = 1
 
 _WORLDS: "OrderedDict[WorldKey, WorldBundle]" = OrderedDict()
 _WORLDS_MAX = 8
-_STATS = {"builds": 0, "memory_hits": 0, "disk_hits": 0, "disk_writes": 0}
+_STATS = {
+    "builds": 0,
+    "memory_hits": 0,
+    "disk_hits": 0,
+    "disk_writes": 0,
+    "disk_write_errors": 0,
+}
 
 
 @dataclass(frozen=True)
@@ -227,8 +233,11 @@ def _disk_store(bundle: WorldBundle, root: str) -> None:
             os.unlink(tmp)
             raise
         _STATS["disk_writes"] += 1
+    # Cache is best-effort; never fail the build over it — but count the
+    # miss so a persistently broken cache dir is observable in _STATS.
+    # repro: noqa[EXC001] — intentional best-effort swallow, counted above.
     except Exception:
-        pass  # cache is best-effort; never fail the build over it
+        _STATS["disk_write_errors"] += 1
 
 
 # --------------------------------------------------------------------- #

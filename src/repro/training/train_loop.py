@@ -7,7 +7,6 @@ exactly this function for the ``train_4k`` shape).
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Optional, Tuple
 
@@ -15,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
+from repro.core.clock import monotonic
 from repro.models import forward
 from .optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw, make_schedule
 
@@ -94,7 +94,7 @@ def train_loop(
     opt_state = init_adamw(params)
     step_fn = jax.jit(make_train_step(cfg, tcfg))
     history = []
-    t0 = time.time()
+    t0 = monotonic()
     for i, batch in enumerate(batches):
         if steps is not None and i >= steps:
             break
@@ -104,6 +104,6 @@ def train_loop(
             history.append({"step": i, **m})
             log_fn(
                 f"step {i:5d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
-                f"lr={m['lr']:.2e} ({time.time()-t0:.1f}s)"
+                f"lr={m['lr']:.2e} ({monotonic()-t0:.1f}s)"
             )
     return params, opt_state, history

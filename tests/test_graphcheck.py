@@ -1,0 +1,155 @@
+"""Compile-time dataflow-graph verifier gate (GRF rules).
+
+A deliberately miswired app must be *rejected at compile time with a
+readable diagnostic*; a well-formed app must verify clean, pre- and
+post-run, on both the interpreted and mega-step paths.
+"""
+
+import copy
+
+import pytest
+
+from repro.analysis import GraphContractError, verify_compiled, verify_megastep
+from repro.analysis.graphcheck import check_compiled
+from repro.core.compile import DeploymentSpec, compile_app
+from repro.core.dataflow import ModuleSpec, TrackingApp, fc_is_active
+from repro.query import MultiQueryScenario, QuerySpec
+from repro.sim import ScenarioConfig, TrackingScenario
+
+
+def _scenario(**kw):
+    base = dict(num_cameras=60, duration_s=5.0, seed=0, tl="bfs")
+    base.update(kw)
+    return TrackingScenario(ScenarioConfig(**base))
+
+
+def test_well_formed_app_verifies_clean():
+    assert verify_compiled(_scenario().compiled) == []
+
+
+def test_grf001_dangling_stage_rejected():
+    compiled = _scenario().compiled
+    compiled.va_tasks[0].downstream.clear()
+    findings = verify_compiled(compiled)
+    assert any(f.rule == "GRF001" for f in findings)
+    msg = next(f.message for f in findings if f.rule == "GRF001")
+    assert "VA-0" in msg and "downstream" in msg
+
+
+def test_grf001_route_to_missing_task_rejected():
+    compiled = _scenario().compiled
+    compiled._cr_route[next(iter(compiled._cr_route))] = "CR-404"
+    findings = verify_compiled(compiled)
+    assert any(f.rule == "GRF001" and "CR-404" in f.message for f in findings)
+
+
+def test_grf002_undeclared_feedback_cycle_named_in_diagnostic():
+    compiled = _scenario().compiled
+    # Close an event-edge loop CR -> VA (the only sanctioned loop closure is
+    # the QF state push, which never appears as a downstream edge).
+    compiled.cr_tasks[0].downstream[compiled.va_tasks[0].name] = compiled.va_tasks[0]
+    findings = verify_compiled(compiled)
+    cyc = [f for f in findings if f.rule == "GRF002"]
+    assert cyc, findings
+    assert "->" in cyc[0].message and "QF" in cyc[0].message
+
+
+def test_grf003_fused_task_under_dynamic_xi_rejected():
+    scn = _scenario()
+    assert verify_compiled(scn.compiled) == []
+    # Force the inconsistent state GRF003 exists for: a compute perturbation
+    # landing after the pipeline was built (bypasses the setter's guard),
+    # leaving fused tasks under a dynamic xi.
+    scn.sim._xi_multiplier = lambda host, t: 1.0
+    findings = verify_compiled(scn.compiled)
+    assert any(f.rule == "GRF003" and "xi" in f.message for f in findings)
+
+
+def test_grf004_unknown_module_spec_rejected_via_compile_hook():
+    scn = _scenario()  # donor world/sim with valid geometry
+    app = scn.cfg.to_app()
+    app.specs["XX"] = ModuleSpec()
+    with pytest.raises(GraphContractError) as ei:
+        compile_app(app, scn.world, scn.cfg.deployment(), scn.sim, verify=True)
+    text = str(ei.value)
+    assert "GRF004" in text and "'XX'" in text
+    # The diagnostic is one readable block: header with a count + bullets.
+    assert text.splitlines()[0].startswith("compiled app violates")
+
+
+def test_grf004_non_callable_logic_rejected():
+    scn = _scenario()
+    app = scn.cfg.to_app()
+    app.va = None
+    findings = verify_compiled(
+        compile_app(app, scn.world, scn.cfg.deployment(), scn.sim)
+    )
+    assert any(f.rule == "GRF004" and "app.va" in f.message for f in findings)
+
+
+def test_env_hook_verifies_every_compile(monkeypatch):
+    monkeypatch.setenv("REPRO_ANALYSIS_VERIFY", "1")
+    scn = _scenario()  # well-formed: compiles under the hook
+    assert verify_compiled(scn.compiled) == []
+    app = scn.cfg.to_app()
+    app.specs["XX"] = ModuleSpec()
+    with pytest.raises(GraphContractError):
+        compile_app(app, scn.world, scn.cfg.deployment(), scn.sim)
+
+
+def test_check_compiled_passes_silently_on_good_graph():
+    check_compiled(_scenario().compiled)  # must not raise
+
+
+# --------------------------------------------------------------------- #
+# GRF005 — mega-step totality                                            #
+# --------------------------------------------------------------------- #
+MQ_BASE = dict(num_cameras=60, duration_s=10.0, seed=0, tl="bfs",
+               batching="dynamic", m_max=25)
+
+
+def _mq(engine="megastep", **kw):
+    cfg = ScenarioConfig(**{**MQ_BASE, **kw})
+    cfg.engine = engine
+    return MultiQueryScenario(cfg, [QuerySpec(tl="bfs")])
+
+
+def test_grf005_eligible_megastep_config_verifies_clean():
+    scn = _mq()
+    assert verify_megastep(scn) == []
+    scn.run()
+    assert verify_megastep(scn, post_run=True) == []
+    assert scn.engine_used.startswith("megastep")
+
+
+def test_grf005_fallback_with_reason_verifies_clean():
+    scn = _mq(embed_dim=8)  # ineligible: embed plane keeps the interpreter
+    assert verify_megastep(scn) == []
+    scn.run()
+    assert verify_megastep(scn, post_run=True) == []
+    assert scn.engine_used == "interpreted"
+    assert scn.engine_fallback_reason == "embed_dim"
+
+
+def test_grf005_rejects_unobservable_no_backend_no_reason(monkeypatch):
+    scn = _mq()
+    import repro.core.megastep as ms
+
+    monkeypatch.setattr(ms, "megastep_backend", lambda s: (None, ""))
+    findings = verify_megastep(scn)
+    assert [f.rule for f in findings] == ["GRF005"]
+    assert "engine_fallback_reason" in findings[0].message
+
+
+def test_grf005_interpreted_engine_is_out_of_scope():
+    scn = _mq(engine="interpreted")
+    assert verify_megastep(scn) == []
+
+
+def test_grf005_post_run_rejects_silent_interpreted_fallback():
+    scn = _mq()
+    scn.run()
+    scn.engine_used = "interpreted"
+    scn.engine_fallback_reason = ""
+    findings = verify_megastep(scn, post_run=True)
+    assert any("no engine_fallback_reason" in f.message for f in findings)
