@@ -781,6 +781,121 @@ COMPARABLE_FAMILIES["megastep"] = _retime_megastep
 
 
 # --------------------------------------------------------------------- #
+# Sharded mega-step — the fused scan over a camera mesh (shard scaling)   #
+# --------------------------------------------------------------------- #
+def _sharded_shape(smoke: bool) -> Tuple[int, float, Tuple[int, ...]]:
+    """(num_cameras, duration_s, N sweep) for the shard-scaling sweep.
+    Smaller full shape than the unsharded family: the sweep multiplies by
+    the shard counts, and emulated host devices share one CPU."""
+    if smoke:
+        return 300, 60.0, (1, 4)
+    return 1000, 300.0, (1, 16, 64)
+
+
+def _shard_counts() -> Tuple[int, ...]:
+    """Mesh widths to sweep: the divisors of the visible device count in
+    {1, 2, 4, 8}.  Under CI this runs with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; with a single
+    visible device only the single-shard baseline records."""
+    try:
+        import jax
+
+        ndev = len(jax.devices())
+    except ImportError:
+        return (1,)
+    return tuple(d for d in (1, 2, 4, 8) if d <= ndev)
+
+
+def _time_sharded(cfg, specs_of, reps: int, shards: int):
+    """Best-of-``reps`` sharded run (first rep eats the per-mesh compile);
+    returns (wall, xfer, scn, result)."""
+    import copy
+
+    from repro.query import MultiQueryScenario
+
+    mesh = None
+    if shards > 1:
+        import jax
+
+        from repro.distributed import camera_mesh
+
+        mesh = camera_mesh(jax.devices()[:shards])
+    best = (math.inf, 0.0, None, None)
+    m_cfg = copy.deepcopy(cfg)
+    m_cfg.engine = "megastep"
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        scn = MultiQueryScenario(m_cfg, specs_of(), mesh=mesh)
+        res = scn.run()
+        wall = time.perf_counter() - t0
+        if wall < best[0]:
+            best = (wall, scn.engine_xfer_s, scn, res)
+    return best
+
+
+def bench_sharded(ctx) -> None:
+    from repro.sim import WorldKey, get_world
+
+    print(f"{SEP}\n# Sharded mega-step — per-event wall vs camera-mesh width")
+    cams, dur, ns = _sharded_shape(ctx.smoke)
+    shard_counts = _shard_counts()
+    cfg = _queries_cfg(cams, dur)
+    get_world(WorldKey.from_config(cfg))
+    for n in ns:
+        specs_of = lambda: _megastep_specs(n, cams)
+        base_res = None
+        for d in shard_counts:
+            wall, xfer, scn, res = _time_sharded(cfg, specs_of, 2, d)
+            if d == shard_counts[0]:
+                base_res = res
+            # Sharding is only allowed to change the wall clock: per-query
+            # and global books must match the single-shard run exactly.
+            bit_identical = (
+                res.result.summary() == base_res.result.summary()
+                and all(
+                    res.per_query_summary(q) == base_res.per_query_summary(q)
+                    for q in res.per_query
+                )
+            )
+            events = max(res.result.source_events, 1)
+            us = wall * 1e6 / events
+            derived = (
+                f"n_queries={n};shards={scn.shards_used};"
+                f"engine={scn.engine_used};bit_identical={bit_identical};"
+                f"collective_bytes_per_tick={scn.collective_bytes_per_tick:.0f};"
+                f"shard_fallback={scn.shard_fallback_reason or 'none'};"
+                f"events={events}"
+            )
+            record("sharded", f"N{n}_D{d}", us, derived,
+                   run_s=round(wall - xfer, 4), xfer_s=xfer,
+                   mode=_mode_label(ctx))
+            print(f"sharded_N{n}_D{d},{us:.1f},{derived}")
+
+
+def _retime_sharded(ctx, cases) -> Dict[str, Tuple[float, float, float]]:
+    cams, dur, ns = _sharded_shape(ctx.smoke)
+    cfg = _queries_cfg(cams, dur)
+    from repro.sim import WorldKey, get_world
+
+    get_world(WorldKey.from_config(cfg))
+    out: Dict[str, Tuple[float, float, float]] = {}
+    for n in ns:
+        for d in _shard_counts():
+            name = f"N{n}_D{d}"
+            if name not in cases:
+                continue
+            wall, _xfer, _scn, res = _time_sharded(
+                cfg, lambda: _megastep_specs(n, cams), 2, d
+            )
+            events = max(res.result.source_events, 1)
+            out[name] = (wall * 1e6 / events, wall, 0.0)
+    return out
+
+
+COMPARABLE_FAMILIES["sharded"] = _retime_sharded
+
+
+# --------------------------------------------------------------------- #
 # Fault tolerance — mid-run host crash under DB vs SB: journaled          #
 # kill/restore/replay cycle (recovery time, bit-identity) + post-heal     #
 # budget recovery.                                                        #
@@ -1001,6 +1116,7 @@ BENCHES = {
     "dynamism": bench_dynamism,
     "queries": bench_queries,
     "megastep": bench_megastep,
+    "sharded": bench_sharded,
     "faults": bench_faults,
     "fig567": bench_batching_fig567,
     "fig10": bench_tracking_fig10,

@@ -25,6 +25,12 @@ that silently break either promise:
   accounting contract applies (``kernels/megastep/``, ``core/megastep.py``):
   an f32 dtype on an accumulation constructor or ``.astype`` breaks
   bit-identity with the interpreted pipeline.
+* JAX004 — un-shimmed ``shard_map``: jax renamed both the entry point
+  (``jax.experimental.shard_map`` -> ``jax.shard_map``) and the
+  replication-checker kwarg (``check_rep`` -> ``check_vma``); every use
+  must route through ``repro.distributed.compat.shard_map``, which probes
+  once at import time.  Direct imports re-inline the version shim per call
+  site — the bug this rule exists to keep fixed.
 """
 
 from __future__ import annotations
@@ -246,3 +252,39 @@ def jax003(mod: SourceModule) -> Iterator[Finding]:
                     "accumulators must be f64 (reference-order accounting "
                     "contract)",
                 )
+
+
+_SHIM = "distributed/compat.py"
+
+
+@register(
+    "JAX004",
+    "shard_map imported/used outside the distributed.compat version shim",
+)
+def jax004(mod: SourceModule) -> Iterator[Finding]:
+    if mod.pkgpath == _SHIM:
+        return  # the shim itself: the one sanctioned probe site
+    msg = (
+        "direct shard_map use re-inlines the jax version shim "
+        "(jax.shard_map/check_vma vs jax.experimental.shard_map/check_rep) "
+        "— import it from repro.distributed.compat instead"
+    )
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom):
+            module = node.module or ""
+            if module.startswith("jax") and (
+                "shard_map" in module
+                or any(a.name == "shard_map" for a in node.names)
+            ):
+                yield mod.finding("JAX004", node, msg)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if "shard_map" in a.name:
+                    yield mod.finding("JAX004", node, msg)
+        elif (
+            isinstance(node, ast.Attribute)
+            and node.attr == "shard_map"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "jax"
+        ):
+            yield mod.finding("JAX004", node, msg)

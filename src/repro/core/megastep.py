@@ -615,13 +615,35 @@ def _sync_control_mirrors(scn, live) -> None:
 
 def _run_device(scn, plan: MegastepPlan, seed_applied: np.ndarray):
     """Device scan backend; returns a ChainOutput or None (unavailable /
-    diverged beyond the largest bucket)."""
+    diverged beyond the largest bucket).
+
+    With a mesh handle (``MultiQueryScenario(..., mesh=...)`` /
+    ``distributed.camera_mesh()``) the scan runs camera-sharded via
+    ``kernels.megastep.sharded``; any sharded-path refusal (single visible
+    device, no ``cameras`` axis, non-dividing bucket) is recorded in
+    ``scn.shard_fallback_reason`` — the GRF005 totality contract extended
+    to sharding — and the run continues bit-identically on the unsharded
+    single-shard path."""
     try:
         from ..kernels.megastep import ops as _ops
     except ImportError:  # jax unavailable: host reference takes over
         return None
     if plan.modes is None:
         return None
+    rules = getattr(scn, "mesh_rules", None)
+    if rules is not None:
+        from ..kernels.megastep import sharded as _sharded
+
+        out = _sharded.run_chain_sharded(plan, seed_applied, rules)
+        if out is not None:
+            scn.engine_xfer_s = _sharded.last_xfer_seconds()
+            scn.shards_used = _sharded.last_shards()
+            scn.collective_bytes_per_tick = (
+                _sharded.last_collective_bytes_per_tick()
+            )
+            scn.shard_fallback_reason = ""
+            return out
+        scn.shard_fallback_reason = _sharded.last_error() or "unclassified"
     out = _ops.run_chain_device(plan, seed_applied)
     if out is not None:
         scn.engine_xfer_s = _ops.last_xfer_seconds()

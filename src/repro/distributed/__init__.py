@@ -1,5 +1,6 @@
 """Distribution: partitioning rules + hand-scheduled context parallelism."""
 
+from .compat import SHARD_MAP_IMPL, shard_map
 from .context_parallel import (
     combine_partials,
     context_parallel_decode_attention,
@@ -8,6 +9,7 @@ from .context_parallel import (
 from .partitioning import (
     MeshRules,
     cache_specs,
+    camera_mesh,
     constrain,
     current_rules,
     default_rules,
@@ -16,7 +18,8 @@ from .partitioning import (
 )
 
 __all__ = [
-    "MeshRules", "cache_specs", "combine_partials", "constrain",
-    "context_parallel_decode_attention", "current_rules",
-    "decode_attention_partial", "default_rules", "mesh_rules", "param_specs",
+    "MeshRules", "SHARD_MAP_IMPL", "cache_specs", "camera_mesh",
+    "combine_partials", "constrain", "context_parallel_decode_attention",
+    "current_rules", "decode_attention_partial", "default_rules",
+    "mesh_rules", "param_specs", "shard_map",
 ]

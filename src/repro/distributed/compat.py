@@ -1,0 +1,52 @@
+"""Version shim for ``shard_map`` — resolved once, at import time.
+
+jax >= 0.5 exposes ``jax.shard_map`` whose replication checker is toggled
+with ``check_vma``; older releases only ship the experimental entry point
+``jax.experimental.shard_map.shard_map`` with the equivalent ``check_rep``
+knob.  Callers that combine shards with an ``all_gather`` + deterministic
+reduction produce outputs the varying-axes checker cannot prove replicated,
+so they need the toggle — under whichever name this jax spells it.
+
+Every ``shard_map`` in this repo routes through :func:`shard_map` below
+(analyzer rule JAX004 enforces it): the version probe runs exactly once at
+module import instead of per call, and the ``check_rep``/``check_vma``
+rename is spelled in one place.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map", "SHARD_MAP_IMPL"]
+
+
+def _resolve() -> tuple[Callable[..., Any], str, str]:
+    if hasattr(jax, "shard_map"):  # repro: noqa[JAX004] — this IS the shim
+        return jax.shard_map, "check_vma", "jax.shard_map"
+    from jax.experimental.shard_map import shard_map as _sm  # repro: noqa[JAX004]
+
+    return _sm, "check_rep", "jax.experimental.shard_map"
+
+
+_IMPL, _CHECK_KW, SHARD_MAP_IMPL = _resolve()
+
+
+def shard_map(
+    fn: Callable[..., Any],
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check: bool = True,
+) -> Callable[..., Any]:
+    """``shard_map(fn)`` under either jax spelling.
+
+    ``check=False`` disables the replication/varying-axes checker
+    (``check_rep`` on old jax, ``check_vma`` on new) — use it when every
+    shard provably computes the identical output via a deterministic
+    combine, which the checker cannot infer.
+    """
+    kw = {_CHECK_KW: check}
+    return _IMPL(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
+
 __all__ = ["decode_attention_partial", "combine_partials", "context_parallel_decode_attention"]
 
 
@@ -112,19 +114,13 @@ def context_parallel_decode_attention(
         ls = jax.lax.all_gather(l, axis)
         return combine_partials(outs, ms, ls)
 
-    specs = dict(
+    # The all_gather + deterministic combine makes every shard's output
+    # identical; the varying-axes checker cannot infer that (check=False).
+    fn = shard_map(
+        shard_fn,
         mesh=mesh,
         in_specs=(P(), P(None, None, axis, None), P(None, None, axis, None), P()),
         out_specs=P(),
+        check=False,
     )
-    # The all_gather + deterministic combine makes every shard's output
-    # identical; the varying-axes checker cannot infer that.  jax >= 0.5
-    # exposes jax.shard_map with `check_vma`; older releases only have the
-    # experimental entry point with `check_rep`.
-    if hasattr(jax, "shard_map"):
-        fn = jax.shard_map(shard_fn, check_vma=False, **specs)
-    else:
-        from jax.experimental.shard_map import shard_map as _shard_map
-
-        fn = _shard_map(shard_fn, check_rep=False, **specs)
     return fn(q, k_cache, v_cache, length).astype(q.dtype)

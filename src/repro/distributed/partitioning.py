@@ -25,8 +25,9 @@ from __future__ import annotations
 import contextlib
 import re
 import threading
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import numpy as np
@@ -41,6 +42,7 @@ __all__ = [
     "param_specs",
     "cache_specs",
     "batch_spec",
+    "camera_mesh",
 ]
 
 AxisName = Union[str, Tuple[str, ...], None]
@@ -48,10 +50,23 @@ AxisName = Union[str, Tuple[str, ...], None]
 
 @dataclass
 class MeshRules:
-    """Mapping logical axis name -> mesh axis (or tuple, or None)."""
+    """Mapping logical axis name -> mesh axis (or tuple, or None).
+
+    Non-divisible dims are still left unsharded (failing at lowering time
+    helps nobody), but never *silently*: every drop bumps
+    ``sharding_drops`` and the first drop per ``(path, axis)`` raises a
+    ``UserWarning`` naming the param path, the axis, and the sizes — a
+    60-expert stack quietly replicating over a 16-wide axis is a capacity
+    bug, not a layout choice.
+    """
 
     mesh: Mesh
     rules: Dict[str, AxisName] = field(default_factory=dict)
+    sharding_drops: int = 0
+    dropped: List[Tuple[str, str, int]] = field(
+        default_factory=list, repr=False, compare=False)
+    _warned: Set[Tuple[str, str]] = field(
+        default_factory=set, repr=False, compare=False)
 
     def axis_size(self, axis: AxisName) -> int:
         if axis is None:
@@ -63,12 +78,34 @@ class MeshRules:
             size *= self.mesh.shape[a]
         return size
 
-    def resolve(self, logical: Sequence[AxisName], shape: Sequence[int]) -> P:
-        """Logical names -> PartitionSpec, dropping non-divisible axes."""
+    def _note_drop(self, path: str, axis: AxisName, dim: int) -> None:
+        ax = axis if isinstance(axis, str) else "x".join(axis)
+        self.sharding_drops += 1
+        self.dropped.append((path or "<anonymous>", ax, dim))
+        key = (path or "<anonymous>", ax)
+        if key in self._warned:
+            return
+        self._warned.add(key)
+        warnings.warn(
+            f"sharding dropped: {path or '<anonymous>'} dim {dim} does not "
+            f"divide mesh axis {ax!r} (size {self.axis_size(axis)}); "
+            f"leaving it unsharded (replicated)",
+            UserWarning,
+            stacklevel=3,
+        )
+
+    def resolve(self, logical: Sequence[AxisName], shape: Sequence[int],
+                *, path: str = "") -> P:
+        """Logical names -> PartitionSpec, dropping non-divisible axes.
+
+        Drops are counted in ``sharding_drops`` and warned once per
+        ``(path, axis)`` — see the class docstring.
+        """
         parts: List[AxisName] = []
         for name, dim in zip(logical, shape):
             axis = self.rules.get(name) if isinstance(name, str) else name
             if axis is not None and dim % self.axis_size(axis) != 0:
+                self._note_drop(path, axis, dim)
                 axis = None
             parts.append(axis)
         return P(*parts)
@@ -186,7 +223,7 @@ def param_specs(params: Any, rules: MeshRules) -> Any:
     def leaf_spec(path, leaf):
         p = _path_str(path)
         logical = _spec_for_leaf(p, np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim, rules)
-        return rules.resolve(logical, leaf.shape)
+        return rules.resolve(logical, leaf.shape, path=p)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, params)
 
@@ -227,10 +264,28 @@ def cache_specs(caches: Any, rules: MeshRules, *, context_parallel: bool = False
         # shard the last dim (§Perf H2) so the cache lives sharded.
         if ndim == 4 and (p.endswith("c_kv") or p.endswith("k_rope")):
             logical[3] = "kv_latent"
-        return rules.resolve(logical, shape)
+        return rules.resolve(logical, shape, path=p)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, caches)
 
 
 def batch_spec(rules: MeshRules) -> P:
     return rules.resolve(("batch", None), (0, 0))  # placeholder; callers build their own
+
+
+def camera_mesh(devices: Optional[Sequence[Any]] = None,
+                *, axis: str = "cameras") -> MeshRules:
+    """1-D mesh over ``devices`` for the sharded tracking planes.
+
+    The sharded mega-step (``repro.kernels.megastep.sharded``) partitions
+    camera-blocks — frame tables, activity masks, road-network planes —
+    over a single ``cameras`` axis; the query registry and tag bits stay
+    replicated.  ``MultiQueryScenario(cfg, specs, mesh=camera_mesh())``
+    is the entry point (README §Sharded mesh).
+    """
+    if devices is None:
+        devices = jax.devices()
+    return MeshRules(
+        mesh=Mesh(np.array(devices), (axis,)),
+        rules={axis: axis, "cameras": axis},
+    )

@@ -308,10 +308,15 @@ def _initial_capacities(plan, seed_applied) -> Tuple[int, int, int]:
     return S, R, s_max
 
 
-def _assemble(plan, seed_applied, ys, final_applied, d_vc, d_cu):
+def _assemble(plan, seed_applied, ys, final_applied, d_vc, d_cu,
+              counters=None):
     """Rebuild the ChainOutput (rows in final sink order, per-query books)
     from the device scan's per-tick summaries — every float reconstructed
-    here is a single IEEE add of the same operands the reference uses."""
+    here is a single IEEE add of the same operands the reference uses.
+
+    ``counters=(sourced, query_positives)`` skips the host-side per-query
+    recount: the sharded engine all-reduces these on device (one psum per
+    chunk) and hands the exact integer books over directly."""
     (bits, tlc, tlu, grank, cam_at, real,
      va_end, q_va, va_fu, cr_end, q_cr, cr_fu, a_uv, pos) = ys
     T = len(plan.ftimes)
@@ -356,12 +361,16 @@ def _assemble(plan, seed_applied, ys, final_applied, d_vc, d_cu):
     union_rows = bits[:, :C] != 0
     g_source = int(union_rows.sum())
     g_pos = int((union_rows & plan.vis).sum())
-    sourced = np.zeros(N, dtype=np.int64)
-    qpos = np.zeros(N, dtype=np.int64)
-    for q in range(N):
-        m = ((bits[:, :C] >> np.uint64(q)) & np.uint64(1)).astype(bool)
-        sourced[q] = m.sum()
-        qpos[q] = (m & plan.vis).sum()
+    if counters is not None:
+        sourced = np.asarray(counters[0], dtype=np.int64)
+        qpos = np.asarray(counters[1], dtype=np.int64)
+    else:
+        sourced = np.zeros(N, dtype=np.int64)
+        qpos = np.zeros(N, dtype=np.int64)
+        for q in range(N):
+            m = ((bits[:, :C] >> np.uint64(q)) & np.uint64(1)).astype(bool)
+            sourced[q] = m.sum()
+            qpos[q] = (m & plan.vis).sum()
 
     tl_counts = [
         (k, tlc[k, :N].astype(np.int64), int(tlu[k])) for k in range(1, T)

@@ -161,10 +161,19 @@ class MultiQueryScenario(TrackingScenario):
         app: Any = None,
         deployment: Any = None,
         journal: Optional["Journal"] = None,
+        mesh: Any = None,
     ) -> None:
         if spotlight_mode not in ("per-query", "kernel"):
             raise ValueError(f"unknown spotlight_mode {spotlight_mode!r}")
         self._spotlight_mode = spotlight_mode
+        #: Optional ``distributed.MeshRules`` handle (see
+        #: ``distributed.camera_mesh``): with ``engine="megastep"`` the
+        #: device backend shards the camera-block world over the mesh's
+        #: ``cameras`` axis (``kernels.megastep.sharded``), bit-identically
+        #: to the single-shard scan.  The registry itself stays replicated —
+        #: every shard sees all query tag bits/tables — and the per-query
+        #: budget counters come back all-reduced on the chunk cadence.
+        self.mesh_rules = mesh
         #: Optional append-only journal + snapshot ring
         #: (:class:`repro.serving.journal.Journal`): the accounting hooks
         #: record the observable event stream, and a periodic tick appends
@@ -731,6 +740,14 @@ class MultiQueryScenario(TrackingScenario):
         self.engine_used = "interpreted"
         self.engine_fallback_reason = "engine=interpreted"
         self.engine_xfer_s = 0.0  # device->host pull wall (device backend)
+        self.shards_used = 1  # mesh shards the scan actually ran on
+        # Sharding totality (GRF005 extended): "" means the sharded scan
+        # ran; anything else says why it didn't — never silent.  The
+        # sharded path overwrites this once it decides.
+        self.shard_fallback_reason = (
+            "mesh-unused" if self.mesh_rules is not None else "no-mesh"
+        )
+        self.collective_bytes_per_tick = 0.0
         if getattr(self.cfg, "engine", "interpreted") == "megastep":
             from repro.core.megastep import try_run_megastep
 

@@ -1,0 +1,19 @@
+"""Force 8 emulated host devices before jax initializes.
+
+``--xla_force_host_platform_device_count`` is read once, when the jax CPU
+backend comes up, so it must be in the environment before any test module
+imports jax — conftest import time is the only hook that early in a single
+pytest process.  With 8 CPU devices visible, the sharded mega-step tests
+build real 2/4/8-way meshes and exercise actual multi-device lowering +
+collectives in-process; everything unsharded still runs on device 0 and is
+unaffected.  Subprocess-based tests that need a *different* device count
+(e.g. the cross-device-count digest invariance test) override XLA_FLAGS
+themselves before importing jax.
+"""
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = (_flags + f" {_FLAG}=8").strip()

@@ -262,6 +262,48 @@ def test_jax003_quiet_on_f64():
 
 
 # --------------------------------------------------------------------- #
+# JAX004 — un-shimmed shard_map imports                                  #
+# --------------------------------------------------------------------- #
+JAX004_EXPERIMENTAL = """\
+from jax.experimental.shard_map import shard_map
+
+def wrap(fn, mesh, specs):
+    return shard_map(fn, mesh=mesh, check_rep=False, **specs)
+"""
+
+JAX004_NEW_API = """\
+import jax
+
+def wrap(fn, mesh, specs):
+    return jax.shard_map(fn, mesh=mesh, check_vma=False, **specs)
+"""
+
+JAX004_SHIMMED = """\
+from repro.distributed.compat import shard_map
+
+def wrap(fn, mesh, specs):
+    return shard_map(fn, mesh=mesh, check=False, **specs)
+"""
+
+
+def test_jax004_fires_on_unshimmed_shard_map():
+    assert "JAX004" in rules_of(
+        JAX004_EXPERIMENTAL, path="distributed/context_parallel.py"
+    )
+    assert "JAX004" in rules_of(
+        JAX004_NEW_API, path="kernels/megastep/sharded.py"
+    )
+
+
+def test_jax004_quiet_on_the_shim_and_its_users():
+    assert rules_of(JAX004_SHIMMED, path="kernels/megastep/sharded.py") == []
+    # The shim itself is the one sanctioned probe site.
+    assert "JAX004" not in rules_of(
+        JAX004_NEW_API, path="distributed/compat.py"
+    )
+
+
+# --------------------------------------------------------------------- #
 # EXC001 — silent broad excepts                                          #
 # --------------------------------------------------------------------- #
 EXC001_POS = """\

@@ -13,9 +13,18 @@ coverage.
 """
 
 import copy
+import os
 
 import numpy as np
 import pytest
+
+# Full-duration golden replays are the strict gate but dominate the tier-1
+# wall (see PERF.md §PR-9); they run under REPRO_RUN_SLOW=1 while a
+# shortened-horizon equivalent of each stays in tier-1.
+slow = pytest.mark.skipif(
+    os.environ.get("REPRO_RUN_SLOW", "") != "1",
+    reason="full-duration golden replay; set REPRO_RUN_SLOW=1",
+)
 
 from repro.query import MultiQueryScenario, QuerySpec
 from repro.sim import ScenarioConfig
@@ -130,6 +139,15 @@ def test_host_probabilistic_tl():
 
 
 def test_host_kernel_spotlight_mode():
+    """Shortened-horizon tier-1 version of the full-duration golden below."""
+    cfg = ScenarioConfig(**{**BASE, "tl": "wbfs", "duration_s": 25.0})
+    specs = [QuerySpec(tl="wbfs"), QuerySpec(tl="wbfs", tl_peak_speed=3.0)]
+    check_bit_identical(cfg, specs, "megastep-host", spotlight_mode="kernel")
+
+
+@pytest.mark.slow
+@slow
+def test_host_kernel_spotlight_mode_full_duration():
     cfg = ScenarioConfig(**{**BASE, "tl": "wbfs"})
     specs = [QuerySpec(tl="wbfs"), QuerySpec(tl="wbfs", tl_peak_speed=3.0)]
     check_bit_identical(cfg, specs, "megastep-host", spotlight_mode="kernel")

@@ -1,0 +1,253 @@
+"""Sharded mega-step gate: bit-exactness across mesh widths.
+
+The sharded engine (`repro.kernels.megastep.sharded`) is only allowed to
+exist because its result is **bit-identical** to the single-shard scan and
+therefore to the interpreted pipeline — every test here compares the full
+observable state (global + per-query summaries, raw latency lists, active
+timelines, requested/applied mirrors) across 1/2/4/8-way camera meshes on
+the 8 emulated host devices the suite-wide conftest forces, and asserts
+the engine + shard count actually used so a silent single-shard fallback
+can't masquerade as mesh coverage.
+
+Cross-device-count invariance (seed-0 per-query summaries and journal
+digests identical under 1, 2 and 8 *visible* host devices) runs in
+subprocesses, because the forced device count is fixed at jax backend
+init.
+"""
+
+import copy
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.query import MultiQueryScenario, QuerySpec
+from repro.sim import ScenarioConfig
+
+from test_megastep import BASE, MIXED_SPECS, _deep
+
+jax = pytest.importorskip("jax")
+
+SHARDED = dict(BASE, duration_s=60.0)
+
+
+def _mesh(n):
+    from repro.distributed import camera_mesh
+
+    return camera_mesh(jax.devices()[:n])
+
+
+def _run(cfg, specs, engine, **mq_kw):
+    c = copy.deepcopy(cfg)
+    c.engine = engine
+    scn = MultiQueryScenario(c, copy.deepcopy(specs), **mq_kw)
+    res = scn.run()
+    return _deep(res), scn
+
+
+@pytest.mark.parametrize("shards", [2, 4, 8])
+def test_sharded_bit_identical_to_interpreted_and_single_shard(shards):
+    if len(jax.devices()) < shards:
+        pytest.skip(f"needs {shards} devices")
+    cfg = ScenarioConfig(**SHARDED)
+    ref, ref_scn = _run(cfg, MIXED_SPECS, "interpreted")
+    assert ref_scn.engine_used == "interpreted"
+    solo, solo_scn = _run(cfg, MIXED_SPECS, "megastep")
+    assert solo_scn.engine_used == "megastep-device"
+    got, scn = _run(cfg, MIXED_SPECS, "megastep", mesh=_mesh(shards))
+    assert scn.engine_used == "megastep-device"
+    assert scn.shard_fallback_reason == ""
+    assert scn.shards_used == shards
+    assert scn.collective_bytes_per_tick > 0
+    assert got == ref
+    assert got == solo
+
+
+def test_single_device_mesh_falls_back_bit_exactly():
+    """One visible device: the unsharded scan IS the single-shard path —
+    the mesh handle must not change the result, and the fallback must be
+    recorded, not silent."""
+    cfg = ScenarioConfig(**SHARDED)
+    solo, _ = _run(cfg, MIXED_SPECS, "megastep")
+    got, scn = _run(cfg, MIXED_SPECS, "megastep", mesh=_mesh(1))
+    assert scn.engine_used == "megastep-device"
+    assert scn.shards_used == 1
+    assert scn.shard_fallback_reason == "single-device"
+    assert got == solo
+
+
+def test_mesh_without_cameras_axis_is_recorded():
+    from repro.distributed import MeshRules
+    from jax.sharding import Mesh
+    import numpy as np
+
+    rules = MeshRules(
+        mesh=Mesh(np.array(jax.devices()[:2]), ("model",)), rules={}
+    )
+    cfg = ScenarioConfig(**SHARDED)
+    solo, _ = _run(cfg, MIXED_SPECS, "megastep")
+    got, scn = _run(cfg, MIXED_SPECS, "megastep", mesh=rules)
+    assert scn.shard_fallback_reason == "no-cameras-axis"
+    assert got == solo
+
+
+def test_drops_on_keeps_des_backend_with_mesh():
+    """Drops on -> the event DAG backend; the mesh handle must neither
+    break eligibility nor perturb the result (acceptance: drops off AND
+    on)."""
+    cfg = ScenarioConfig(**{**SHARDED, "drops_enabled": True})
+    specs = [QuerySpec(tl="bfs"), QuerySpec(tl="wbfs")]
+    ref, _ = _run(cfg, specs, "interpreted")
+    got, scn = _run(cfg, specs, "megastep", mesh=_mesh(4))
+    assert scn.engine_used == "megastep-des"
+    assert scn.shard_fallback_reason == "mesh-unused"
+    assert got == ref
+
+
+def test_budget_counters_all_reduced_match_recount():
+    """The per-query sourced/positives books handed over by the on-device
+    psum must equal the interpreted registry's books exactly."""
+    cfg = ScenarioConfig(**SHARDED)
+    ref, ref_scn = _run(cfg, MIXED_SPECS, "interpreted")
+    got, scn = _run(cfg, MIXED_SPECS, "megastep", mesh=_mesh(8))
+    for qid in ref["per"]:
+        assert got["per"][qid]["sourced"] == ref["per"][qid]["sourced"]
+
+
+def test_budget_counters_survive_multiple_scan_chunks():
+    """Regression: at fps=1 a >256 s run spans several K=256-tick scan
+    chunks.  The budget counters are replicated carries, so the per-chunk
+    all-reduce must sum only each chunk's *local delta* — psum-ing the
+    running total re-counts every prior chunk once per shard and inflates
+    ``sourced``/``positives`` by ~D× (caught at the benchmark's full
+    scale; the 60 s gates above are single-chunk and never see it)."""
+    cfg = ScenarioConfig(**dict(SHARDED, duration_s=300.0))
+    solo, solo_scn = _run(cfg, MIXED_SPECS, "megastep")
+    assert solo_scn.engine_used == "megastep-device"
+    got, scn = _run(cfg, MIXED_SPECS, "megastep", mesh=_mesh(4))
+    assert scn.engine_used == "megastep-device"
+    assert scn.shard_fallback_reason == ""
+    assert got == solo
+
+
+# --------------------------------------------------------------------- #
+# Cross-device-count invariance (separate processes: the forced host     #
+# device count is baked in at jax backend init)                          #
+# --------------------------------------------------------------------- #
+DIGEST_SCRIPT = textwrap.dedent("""
+    import json, os, sys
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=" + sys.argv[1]
+    )
+    import jax
+    from repro.query import MultiQueryScenario, QuerySpec
+    from repro.serving import Journal
+    from repro.sim import ScenarioConfig
+
+    cfg = ScenarioConfig(num_cameras=60, duration_s=40.0, seed=0, tl="bfs",
+                         batching="dynamic", m_max=25, engine="megastep")
+    specs = [QuerySpec(tl="wbfs"), QuerySpec(tl="bfs", tl_peak_speed=6.0)]
+
+    scn = MultiQueryScenario(cfg, specs)
+    if len(jax.devices()) > 1:
+        from repro.distributed import camera_mesh
+        scn = MultiQueryScenario(cfg, specs, mesh=camera_mesh())
+    res = scn.run()
+    per = {qid: res.per_query_summary(qid) for qid in sorted(res.per_query)}
+
+    jcfg = ScenarioConfig(num_cameras=60, duration_s=40.0, seed=0, tl="bfs",
+                          batching="dynamic", m_max=25)
+    jscn = MultiQueryScenario(jcfg, specs, journal=Journal(10.0))
+    jscn.run()
+
+    print(json.dumps({
+        "devices": len(jax.devices()),
+        "engine": scn.engine_used,
+        "shards": scn.shards_used,
+        "per": per,
+        "journal": jscn.journal.digest(),
+    }, sort_keys=True))
+""")
+
+
+def test_seed0_summaries_and_journal_digest_device_count_invariant():
+    outs = {}
+    for n in (1, 2, 8):
+        env = {**os.environ, "PYTHONPATH": "src"}
+        env.pop("XLA_FLAGS", None)
+        r = subprocess.run(
+            [sys.executable, "-c", DIGEST_SCRIPT, str(n)],
+            capture_output=True, text=True, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs[n] = json.loads(r.stdout.strip().splitlines()[-1])
+    assert outs[1]["devices"] == 1 and outs[1]["shards"] == 1
+    assert outs[2]["devices"] == 2 and outs[2]["shards"] == 2
+    assert outs[8]["devices"] == 8 and outs[8]["shards"] == 8
+    for n in (1, 2, 8):
+        assert outs[n]["engine"] == "megastep-device"
+    # Per-query books and journal digests must not see the device count.
+    assert outs[1]["per"] == outs[2]["per"] == outs[8]["per"]
+    assert outs[1]["journal"] == outs[2]["journal"] == outs[8]["journal"]
+
+
+# --------------------------------------------------------------------- #
+# Property: shard count never changes the per-query reconciliation       #
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        shards=st.sampled_from([2, 4, 8]),
+        n_queries=st.integers(min_value=1, max_value=4),
+        duration=st.sampled_from([20.0, 35.0]),
+        tl=st.sampled_from(["bfs", "wbfs"]),
+    )
+    def test_shard_count_never_changes_reconciliation(
+        shards, n_queries, duration, tl
+    ):
+        """For every query: ``sourced == completed + dropped + orphans``
+        behaves identically whatever the shard count — the books balance
+        (or carry the same in-flight remainder) on 1 and on D shards."""
+        if len(jax.devices()) < shards:
+            pytest.skip(f"needs {shards} devices")
+        cfg = ScenarioConfig(num_cameras=60, duration_s=duration, seed=0,
+                             tl=tl, batching="dynamic", m_max=25)
+        specs = [
+            QuerySpec(tl=tl, tl_peak_speed=3.0 + (i % 3))
+            for i in range(n_queries)
+        ]
+
+        def books(mesh):
+            kw = {"mesh": mesh} if mesh is not None else {}
+            c = copy.deepcopy(cfg)
+            c.engine = "megastep"
+            scn = MultiQueryScenario(c, copy.deepcopy(specs), **kw)
+            res = scn.run()
+            assert scn.engine_used == "megastep-device"
+            out = {}
+            for qid in res.per_query:
+                qs = res.registry.get(qid)
+                out[qid] = (
+                    qs.sourced, qs.completed, qs.dropped,
+                    qs.orphan_completed, qs.orphan_dropped, qs.in_flight,
+                )
+            return out
+
+        solo = books(None)
+        sharded = books(_mesh(shards))
+        assert sharded == solo
+        for qid, (srcd, comp, drop, oc, od, in_flight) in sharded.items():
+            assert srcd == comp + drop + oc + od + in_flight

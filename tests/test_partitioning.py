@@ -1,9 +1,11 @@
 """Partitioning rules: divisibility safety + a real small-mesh lower/compile
 (8 emulated CPU devices in a subprocess so jax's device count is fresh)."""
 
+import contextlib
 import subprocess
 import sys
 import textwrap
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +34,46 @@ def test_resolve_drops_non_divisible_axes():
         axis_names = ("model",)
 
     rules = MeshRules(mesh=FakeMesh(), rules={"model": "model"})
-    assert rules.resolve(("model",), (25,)) == P(None)   # 25 heads: replicated
+    with pytest.warns(UserWarning, match="sharding dropped"):
+        assert rules.resolve(("model",), (25,)) == P(None)  # 25 heads: replicated
     assert rules.resolve(("model",), (32,)) == P("model")
+
+
+@contextlib.contextmanager
+def warnings_none():
+    """Assert the block emits no 'sharding dropped' warnings."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        yield
+    assert not [w for w in rec if "sharding dropped" in str(w.message)]
+
+
+def test_non_divisible_drop_is_reported_not_hidden():
+    """The silent-sharding bug: a 60-expert stack placed expert-parallel on a
+    16-wide axis used to replicate quietly (16x the expected memory).  The
+    drop must now bump ``sharding_drops`` and warn once, naming the param
+    path and the mesh axis."""
+    import jax.numpy as _jnp
+
+    class FakeMesh:
+        shape = {"model": 16}
+        axis_names = ("model",)
+
+    rules = MeshRules(mesh=FakeMesh(), rules={"model": "model", "expert": "model"})
+    params = {"experts": {"w_gate": jax.ShapeDtypeStruct((60, 8, 32), _jnp.float32)}}
+    with pytest.warns(UserWarning) as rec:
+        specs = param_specs(params, rules)
+    # (60, 8, 32) wanted ("expert", None, None): E=60 does not divide 16.
+    assert specs["experts"]["w_gate"] == P(None, None, None)
+    assert rules.sharding_drops == 1
+    assert rules.dropped == [("experts/w_gate", "model", 60)]
+    msgs = [str(w.message) for w in rec if "sharding dropped" in str(w.message)]
+    assert len(msgs) == 1
+    assert "experts/w_gate" in msgs[0] and "'model'" in msgs[0] and "60" in msgs[0]
+    # Second resolve of the same (path, axis): counted again, warned once.
+    with warnings_none():
+        param_specs(params, rules)
+    assert rules.sharding_drops == 2
 
 
 @pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-v2-lite-16b", "mamba2-1.3b", "hymba-1.5b"])
