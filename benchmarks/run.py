@@ -42,11 +42,11 @@ import glob
 import json
 import math
 import os
-import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.clock import monotonic
 from repro.sim import (
     BandwidthCollapse,
     ComputeSlowdown,
@@ -308,10 +308,10 @@ def _retime_queries(ctx, cases) -> Dict[str, Tuple[float, float, float]]:
         if name not in cases:
             continue
         for _ in range(2):
-            t0 = time.perf_counter()
+            t0 = monotonic()
             scenario = MultiQueryScenario(cfg, n)
             res = scenario.run()
-            wall = time.perf_counter() - t0
+            wall = monotonic() - t0
             events = max(res.result.source_events, 1)
             prev = out.get(name)
             if prev is None or wall < prev[1]:
@@ -359,10 +359,10 @@ def _retime_faults(ctx, cases) -> Dict[str, Tuple[float, float, float]]:
         cfg = _faults_cfg(cams, dur, crash_t0, outage_s, bkw)
         get_world(WorldKey.from_config(cfg))
         for _ in range(2 if ctx.smoke else 1):
-            t0 = time.perf_counter()
+            t0 = monotonic()
             scenario = MultiQueryScenario(cfg, 2, journal=Journal(period))
             res = scenario.run()
-            wall = time.perf_counter() - t0
+            wall = monotonic() - t0
             events = max(res.result.source_events, 1)
             prev = out.get(name)
             if prev is None or wall < prev[1]:
@@ -392,9 +392,12 @@ def compare_against(path: str, ctx) -> int:
     mode = _mode_label(ctx)
     records = data.get("records", [])
     for r in records:
-        # Baselines recorded before the run_s/xfer_s split: backfill the
-        # transfer column as null (unknown) rather than zero (measured).
+        # Baselines recorded before the run_s/xfer_s split (and before the
+        # observability columns): backfill as null (unknown) rather than
+        # zero (measured).
         r.setdefault("xfer_s", None)
+        r.setdefault("jit_compiles", None)
+        r.setdefault("metrics_overhead_s", None)
     failed = False
     compared_any = False
     print(f"{SEP}\n# Regression gate vs {path} (mode={mode}, tol={ctx.compare_tolerance:.0%})")
@@ -594,9 +597,9 @@ def bench_queries(ctx) -> None:
     for n in ns:
         fused_wall = math.inf
         for _ in range(reps):
-            t0 = time.perf_counter()
+            t0 = monotonic()
             res = MultiQueryScenario(cfg, n).run()
-            fused_wall = min(fused_wall, time.perf_counter() - t0)
+            fused_wall = min(fused_wall, monotonic() - t0)
         serial_wall = math.inf
         for _ in range(reps):
             serial_results, wall = run_queries_serial(cfg, n)
@@ -634,11 +637,11 @@ def bench_queries(ctx) -> None:
             batching="dynamic", m_max=25, drops_enabled=True,
             avoid_drop_positives=True, dynamism=spec,
         )
-        t0 = time.perf_counter()
+        t0 = monotonic()
         res = MultiQueryScenario(
             a_cfg, _admission_queries(a_cams, w0), admission=policy
         ).run()
-        wall = time.perf_counter() - t0
+        wall = monotonic() - t0
         s = res.summary()
         rec = res.result.trace.budget_recovery("VA", until=a_dur)
         derived = (
@@ -690,10 +693,10 @@ def _time_megastep_fused(cfg, specs_of, reps: int):
     m_cfg = copy.deepcopy(cfg)
     m_cfg.engine = "megastep"
     for _ in range(reps):
-        t0 = time.perf_counter()
+        t0 = monotonic()
         scn = MultiQueryScenario(m_cfg, specs_of())
         res = scn.run()
-        wall = time.perf_counter() - t0
+        wall = monotonic() - t0
         if wall < best[0]:
             best = (wall, scn.engine_xfer_s, scn.engine_used, res)
     return best
@@ -712,9 +715,9 @@ def bench_megastep(ctx) -> None:
         specs_of = lambda: _megastep_specs(n, cams)
         interp_wall = math.inf
         for _ in range(reps):
-            t0 = time.perf_counter()
+            t0 = monotonic()
             ref = MultiQueryScenario(cfg, specs_of()).run()
-            interp_wall = min(interp_wall, time.perf_counter() - t0)
+            interp_wall = min(interp_wall, monotonic() - t0)
         # The per-op column (kernel spotlight mode: one device ball
         # dispatch per TL tick) shows what per-op offload costs vs the
         # fused scan.  It only runs at the smallest N of the smoke shape:
@@ -724,9 +727,9 @@ def bench_megastep(ctx) -> None:
         # that barely varies with N.
         perop_wall = math.inf
         if ctx.smoke and n == ns[0]:
-            t0 = time.perf_counter()
+            t0 = monotonic()
             MultiQueryScenario(cfg, specs_of(), spotlight_mode="kernel").run()
-            perop_wall = time.perf_counter() - t0
+            perop_wall = monotonic() - t0
         # Two fused reps minimum: the first pays the one-off scan compile,
         # the steady-state rate is what the engine claims.
         wall, xfer, engine, res = _time_megastep_fused(
@@ -824,10 +827,10 @@ def _time_sharded(cfg, specs_of, reps: int, shards: int):
     m_cfg = copy.deepcopy(cfg)
     m_cfg.engine = "megastep"
     for _ in range(reps):
-        t0 = time.perf_counter()
+        t0 = monotonic()
         scn = MultiQueryScenario(m_cfg, specs_of(), mesh=mesh)
         res = scn.run()
-        wall = time.perf_counter() - t0
+        wall = monotonic() - t0
         if wall < best[0]:
             best = (wall, scn.engine_xfer_s, scn, res)
     return best
@@ -913,10 +916,10 @@ def bench_faults(ctx) -> None:
         get_world(WorldKey.from_config(cfg))  # warm: baselines are warm too
 
         # Reference: the uninterrupted journaled run (us_per_event basis).
-        t0 = time.perf_counter()
+        t0 = monotonic()
         ref = MultiQueryScenario(cfg, 2, journal=Journal(period))
         ref_res = ref.run()
-        wall = time.perf_counter() - t0
+        wall = monotonic() - t0
 
         # Kill the driver at t_kill; only its journal (WAL) survives.
         crashed = MultiQueryScenario(cfg, 2, journal=Journal(period))
@@ -926,10 +929,10 @@ def bench_faults(ctx) -> None:
 
         # Recovery = build a fresh scenario + replay to the last snapshot
         # (bit-verified against the WAL's frontier), then serve to the end.
-        t0 = time.perf_counter()
+        t0 = monotonic()
         recovered = MultiQueryScenario(cfg, 2, journal=Journal(period))
         recovered.restore(wal)
-        recovery_s = time.perf_counter() - t0
+        recovery_s = monotonic() - t0
         rec_res = recovered.run()
 
         bit_identical = (
@@ -969,9 +972,9 @@ def bench_scale_fig13(ctx) -> None:
         tl.track(f"entity{i}", camera_id=(i * 97) % net.num_vertices, timestamp=float(i))
     for label, use_kernel in (("python", False), ("kernel", True)):
         tl._entity_searches.clear()
-        t0 = time.perf_counter()
+        t0 = monotonic()
         active = tl.spotlight_multi(60.0, use_kernel=use_kernel)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (monotonic() - t0) * 1e6
         record("fig13", f"multi_entity_{label}", us / 8.0,
                f"entities=8;active={len(active)}", mode=_mode_label(ctx))
         print(f"multi_entity_{label},{us/8.0:.1f},entities=8;active={len(active)}")
@@ -995,10 +998,10 @@ def bench_kernels(ctx=None) -> None:
 
     def timeit(name, fn, *args, reps=5, derived=""):
         fn(*args)  # compile
-        t0 = time.perf_counter()
+        t0 = monotonic()
         for _ in range(reps):
             jax.block_until_ready(fn(*args))
-        us = (time.perf_counter() - t0) / reps * 1e6
+        us = (monotonic() - t0) / reps * 1e6
         record("kernels", name, us, derived)
         print(f"{name},{us:.1f},{derived}")
 
@@ -1087,10 +1090,10 @@ def bench_serving(ctx=None) -> None:
     for rate_hz in (50, 200, 1000):
         stage = ServedStage("CR", step, xi, gamma=0.5, m_max=64, buckets=(1, 4, 16, 64))
         n, done, dropped = 200, 0, 0
-        t0 = time.perf_counter()
+        t0 = monotonic()
         for i in range(n):
             target = t0 + i / rate_hz
-            while time.perf_counter() < target:
+            while monotonic() < target:
                 pass
             res = stage.submit(StageRequest(np.zeros(128, np.float32), source_time=target))
             for r in res or []:
@@ -1099,7 +1102,7 @@ def bench_serving(ctx=None) -> None:
         for r in stage.flush() or []:
             done += 0 if r.dropped else 1
             dropped += 1 if r.dropped else 0
-        wall = time.perf_counter() - t0
+        wall = monotonic() - t0
         sizes = stage.stats["executed"] / max(stage.stats["batches"], 1)
         record("serving", f"serving_rate{rate_hz}", wall / n * 1e6,
                f"done={done};dropped={dropped};mean_batch={sizes:.1f}")
@@ -1108,6 +1111,104 @@ def bench_serving(ctx=None) -> None:
             f"done={done};dropped={dropped};mean_batch={sizes:.1f};"
             f"throughput_hz={done/wall:.0f}"
         )
+
+
+# --------------------------------------------------------------------- #
+# Observability plane: exporter overhead, on vs off                       #
+# --------------------------------------------------------------------- #
+def _obs_shape(smoke: bool) -> Tuple[int, float]:
+    return (300, 60.0) if smoke else (1000, 300.0)
+
+
+def _obs_case(ctx, case: str) -> Tuple[float, float, float, float, int]:
+    """One obs-family measurement on a warm world.
+
+    Cases: ``export_off`` runs the bare pipeline; ``export_on`` adds metric
+    collection + Prometheus exposition after the run (the exporter price —
+    the hot loop is untouched); ``traced_on`` additionally installs the
+    sampled span tracer, which disables the bulk static-delivery fast path
+    so every hop is observed (the full-fidelity price).
+
+    Returns ``(us_per_event, run_s, build_s, overhead_s, jit_compiles)``
+    where ``overhead_s`` is the wall spent *outside* the run in collection
+    and export (0.0 when off) and ``jit_compiles`` is the kernel-plane
+    compile count consumed during the case."""
+    from repro.kernels import dispatch
+    from repro.obs import EventTracer, MetricsRegistry, prometheus_exposition
+    from repro.sim import TrackingScenario, WorldKey, get_world
+
+    cams, dur = _obs_shape(ctx.smoke)
+    tracer = EventTracer(stride=64) if case == "traced_on" else None
+    cfg = ScenarioConfig(num_cameras=cams, duration_s=dur, seed=0, tracer=tracer)
+    get_world(WorldKey.from_config(cfg))
+    compiles0 = sum(dispatch.profile()["compiles"].values())
+    t0 = monotonic()
+    scenario = TrackingScenario(cfg)
+    res = scenario.run()
+    run_s = monotonic() - t0
+    overhead_s = 0.0
+    if case != "export_off":
+        m0 = monotonic()
+        reg = MetricsRegistry()
+        scenario.publish_metrics(reg, res)
+        prometheus_exposition(reg)
+        overhead_s = monotonic() - m0
+    compiles = sum(dispatch.profile()["compiles"].values()) - compiles0
+    events = max(res.source_events, 1)
+    us = (run_s + overhead_s) * 1e6 / events
+    return us, run_s, scenario.build_seconds, overhead_s, compiles
+
+
+OBS_CASES = ("export_off", "export_on", "traced_on")
+
+
+def bench_obs(ctx) -> None:
+    """Exporter overhead: the pipeline workload with the obs plane off,
+    with metrics collection + exposition (exporters), and with the sampled
+    span tracer on top.  The on-case ``us_per_event`` includes collection/
+    export wall so the recorded ratio *is* the user-visible overhead."""
+    reps = 2
+    print(f"{SEP}\n# Observability overhead — obs plane off vs on (best of {reps})")
+    best: Dict[str, Tuple[float, float, float, float, int]] = {}
+    for case in OBS_CASES:
+        for _ in range(reps):
+            cur = _obs_case(ctx, case)
+            prev = best.get(case)
+            if prev is None or cur[0] < prev[0]:
+                best[case] = cur
+    off_us = best["export_off"][0]
+    cams, dur = _obs_shape(ctx.smoke)
+    for case in OBS_CASES:
+        us, run_s, build_s, overhead_s, compiles = best[case]
+        ratio = us / max(off_us, 1e-9)
+        derived = (
+            f"cams={cams};dur_s={dur:g};overhead_s={overhead_s:.4f};"
+            f"vs_off_x={ratio:.3f};build_s={build_s:.3f}"
+        )
+        record(
+            "obs", case, us, derived,
+            run_s=round(run_s, 4), build_s=round(build_s, 4),
+            mode=_mode_label(ctx),
+            jit_compiles=compiles,
+            metrics_overhead_s=overhead_s,
+        )
+        print(f"obs_{case},{us:.1f},{derived}")
+
+
+def _retime_obs(ctx, cases) -> Dict[str, Tuple[float, float, float]]:
+    out: Dict[str, Tuple[float, float, float]] = {}
+    for case in OBS_CASES:
+        if case not in cases:
+            continue
+        for _ in range(2):
+            us, run_s, build_s, _ovh, _jc = _obs_case(ctx, case)
+            prev = out.get(case)
+            if prev is None or us < prev[0]:
+                out[case] = (us, run_s, build_s)
+    return out
+
+
+COMPARABLE_FAMILIES["obs"] = _retime_obs
 
 
 BENCHES = {
@@ -1127,6 +1228,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "roofline": bench_roofline,
     "serving": bench_serving,
+    "obs": bench_obs,
 }
 
 
@@ -1171,12 +1273,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.compare is not None:
         status = compare_against(args.compare, args)
     if not compare_only:
-        t0 = time.time()
+        t0 = monotonic()
         for name, fn in BENCHES.items():
             if args.only and name != args.only:
                 continue
             fn(args)
-        print(f"{SEP}\nTotal benchmark wall time: {time.time()-t0:.1f}s")
+        print(f"{SEP}\nTotal benchmark wall time: {monotonic()-t0:.1f}s")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"harness": "benchmarks.run", "records": RECORDS}, f, indent=2)

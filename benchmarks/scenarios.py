@@ -22,17 +22,27 @@ def record(
     engines report compute and data movement separately.  Families that
     do no device transfer record ``None`` (JSON ``null``), and old
     baselines recorded before the column existed are backfilled with
-    ``None`` by the ``--compare`` loader."""
+    ``None`` by the ``--compare`` loader.
+
+    The same backfill contract covers the observability columns:
+    ``jit_compiles`` (device-dispatch compile count consumed during the
+    case, from the kernel-plane profile) and ``metrics_overhead_s`` (extra
+    wall spent collecting + exporting obs-plane metrics; ``None`` for
+    families that don't measure it)."""
     rec = {
         "bench": bench,
         "case": case,
         "us_per_event": round(float(us_per_event), 2),
         "derived": derived,
         "xfer_s": None,
+        "jit_compiles": None,
+        "metrics_overhead_s": None,
     }
     rec.update(extra)
     if rec["xfer_s"] is not None:
         rec["xfer_s"] = round(float(rec["xfer_s"]), 4)
+    if rec["metrics_overhead_s"] is not None:
+        rec["metrics_overhead_s"] = round(float(rec["metrics_overhead_s"]), 4)
     RECORDS.append(rec)
     return rec
 

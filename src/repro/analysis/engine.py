@@ -117,7 +117,7 @@ def _load_rule_modules() -> None:
     if _LOADED:
         return
     # Import for side effect: each module registers its rules.
-    from . import rules_det, rules_exc, rules_jax, rules_krn  # noqa: F401
+    from . import rules_det, rules_exc, rules_jax, rules_krn, rules_obs  # noqa: F401
 
     _LOADED = True
 

@@ -1,0 +1,101 @@
+"""OBS — observability-plane contract checks.
+
+The obs plane (``repro.obs``) promises that every metric the tree emits is
+*discoverable*: a static scan can enumerate the full metric catalog, with
+help text, without running anything.  That only holds if registrations are
+literal:
+
+* OBS001 — every ``.counter(...)`` / ``.gauge(...)`` / ``.histogram(...)``
+  registration call must pass a **string-literal** metric name matching
+  ``^repro_[a-z][a-z0-9_]*$`` and a **non-empty literal help string**
+  (second positional argument or ``help=``).  A computed name or missing
+  help text makes the metric invisible to static catalog tooling (and to
+  reviewers deciding which determinism domain it belongs in).
+
+``obs/metrics.py`` itself is exempt — it *defines* the registration
+surface; its ``counter``/``gauge``/``histogram`` are method definitions and
+internal plumbing, not emissions.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional
+
+from .engine import Finding, SourceModule, register
+
+#: Metric name contract — mirrors ``repro.obs.metrics._NAME_RE``.
+_NAME_RE = re.compile(r"^repro_[a-z][a-z0-9_]*$")
+
+#: Registry methods that mint a new metric family.
+_REGISTER_FNS = ("counter", "gauge", "histogram")
+
+#: The module that defines the registration surface (exempt).
+_EXEMPT_SUFFIX = "obs/metrics.py"
+
+
+def _str_literal(node: Optional[ast.AST]) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _help_arg(node: ast.Call) -> Optional[ast.AST]:
+    """The help-text argument: second positional, or ``help=`` keyword."""
+    for kw in node.keywords:
+        if kw.arg == "help":
+            return kw.value
+    if len(node.args) >= 2:
+        return node.args[1]
+    return None
+
+
+@register(
+    "OBS001",
+    "metric registration must use a literal repro_* name with help text",
+)
+def obs001(mod: SourceModule) -> Iterator[Finding]:
+    if mod.path.replace("\\", "/").endswith(_EXEMPT_SUFFIX):
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute) and fn.attr in _REGISTER_FNS):
+            continue
+        name_node = node.args[0] if node.args else None
+        for kw in node.keywords:
+            if kw.arg == "name":
+                name_node = kw.value
+        if name_node is None:
+            # No name argument at all — not a registration call shape we
+            # can audit; most likely an unrelated API (e.g. itertools-style
+            # ``.counter()``).  Zero-arg calls are ignored.
+            continue
+        name = _str_literal(name_node)
+        if name is None:
+            yield mod.finding(
+                "OBS001",
+                node,
+                f"metric name passed to .{fn.attr}() is not a string "
+                "literal: computed names are invisible to the static "
+                "metric catalog — register with a literal repro_* name",
+            )
+            continue
+        if not _NAME_RE.match(name):
+            yield mod.finding(
+                "OBS001",
+                node,
+                f"metric name {name!r} does not match "
+                "^repro_[a-z][a-z0-9_]*$ — all obs-plane metrics share the "
+                "repro_ namespace",
+            )
+        help_text = _str_literal(_help_arg(node))
+        if not help_text:
+            yield mod.finding(
+                "OBS001",
+                node,
+                f"metric {name!r} registered without literal help text: "
+                "pass a non-empty help string (second argument or help=)",
+            )

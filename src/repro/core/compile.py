@@ -404,6 +404,9 @@ class CompiledApp:
         # every task of the DAG — including FCs materialized after
         # install_drop_hook() was called (see make_fc).
         self._drop_hook: Optional[Callable[[Event, int, float], None]] = None
+        # Observability plane: one duck-typed span tracer shared by every
+        # task (incl. the sink and lazily-built FCs) — see install_tracer.
+        self._tracer = None
 
         self._build()
 
@@ -569,6 +572,7 @@ class CompiledApp:
         # reads: safe to fuse the execute+transmit hops (see pipeline.py).
         t.fuse_streaming = not self.deployment.drops_enabled and self._fuse_ok
         t.on_drop_hook = self._drop_hook
+        t.tracer = self._tracer
         self.fc_tasks[cam] = t
         sim.host_of[t.name] = f"edge{cam}"
         return t
@@ -637,6 +641,23 @@ class CompiledApp:
         self._drop_hook = hook
         for t in self.all_tasks():
             t.on_drop_hook = hook
+
+    # ------------------------------------------------------------------ #
+    # Observability plane: span tracing                                   #
+    # ------------------------------------------------------------------ #
+    def install_tracer(self, tracer) -> None:
+        """Install a duck-typed span tracer (``repro.obs.tracing.
+        EventTracer``-shaped) on every task of the DAG, the sink, and every
+        FC materialized later — same propagation contract as
+        ``install_drop_hook``.  Pass ``None`` to uninstall.  Tracing
+        samples on the tracer's id stride, so the per-event cost with a
+        tracer installed is one attribute test plus the sampled hook; with
+        ``None`` (the default) the hot path is unchanged."""
+        self._tracer = tracer
+        for t in self.all_tasks():
+            t.tracer = tracer
+        if self.sink is not None:
+            self.sink.tracer = tracer
 
     # ------------------------------------------------------------------ #
     # Telemetry (dynamism plane)                                          #

@@ -642,9 +642,15 @@ def _run_device(scn, plan: MegastepPlan, seed_applied: np.ndarray):
                 _sharded.last_collective_bytes_per_tick()
             )
             scn.shard_fallback_reason = ""
+            chunk_walls = _sharded.last_chunk_seconds()
+            scn.megastep_chunk_s = sum(chunk_walls)
+            scn.megastep_chunks = len(chunk_walls)
             return out
         scn.shard_fallback_reason = _sharded.last_error() or "unclassified"
     out = _ops.run_chain_device(plan, seed_applied)
     if out is not None:
         scn.engine_xfer_s = _ops.last_xfer_seconds()
+        chunk_walls = _ops.last_chunk_seconds()
+        scn.megastep_chunk_s = sum(chunk_walls)
+        scn.megastep_chunks = len(chunk_walls)
     return out

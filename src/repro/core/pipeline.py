@@ -204,6 +204,11 @@ class Task:
         # tagged on the event *before* the header is recycled.  None (the
         # default) costs a single attribute test on the drop cold path only.
         self.on_drop_hook: Optional[Callable[[Event, int, float], None]] = None
+        # Observability plane (repro.obs.tracing): duck-typed span tracer,
+        # installed via ``CompiledApp.install_tracer``.  None in every
+        # untraced run — arrivals pay a single attribute test, and the
+        # pipeline never imports repro.obs.
+        self.tracer = None
         self._xi1 = xi(1)
         self._busy_until = -math.inf
         self._drain_pending = False
@@ -254,6 +259,8 @@ class Task:
         now_local = self.sim.time + self.clock.skew
         self.stats.arrived += 1
         header = ev.header
+        if self.tracer is not None:
+            self.tracer.on_arrival(self, header, self.sim.time)
         if not self.drops_enabled and (
             self._streaming
             # Budget-less dynamic batching is the paper's bootstrap regime:
@@ -417,9 +424,15 @@ class Task:
 
     def _deliver_many(self, evs: List[Event]) -> None:
         """Arrival of a grouped same-destination transit (drops-off path)."""
-        if self._batcher_is_static and not self.drops_enabled and not self._streaming:
+        if (
+            self._batcher_is_static
+            and not self.drops_enabled
+            and not self._streaming
+            and self.tracer is None
+        ):
             # Bulk arrival: replicate per-event on_arrival + StaticBatcher
-            # offer without the per-event call overhead.
+            # offer without the per-event call overhead.  A tracer needs the
+            # per-event path so every hop is observed.
             now_local = self.sim.time + self.clock.skew
             self.stats.arrived += len(evs)
             batcher = self.batcher
@@ -701,6 +714,8 @@ class Task:
                 return
             fp.sends_blocked += 1
             fp.retries += 1
+            if self.tracer is not None:
+                self.tracer.on_retry(self, ev.header, now, attempt)
             sim.schedule(fp.retry_delay(attempt), self._send, dst, ev, attempt + 1)
             return
         delay = sim.transit_delay(self.node, dst.node, self.output_event_bytes)
@@ -732,6 +747,8 @@ class Task:
         hook = self.on_drop_hook
         if hook is not None:
             hook(ev, DP_FAULT, 0.0)
+        if self.tracer is not None:
+            self.tracer.on_drop(self, header, self.sim.time, DP_FAULT, 0.0)
         ev.header = None  # type: ignore[assignment]
         release_header(header)
 
@@ -748,6 +765,9 @@ class Task:
             # Fire while the event (and its header) is still intact; the
             # hook must not retain either — the header is recycled below.
             hook(ev, point, epsilon)
+        if self.tracer is not None:
+            # Drop causality as a span event (the span ends here).
+            self.tracer.on_drop(self, header, self.sim.time, point, epsilon)
         sig = RejectSignal(
             event_id=header.event_id,
             epsilon=max(epsilon, 0.0),
@@ -848,6 +868,11 @@ class SinkTask(Task):
                 self._send_accept(ev, epsilon=self.gamma - u)
             return
         self.latencies.append((now_local, u))
+        tr = self.tracer
+        if tr is not None:
+            # Terminal hop + span completion with the end-to-end latency.
+            tr.on_arrival(self, header, self.sim.time)
+            tr.on_sink(self, header, self.sim.time, u)
         if u <= self.gamma:
             self.on_time += 1
         else:

@@ -37,6 +37,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.clock import monotonic as _monotonic
+
 __all__ = [
     "BUCKET_MIN",
     "MAX_JIT_SHAPES",
@@ -46,6 +48,7 @@ __all__ = [
     "reid_match_multi",
     "stats",
     "reset_stats",
+    "profile",
     "jit_cache_sizes",
     "bound_jit_cache",
 ]
@@ -70,6 +73,13 @@ _STATS = {
 }
 _SHAPES: set = set()
 
+# Observability profile (repro.obs.collect_dispatch): per-kernel distinct
+# bucket-shape compiles and accumulated host wall inside the dispatch entry
+# points.  Wall-clock reads go through core.clock.monotonic (DET002-clean)
+# and never feed any scheduling decision — attribution only.
+_COMPILES: Dict[str, int] = {}
+_DISPATCH_WALL: Dict[str, float] = {}
+
 
 def bucket(n: int, minimum: int = BUCKET_MIN) -> int:
     """Smallest power-of-two >= ``n`` (and >= ``minimum``)."""
@@ -86,12 +96,30 @@ def reset_stats() -> None:
     for k in _STATS:
         _STATS[k] = 0
     _SHAPES.clear()
+    _COMPILES.clear()
+    _DISPATCH_WALL.clear()
+
+
+def profile() -> Dict[str, Dict[str, float]]:
+    """Kernel-plane profile: per-kernel distinct bucket-shape compile
+    counts (each new shape is one XLA compile of that kernel) and the
+    accumulated host wall spent inside the dispatch entry points."""
+    return {
+        "compiles": dict(_COMPILES),
+        "dispatch_wall_s": dict(_DISPATCH_WALL),
+    }
 
 
 def _note_shape(key: Tuple) -> None:
     if key not in _SHAPES:
         _SHAPES.add(key)
         _STATS["bucket_shapes"] += 1
+        name = str(key[0])
+        _COMPILES[name] = _COMPILES.get(name, 0) + 1
+
+
+def _note_wall(name: str, t0: float) -> None:
+    _DISPATCH_WALL[name] = _DISPATCH_WALL.get(name, 0.0) + (_monotonic() - t0)
 
 
 # Per-kernel LRU of live bucket shapes, bounding the jit caches.
@@ -272,6 +300,7 @@ def spotlight_ball(indptr, indices, weights, sources, radii, *, dtype=np.float32
     key = ("ball", int(W.shape[0]), qb, np.dtype(dtype).str, use_pallas)
     _note_shape(key)
     bound_jit_cache("ball", _BALL_PADDED, key)
+    t0 = _monotonic()
     out = _BALL_PADDED(
         W,
         jnp.asarray(src_pad),
@@ -279,6 +308,7 @@ def spotlight_ball(indptr, indices, weights, sources, radii, *, dtype=np.float32
         use_pallas=use_pallas,
         interpret=interpret,
     )
+    _note_wall("ball", t0)
     return out[:Q]
 
 
@@ -362,9 +392,11 @@ def reid_match(gallery, queries, *, threshold: float = 0.5):
     key = ("reid", nb, qb, D)
     _note_shape(key)
     bound_jit_cache("reid", _REID_PADDED, key)
+    t0 = _monotonic()
     scores, best, matched = _REID_PADDED(
         jnp.asarray(g_pad), q_dev, jnp.int32(Q), jnp.float32(threshold)
     )
+    _note_wall("reid", t0)
     return scores[:N], best[:N], matched[:N]
 
 
@@ -457,10 +489,12 @@ def reid_match_multi(gallery, queries, *, mask=None, threshold: float = 0.5):
     key = ("reid_multi", nb, qb, D)
     _note_shape(key)
     bound_jit_cache("reid_multi", _REID_MULTI_PADDED, key)
+    t0 = _monotonic()
     scores, matched = _REID_MULTI_PADDED(
         jnp.asarray(g_pad), q_dev, jnp.asarray(m_pad),
         jnp.float32(threshold),
     )
+    _note_wall("reid_multi", t0)
     return scores[:N, :Q], matched[:N, :Q]
 
 

@@ -34,7 +34,8 @@ import numpy as np
 from .. import dispatch
 from . import ref as _ref
 
-__all__ = ["run_chain_device", "last_xfer_seconds", "KMAX", "RING_CAP"]
+__all__ = ["run_chain_device", "last_xfer_seconds", "last_chunk_seconds",
+           "KMAX", "RING_CAP"]
 
 KMAX = 256        # ticks per dispatch (chunk) cap
 RING_CAP = 1 << 14  # in-flight detection records before host fallback
@@ -46,10 +47,21 @@ _CHUNK_FN = None
 # the separate ``xfer_s`` column so compute and transfer don't blur.
 _LAST_XFER_S = 0.0
 _LAST_DEVICE_ERROR = ""
+# Per-chunk host wall (dispatch + device compute + summary pull) of the most
+# recent run_chain_device call — the observability plane's mega-step profile
+# (repro.obs.collect_engine).  Attribution only, never a decision input.
+_CHUNK_WALL_S: list = []
 
 
 def last_xfer_seconds() -> float:
     return _LAST_XFER_S
+
+
+def last_chunk_seconds() -> list:
+    """Per-chunk wall times (seconds) of the most recent
+    :func:`run_chain_device` call, in chunk order; empty when the device
+    path was never tried or fell back before the scan."""
+    return list(_CHUNK_WALL_S)
 
 
 def last_device_error() -> str:
@@ -412,6 +424,7 @@ def run_chain_device(plan, seed_applied) -> Optional[_ref.ChainOutput]:
         return None
     _LAST_XFER_S = 0.0
     _LAST_DEVICE_ERROR = ""
+    del _CHUNK_WALL_S[:]
 
     try:
         with enable_x64():
@@ -477,7 +490,9 @@ def run_chain_device(plan, seed_applied) -> Optional[_ref.ChainOutput]:
                 dispatch._note_shape(key)
                 dispatch.bound_jit_cache("megastep", fn, key)
                 chunks = []
+                del _CHUNK_WALL_S[:]  # capacity retry: re-profile the scan
                 for ci in range(nchunk):
+                    c0 = time.perf_counter()
                     sl = slice(ci * K, (ci + 1) * K)
                     carry, ys = fn(
                         carry,
@@ -494,6 +509,7 @@ def run_chain_device(plan, seed_applied) -> Optional[_ref.ChainOutput]:
                     x0 = time.perf_counter()
                     chunks.append(jax.device_get(ys))
                     _LAST_XFER_S += time.perf_counter() - x0
+                    _CHUNK_WALL_S.append(time.perf_counter() - c0)
                 x0 = time.perf_counter()
                 of_slots = bool(jax.device_get(carry[-2]))
                 of_ring = bool(jax.device_get(carry[-1]))

@@ -43,6 +43,7 @@ from . import ref as _ref
 __all__ = [
     "run_chain_sharded",
     "last_xfer_seconds",
+    "last_chunk_seconds",
     "last_shards",
     "last_collective_bytes_per_tick",
 ]
@@ -53,10 +54,19 @@ _LAST_XFER_S = 0.0
 _LAST_SHARDS = 1
 _LAST_COLLECTIVE_BPT = 0.0
 _LAST_ERROR = ""
+# Per-chunk host wall of the most recent sharded scan (same contract as
+# ``ops._CHUNK_WALL_S``): observability attribution, never a decision input.
+_CHUNK_WALL_S: list = []
 
 
 def last_xfer_seconds() -> float:
     return _LAST_XFER_S
+
+
+def last_chunk_seconds() -> list:
+    """Per-chunk wall times (seconds) of the most recent sharded scan, in
+    chunk order; empty when the sharded path was never tried or fell back."""
+    return list(_CHUNK_WALL_S)
 
 
 def last_shards() -> int:
@@ -394,6 +404,7 @@ def run_chain_sharded(plan, seed_applied, rules) -> Optional[_ref.ChainOutput]:
     K = min(dispatch.bucket(T), _ops.KMAX)
     nchunk = (T + K - 1) // K
     _LAST_XFER_S = 0.0
+    del _CHUNK_WALL_S[:]
 
     try:
         with enable_x64():
@@ -451,7 +462,9 @@ def run_chain_sharded(plan, seed_applied, rules) -> Optional[_ref.ChainOutput]:
                 dispatch._note_shape(key)
                 dispatch.bound_jit_cache("megastep_sharded", fn, key)
                 chunks = []
+                del _CHUNK_WALL_S[:]  # capacity retry: re-profile the scan
                 for ci in range(nchunk):
+                    c0 = time.perf_counter()
                     sl = slice(ci * K, (ci + 1) * K)
                     carry, ys = fn(
                         carry,
@@ -466,6 +479,7 @@ def run_chain_sharded(plan, seed_applied, rules) -> Optional[_ref.ChainOutput]:
                     x0 = time.perf_counter()
                     chunks.append(jax.device_get(ys))
                     _LAST_XFER_S += time.perf_counter() - x0
+                    _CHUNK_WALL_S.append(time.perf_counter() - c0)
                 x0 = time.perf_counter()
                 of_slots = bool(jax.device_get(carry[15]))
                 of_ring = bool(jax.device_get(carry[16]))

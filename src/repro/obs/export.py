@@ -1,0 +1,93 @@
+"""Exporters: Prometheus text exposition and OTLP-shaped JSONL.
+
+The exposition is deterministic by construction — metric families in
+sorted-name order, series in sorted label-tuple order, float formatting
+via the shortest round-tripping decimal — so the SIM-domain exposition
+of a deterministic run is a bit-stable artifact that can be digest-gated
+(see ``MetricsRegistry.digest`` and tests/test_obs.py's golden).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, List, Optional, Tuple
+
+from repro.obs.metrics import SIM, MetricsRegistry, _fmt
+
+__all__ = [
+    "prometheus_exposition",
+    "exposition_digest",
+    "metrics_jsonl",
+    "spans_jsonl",
+    "write_text",
+]
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", r"\\").replace("\n", r"\n").replace('"', r'\"')
+
+
+def _labels_text(labels: Tuple[Tuple[str, str], ...]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{_escape(str(v))}"' for k, v in labels)
+    return "{" + inner + "}"
+
+
+def prometheus_exposition(registry: MetricsRegistry, include_wall: bool = True) -> str:
+    """Prometheus text exposition format 0.0.4 of the registry."""
+    lines: List[str] = []
+    domain = None if include_wall else SIM
+    for m in registry.collect(domain=domain):
+        lines.append(f"# HELP {m.name} {m.help}")
+        lines.append(f"# TYPE {m.name} {m.kind}")
+        for sample_name, labels, value in m.samples():
+            lines.append(f"{sample_name}{_labels_text(labels)} {_fmt(value)}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def exposition_digest(registry: MetricsRegistry) -> str:
+    """Digest of the SIM-domain exposition (wall-clock rows excluded)."""
+    return registry.digest()
+
+
+def metrics_jsonl(registry: MetricsRegistry, include_wall: bool = True) -> str:
+    """OTLP-shaped JSONL: one metric family per line, ``sort_keys`` so the
+    SIM subset is as bit-stable as the Prometheus exposition."""
+    lines = []
+    domain = None if include_wall else SIM
+    for m in registry.collect(domain=domain):
+        data_points = [
+            {
+                "attributes": {k: v for k, v in labels},
+                "name": sample_name,
+                "value": value,
+            }
+            for sample_name, labels, value in m.samples()
+        ]
+        row = {
+            "name": m.name,
+            "description": m.help,
+            "type": m.kind,
+            "domain": m.domain,
+            "data_points": data_points,
+        }
+        lines.append(json.dumps(row, sort_keys=True))
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def spans_jsonl(spans: Iterable) -> str:
+    """OTLP-shaped span export: one span per line, hops as child-span
+    entries and drop/retry annotations as span events."""
+    lines = []
+    for s in spans:
+        row = s.to_row() if hasattr(s, "to_row") else dict(s)
+        lines.append(json.dumps(row, sort_keys=True))
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def write_text(path: str, text: str) -> str:
+    """Write an export artifact; returns ``path`` for chaining."""
+    with open(path, "w") as f:
+        f.write(text)
+    return path

@@ -1,0 +1,285 @@
+"""Typed metrics registry with a hard sim-time / wall-clock split.
+
+Every signal the platform emits — pipeline counters, per-query ledgers,
+journal records, engine/shard attribution, kernel-plane profiling — is
+registered here as a Counter, Gauge or Histogram with a mandatory help
+string and a declared label set.  The registry enforces the one invariant
+the rest of the repo's determinism gates depend on:
+
+* ``SIM``-domain metrics are derived **purely from event/sim state**.
+  Their values (and the Prometheus exposition built from them) must be
+  bit-identical across an uninterrupted run, a journal restore-replay,
+  and every camera-mesh width.  Digests cover the SIM domain only.
+* ``WALL``-domain metrics may read host time — exclusively through
+  ``repro.core.clock.monotonic()`` (DET002-clean) — or other
+  machine-varying state (engine choice, shard count, jit cache sizes).
+  They are exported alongside the SIM metrics but never digested.
+
+Metric names must match ``repro_[a-z][a-z0-9_]*`` (analyzer rule OBS001
+statically checks every registration site carries a literal, conforming
+name and a non-empty help string).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "SIM",
+    "WALL",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Metric",
+    "MetricsRegistry",
+    "DEFAULT_BUCKETS",
+]
+
+#: Determinism domains (see module docstring).
+SIM = "sim"
+WALL = "wall"
+
+_NAME_RE = re.compile(r"^repro_[a-z][a-z0-9_]*$")
+_LABEL_RE = re.compile(r"^[a-z_][a-z0-9_]*$")
+
+#: Latency-shaped default buckets (seconds): spans the IPC floor (~50 us)
+#: through the multi-second delayed-frame tail.
+DEFAULT_BUCKETS = (
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+)
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample-value formatting, bit-stable for digesting.
+
+    ``repr`` of a Python float is the shortest round-tripping decimal —
+    deterministic across runs and platforms for identical bit patterns.
+    Integral values render without the trailing ``.0`` (matching common
+    exposition style and keeping counter lines clean)."""
+    if v != v:  # NaN
+        return "NaN"
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+class Metric:
+    """Base: a named family of label-addressed series."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str, labels: Sequence[str], domain: str):
+        if not _NAME_RE.match(name):
+            raise ValueError(
+                f"metric name {name!r} must match {_NAME_RE.pattern}"
+            )
+        if not help or not str(help).strip():
+            raise ValueError(f"metric {name!r} requires non-empty help text")
+        if domain not in (SIM, WALL):
+            raise ValueError(f"metric {name!r}: unknown domain {domain!r}")
+        for lab in labels:
+            if not _LABEL_RE.match(lab):
+                raise ValueError(f"metric {name!r}: bad label name {lab!r}")
+        self.name = name
+        self.help = str(help).strip()
+        self.label_names: Tuple[str, ...] = tuple(labels)
+        self.domain = domain
+        # label-value tuple -> scalar (Counter/Gauge) or histogram state.
+        self._series: Dict[Tuple[str, ...], float] = {}
+
+    # ------------------------------------------------------------------ #
+    def _key(self, labels: Dict[str, object]) -> Tuple[str, ...]:
+        if set(labels) != set(self.label_names):
+            raise ValueError(
+                f"metric {self.name!r} expects labels {self.label_names}, "
+                f"got {tuple(sorted(labels))}"
+            )
+        return tuple(str(labels[k]) for k in self.label_names)
+
+    def signature(self) -> Tuple[str, str, Tuple[str, ...], str]:
+        return (self.kind, self.help, self.label_names, self.domain)
+
+    def samples(self) -> List[Tuple[str, Tuple[Tuple[str, str], ...], float]]:
+        """(suffix-qualified name, ((label, value), ...), value) rows in
+        deterministic (sorted label-tuple) order."""
+        out = []
+        for key in sorted(self._series):
+            out.append((self.name, tuple(zip(self.label_names, key)), self._series[key]))
+        return out
+
+    def clear(self) -> None:
+        self._series.clear()
+
+
+class Counter(Metric):
+    """Monotone cumulative count."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels: object) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name!r}: negative increment {amount}")
+        key = self._key(labels)
+        self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labels: object) -> float:
+        return self._series.get(self._key(labels), 0.0)
+
+
+class Gauge(Metric):
+    """Point-in-time value (set wins; inc/dec supported)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels: object) -> None:
+        self._series[self._key(labels)] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels: object) -> None:
+        key = self._key(labels)
+        self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labels: object) -> float:
+        return self._series.get(self._key(labels), 0.0)
+
+
+class Histogram(Metric):
+    """Cumulative-bucket histogram (Prometheus semantics)."""
+
+    kind = "histogram"
+
+    def __init__(self, name, help, labels, domain, buckets=DEFAULT_BUCKETS):
+        super().__init__(name, help, labels, domain)
+        bks = tuple(float(b) for b in buckets)
+        if list(bks) != sorted(bks) or len(set(bks)) != len(bks):
+            raise ValueError(f"histogram {name!r}: buckets must be sorted unique")
+        self.buckets = bks
+        # label tuple -> [per-bucket counts..., +Inf count]; sum/count kept
+        # in parallel dicts so `samples` can emit the full exposition.
+        self._counts: Dict[Tuple[str, ...], List[int]] = {}
+        self._sums: Dict[Tuple[str, ...], float] = {}
+
+    def observe(self, value: float, **labels: object) -> None:
+        key = self._key(labels)
+        counts = self._counts.get(key)
+        if counts is None:
+            counts = self._counts[key] = [0] * (len(self.buckets) + 1)
+            self._sums[key] = 0.0
+        # First bucket whose upper bound admits the value (+Inf fallback).
+        idx = len(self.buckets)
+        for i, ub in enumerate(self.buckets):
+            if value <= ub:
+                idx = i
+                break
+        counts[idx] += 1
+        self._sums[key] += float(value)
+
+    def count(self, **labels: object) -> int:
+        counts = self._counts.get(self._key(labels))
+        return sum(counts) if counts else 0
+
+    def samples(self):
+        out = []
+        for key in sorted(self._counts):
+            counts = self._counts[key]
+            base = tuple(zip(self.label_names, key))
+            cum = 0
+            for ub, c in zip(self.buckets, counts):
+                cum += c
+                out.append((f"{self.name}_bucket", base + (("le", _fmt(ub)),), float(cum)))
+            cum += counts[-1]
+            out.append((f"{self.name}_bucket", base + (("le", "+Inf"),), float(cum)))
+            out.append((f"{self.name}_sum", base, self._sums[key]))
+            out.append((f"{self.name}_count", base, float(cum)))
+        return out
+
+    def clear(self) -> None:
+        self._counts.clear()
+        self._sums.clear()
+
+
+class MetricsRegistry:
+    """Registration + collection surface.
+
+    Re-registering a name with an identical signature returns the
+    existing metric (collectors can run repeatedly against one registry);
+    a signature mismatch is a hard error — two meanings for one name is
+    exactly the ambiguity the registry exists to prevent."""
+
+    def __init__(self) -> None:
+        self._metrics: Dict[str, Metric] = {}
+
+    # ------------------------------------------------------------------ #
+    def _register(self, cls, name, help, labels, domain, **kw) -> Metric:
+        existing = self._metrics.get(name)
+        if existing is not None:
+            fresh = cls(name, help, labels, domain, **kw)
+            if existing.signature() != fresh.signature():
+                raise ValueError(
+                    f"metric {name!r} re-registered with a different "
+                    f"signature: {existing.signature()} != {fresh.signature()}"
+                )
+            return existing
+        m = cls(name, help, labels, domain, **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str, labels: Sequence[str] = (),
+                domain: str = SIM) -> Counter:
+        return self._register(Counter, name, help, labels, domain)
+
+    def gauge(self, name: str, help: str, labels: Sequence[str] = (),
+              domain: str = SIM) -> Gauge:
+        return self._register(Gauge, name, help, labels, domain)
+
+    def histogram(self, name: str, help: str, labels: Sequence[str] = (),
+                  domain: str = SIM,
+                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
+        return self._register(Histogram, name, help, labels, domain,
+                              buckets=buckets)
+
+    # ------------------------------------------------------------------ #
+    def get(self, name: str) -> Optional[Metric]:
+        return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def collect(self, domain: Optional[str] = None) -> Iterable[Metric]:
+        """Metrics in sorted-name order, optionally filtered by domain."""
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if domain is None or m.domain == domain:
+                yield m
+
+    def clear_values(self) -> None:
+        """Reset every series, keeping registrations (help text, labels)."""
+        for m in self._metrics.values():
+            m.clear()
+
+    # ------------------------------------------------------------------ #
+    # Exposition + digest (delegates to repro.obs.export for the format)  #
+    # ------------------------------------------------------------------ #
+    def exposition(self, include_wall: bool = True) -> str:
+        from repro.obs.export import prometheus_exposition
+
+        return prometheus_exposition(self, include_wall=include_wall)
+
+    def digest(self) -> str:
+        """sha256 over the SIM-domain exposition only: the bit-identity
+        contract explicitly excludes wall-clock/engine-attribution rows."""
+        text = self.exposition(include_wall=False)
+        return hashlib.sha256(text.encode()).hexdigest()
+
+
+#: Process-default registry for callers that don't thread their own.
+#: Determinism tests construct private registries instead — cumulative
+#: counters on a shared default would double across in-process runs.
+REGISTRY = MetricsRegistry()

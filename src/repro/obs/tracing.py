@@ -1,0 +1,208 @@
+"""Event-flow span tracing for the compiled pipeline.
+
+A sampled event gets one :class:`Span` covering its full causal path
+(source FC → VA → CR → UV sink), with per-hop transit attribution
+(IPC: same host, MAN: an edge host on either end, LAN: node-to-node),
+fault-plane retry annotations, and drop causality (dp1/dp2/dp3 and
+DP_FAULT) recorded as span events.
+
+The tracer is duck-typed from ``core/pipeline.py``'s point of view: tasks
+hold ``self.tracer = None`` and pay a single attribute test per arrival —
+the hot path is unchanged when tracing is off, and never imports this
+module.  Sampling is id-strided (every ``stride``-th event relative to
+the first id the tracer sees), so the span set for a deterministic run
+is itself deterministic: event ids are assigned in event order, and the
+lazily-captured base id makes spans independent of how many events other
+in-process runs consumed from the process-global id counter.
+
+Known limitation: fully fused FC hops (``CompiledApp.fuse_fc``) bypass
+the FC Task objects entirely, so those spans begin at the VA hop.
+Installing a tracer via ``CompiledApp.install_tracer`` also disables the
+bulk same-destination delivery fast path so every arrival is observed.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+__all__ = ["Span", "EventTracer", "transit_class"]
+
+
+def transit_class(src_host: str, dst_host: str) -> str:
+    """Transit attribution, mirroring the simulator's latency classes:
+    same host → IPC; an edge host on either end → MAN; else LAN."""
+    if src_host == dst_host:
+        return "ipc"
+    if src_host.startswith("edge") or dst_host.startswith("edge"):
+        return "man"
+    return "lan"
+
+
+class Span:
+    """One sampled event's causal trace."""
+
+    __slots__ = ("event_id", "is_probe", "hops", "events", "status", "latency")
+
+    def __init__(self, event_id: int, is_probe: bool) -> None:
+        self.event_id = event_id
+        self.is_probe = is_probe
+        #: [{"task", "module", "host", "t", "transit"}, ...] in hop order.
+        self.hops: List[Dict[str, object]] = []
+        #: [{"kind": "drop"|"retry", ...}, ...] in sim-time order.
+        self.events: List[Dict[str, object]] = []
+        self.status = "in_flight"
+        self.latency: Optional[float] = None
+
+    def to_row(self) -> Dict[str, object]:
+        """Plain-dict row for JSONL export (OTLP-shaped, see export.py)."""
+        return {
+            "event_id": self.event_id,
+            "is_probe": self.is_probe,
+            "status": self.status,
+            "latency_s": self.latency,
+            "hops": list(self.hops),
+            "events": list(self.events),
+        }
+
+
+class EventTracer:
+    """Collects :class:`Span`s from the pipeline's tracer hooks.
+
+    ``stride`` samples every N-th event id; ``max_spans`` bounds memory —
+    once the finished list is full no new spans start (counted in
+    ``spans_overflowed``, never silently)."""
+
+    def __init__(self, stride: int = 16, max_spans: int = 1024) -> None:
+        if stride < 1:
+            raise ValueError("stride must be >= 1")
+        self.stride = int(stride)
+        self.max_spans = int(max_spans)
+        self._base_id: Optional[int] = None
+        self._active: Dict[int, Span] = {}
+        self.finished: List[Span] = []
+        self.spans_started = 0
+        self.spans_overflowed = 0
+        self.retries_seen = 0
+        self.drops_seen = 0
+
+    # ------------------------------------------------------------------ #
+    def _sampled(self, event_id: int) -> bool:
+        if self._base_id is None:
+            self._base_id = event_id
+        return (event_id - self._base_id) % self.stride == 0
+
+    def _finish(self, span: Span, status: str) -> None:
+        span.status = status
+        self._active.pop(span.event_id, None)
+        self.finished.append(span)
+
+    # ------------------------------------------------------------------ #
+    # Hooks (called from core/pipeline.py via the duck-typed contract)    #
+    # ------------------------------------------------------------------ #
+    def on_arrival(self, task, header, t: float) -> None:
+        eid = header.event_id
+        span = self._active.get(eid)
+        if span is None:
+            if not self._sampled(eid):
+                return
+            if len(self.finished) + len(self._active) >= self.max_spans:
+                self.spans_overflowed += 1
+                return
+            span = Span(eid, bool(header.is_probe))
+            self._active[eid] = span
+            self.spans_started += 1
+        host = task.node
+        prev = span.hops[-1] if span.hops else None
+        transit = transit_class(str(prev["host"]), host) if prev else "source"
+        span.hops.append(
+            {
+                "task": task.name,
+                "module": task.module or task.name,
+                "host": host,
+                "t": t,
+                "transit": transit,
+            }
+        )
+
+    def on_drop(self, task, header, t: float, point: int, epsilon: float) -> None:
+        span = self._active.get(header.event_id)
+        if span is None:
+            return
+        self.drops_seen += 1
+        span.events.append(
+            {
+                "kind": "drop",
+                "task": task.name,
+                "t": t,
+                "point": int(point),
+                "epsilon": float(epsilon),
+            }
+        )
+        self._finish(span, "dropped")
+
+    def on_retry(self, task, header, t: float, attempt: int) -> None:
+        span = self._active.get(header.event_id)
+        if span is None:
+            return
+        self.retries_seen += 1
+        span.events.append(
+            {"kind": "retry", "task": task.name, "t": t, "attempt": int(attempt)}
+        )
+
+    def on_sink(self, task, header, t: float, latency: float) -> None:
+        span = self._active.get(header.event_id)
+        if span is None:
+            return
+        span.latency = float(latency)
+        self._finish(span, "completed")
+
+    # ------------------------------------------------------------------ #
+    def all_spans(self) -> List[Span]:
+        """Finished spans plus still-open ones, in start order."""
+        return self.finished + list(self._active.values())
+
+    def to_rows(self) -> List[Dict[str, object]]:
+        """Span rows with event ids made *relative* to the tracer's base:
+        absolute ids come from a process-global counter, so two otherwise
+        bit-identical in-process runs would disagree on them.  Relative
+        rows are deterministic per (config, seed) — exportable and
+        comparable like the SIM metrics."""
+        base = self._base_id or 0
+        rows = []
+        for s in self.all_spans():
+            row = s.to_row()
+            row["event_id"] = int(row["event_id"]) - base
+            rows.append(row)
+        return rows
+
+    def publish_metrics(self, registry) -> None:
+        """Register + set the tracer's own SIM-domain signal counters."""
+        spans = registry.counter(
+            "repro_trace_spans_total",
+            "Spans recorded by the event tracer, by terminal status.",
+            labels=("status",),
+        )
+        for status in ("completed", "dropped", "in_flight"):
+            n = sum(1 for s in self.all_spans() if s.status == status)
+            if n:
+                spans.inc(n, status=status)
+        hops = registry.counter(
+            "repro_trace_hops_total",
+            "Span hops by transit class (ipc/lan/man/source).",
+            labels=("transit",),
+        )
+        for s in self.all_spans():
+            for h in s.hops:
+                hops.inc(transit=h["transit"])
+        retries = registry.counter(
+            "repro_trace_retries_total",
+            "Fault-plane retry annotations recorded on sampled spans.",
+        )
+        if self.retries_seen:
+            retries.inc(self.retries_seen)
+        overflowed = registry.counter(
+            "repro_trace_spans_overflowed_total",
+            "Sampled events not traced because max_spans was reached.",
+        )
+        if self.spans_overflowed:
+            overflowed.inc(self.spans_overflowed)

@@ -790,6 +790,19 @@ class MultiQueryScenario(TrackingScenario):
             states={qid: st.state for qid, st in sorted(self.registry.states.items())},
         )
 
+    def publish_metrics(  # type: ignore[override]
+        self, registry, res: MultiQueryResult
+    ) -> None:
+        """Publish global + per-query telemetry into an obs-plane registry.
+
+        Thin delegation to :func:`repro.obs.collect_query_result` (lazy
+        import so the query layer never depends on the obs package at
+        module load).
+        """
+        from repro.obs import collect_query_result
+
+        collect_query_result(registry, self, res)
+
 
 # --------------------------------------------------------------------- #
 # Per-query-serial baseline                                              #

@@ -221,6 +221,17 @@ class ServedStage:
             row[fld] = s[attr]
         return row
 
+    def publish_metrics(self, registry) -> None:
+        """Publish stage counters + telemetry rows (stage-wide and per
+        query) into an obs-plane metrics registry.  Thin delegation to
+        :func:`repro.obs.collect_stage` (lazy import so the serving layer
+        never depends on the obs package at module load).  Serving-plane
+        numbers depend on wall-clock arrival timing, so everything lands in
+        the WALL domain and is excluded from determinism digests."""
+        from repro.obs import collect_stage
+
+        collect_stage(registry, self)
+
     # -- Multi-query tenancy -------------------------------------------- #
     def query_ids(self) -> List[int]:
         """Query ids this stage has seen (sorted)."""

@@ -212,6 +212,11 @@ class ScenarioConfig:
     # and must be bit-identical.  Ineligible configs (faults, dynamism,
     # non-static xi, ...) silently fall back to the interpreted pipeline.
     engine: str = "interpreted"
+    # Observability plane (repro.obs): optional span tracer installed on the
+    # compiled pipeline (EventTracer duck type — on_arrival/on_drop/on_retry/
+    # on_sink hooks).  Excluded from repr/compare so WorldKey hashing and
+    # config equality (goldens, journal identity) are unaffected.
+    tracer: Optional[Any] = field(default=None, repr=False, compare=False)
 
     # ------------------------------------------------------------------ #
     # App-compiler factories: the config is a preset-app description      #
@@ -490,6 +495,12 @@ class TrackingScenario:
             sink_recycle_headers=True,
         )
         self.sink = self.compiled.sink
+        #: Observability plane: install the span tracer (if any) on every
+        #: task of the compiled app.  Installing disables the bulk static
+        #: delivery fast path so each hop is observed individually.
+        self.tracer = config.tracer
+        if self.tracer is not None:
+            self.compiled.install_tracer(self.tracer)
         self._seed_tl()
 
         #: Simulation horizon: generation stops at duration_s; in-flight
@@ -847,3 +858,13 @@ class TrackingScenario:
             trace=self._trace,
             quality=quality,
         )
+
+    def publish_metrics(self, registry, res: ScenarioResult) -> None:
+        """Publish this run's telemetry into an obs-plane metrics registry.
+
+        Thin delegation to :func:`repro.obs.collect_scenario` (lazy import so
+        the sim layer never depends on the obs package at module load).
+        """
+        from repro.obs import collect_scenario
+
+        collect_scenario(registry, self, res)

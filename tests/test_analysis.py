@@ -351,6 +351,41 @@ def test_exc001_quiet_on_narrow_recorded_or_reraised():
 
 
 # --------------------------------------------------------------------- #
+# OBS001 — metric registrations must be literal repro_* names with help   #
+# --------------------------------------------------------------------- #
+OBS001_POS = """\
+def publish(registry, name):
+    registry.counter(name, "computed name: invisible to the catalog")
+    registry.gauge("bad-name!", "name outside the repro_ namespace")
+    registry.histogram("repro_latency_seconds")
+"""
+
+OBS001_NEG = """\
+def publish(registry):
+    c = registry.counter(
+        "repro_events_total", "Events by task.", labels=("task",)
+    )
+    c.inc(3, task="VA")
+    registry.gauge("repro_queue_depth", help="Current queue depth.")
+    registry.histogram("repro_latency_seconds", "End-to-end latency.")
+"""
+
+
+def test_obs001_fires_on_unauditable_registrations():
+    assert rules_of(OBS001_POS) == ["OBS001"]
+    # computed name; bad name; missing help — one finding each.
+    assert len(lines_of(OBS001_POS, "OBS001")) == 3
+
+
+def test_obs001_quiet_on_literal_registrations():
+    assert rules_of(OBS001_NEG) == []
+
+
+def test_obs001_exempts_the_metrics_module_itself():
+    assert rules_of(OBS001_POS, path="obs/metrics.py") == []
+
+
+# --------------------------------------------------------------------- #
 # Suppressions                                                           #
 # --------------------------------------------------------------------- #
 def test_noqa_same_line_suppresses():

@@ -155,6 +155,45 @@ class TestServedStage:
         assert stage2.telemetry(3)["dp1"] == 1
         assert stage2.telemetry(4)["dp1"] == 0
 
+    def test_publish_metrics_bridges_telemetry_rows(self):
+        """The obs bridge re-emits stage-wide and per-query telemetry rows
+        as registered WALL-domain metrics: every TRACE_FIELDS column lands
+        either in the gauge (beta/queue) or the counter (the rest), values
+        match ``telemetry()`` exactly, and nothing serving-side leaks into
+        the SIM determinism digest."""
+        from repro.obs import SIM, MetricsRegistry
+        from repro.sim.dynamism import TRACE_FIELDS
+
+        stage = self.make_stage(drops=False)
+        for qid in (7, 7, 9, None):
+            stage.submit(
+                StageRequest(
+                    np.zeros(64, np.float32),
+                    source_time=stage.clock(),
+                    query_id=qid,
+                )
+            )
+        stage.flush()
+        reg = MetricsRegistry()
+        stage.publish_metrics(reg)
+        row = stage.telemetry()
+        sev = reg.get("repro_stage_events_total")
+        sgauge = reg.get("repro_stage_row")
+        for fld in TRACE_FIELDS:
+            if fld in ("beta", "queue"):
+                assert sgauge.value(stage="CR", field=fld) == row[fld]
+            elif row[fld]:
+                assert sev.value(stage="CR", kind=fld) == row[fld]
+        q7 = stage.telemetry(query_id=7)
+        qev = reg.get("repro_stage_query_events_total")
+        assert qev.value(stage="CR", query="7", kind="executed") == q7["executed"]
+        assert reg.get("repro_stage_query_row").value(
+            stage="CR", query="9", field="beta"
+        ) == stage.telemetry(query_id=9)["beta"]
+        # Serving metrics are wall-domain: the SIM digest must not see them.
+        assert not any(m.domain == SIM for m in reg.collect())
+        assert "repro_stage" not in reg.exposition(include_wall=False)
+
     def test_query_major_bucket_padding(self):
         """set_queries pads the live-query block to a power-of-two bucket
         and the step runs query-major: one device call serves every query,
